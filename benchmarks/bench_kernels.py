@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: Pallas (interpret) validation + the jnp
+reference wall-clock (the CPU numbers sanity-check the harness; TPU
+numbers come from running the same entry points on device)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, wall_time
+from repro.kernels.aopt_gains.ref import aopt_gains_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.logistic_gains.ref import logistic_gains_ref
+from repro.kernels.marginal_gains.ref import regression_gains_ref
+
+RNG = np.random.default_rng(0)
+
+
+def run():
+    # marginal gains — the DASH per-round oracle
+    d, n, k = 512, 2048, 64
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    Q, _ = jnp.linalg.qr(jnp.asarray(RNG.normal(size=(d, k)), jnp.float32))
+    r = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    csq = jnp.sum(X * X, axis=0)
+    f = jax.jit(lambda: regression_gains_ref(X, Q, r, csq))
+    t, _ = wall_time(f)
+    flops = 2 * d * n * (k + 1)
+    emit("kernel/marginal_gains_ref", t * 1e6,
+         f"d={d};n={n};k={k};gflops={flops / t / 1e9:.1f}")
+
+    # A-opt gains
+    W = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    f = jax.jit(lambda: aopt_gains_ref(X, W, 1.0))
+    t, _ = wall_time(f)
+    emit("kernel/aopt_gains_ref", t * 1e6, f"d={d};n={n}")
+
+    # logistic gains (3-step Newton)
+    y = jnp.asarray((RNG.uniform(size=d) > 0.5).astype(np.float32))
+    eta = jnp.zeros((d,), jnp.float32)
+    f = jax.jit(lambda: logistic_gains_ref(X, y, eta, steps=3))
+    t, _ = wall_time(f)
+    emit("kernel/logistic_gains_ref", t * 1e6, f"d={d};n={n};steps=3")
+
+    # flash attention
+    b, s, h, hkv, dh = 1, 1024, 8, 2, 64
+    q = jnp.asarray(RNG.normal(size=(b, s, h, dh)), jnp.bfloat16)
+    kk = jnp.asarray(RNG.normal(size=(b, s, hkv, dh)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, dh)), jnp.bfloat16)
+    f = jax.jit(lambda: flash_attention_ref(q, kk, v, causal=True))
+    t, _ = wall_time(f)
+    aflops = 4 * b * s * s * h * dh / 2   # causal halves the work
+    emit("kernel/flash_attention_ref", t * 1e6,
+         f"s={s};h={h};gflops={aflops / t / 1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

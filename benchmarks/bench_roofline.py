@@ -1,0 +1,174 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun.json (written by ``python -m repro.launch.dryrun``)
+and derives, per (arch × shape × mesh):
+
+    compute    = flops / PEAK_FLOPS
+    memory     = bytes / HBM_BW            (two estimators, see below)
+    collective = coll_bytes / ICI_BW       (ring-adjusted all-reduce)
+
+plus MODEL_FLOPS (6·N·D for train; 2·N_active per token for decode) and
+the useful-compute ratio MODEL_FLOPS / (chips·HLO_FLOPs).
+
+Memory estimators (utils/hlo.py): ``bytes`` counts every top-level HLO
+op's operands+outputs (CPU-fusion-pessimistic upper bound); ``dot_bytes``
+counts GEMM traffic only (TPU-fused floor).  The table reports the
+geometric mean of the two as the headline memory term and both extremes.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+from benchmarks.common import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.configs.registry import get_config, get_shape
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def _param_count(cfg):
+    """Total and active parameter counts (matmul params)."""
+    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.padded_vocab
+    a = cfg.attn
+    attn = d * (a.n_heads + 2 * a.n_kv_heads) * a.head_dim \
+        + a.n_heads * a.head_dim * d
+    total = v * d * (1 if cfg.tie_embeddings else 2)
+    active = total
+    per_layer_dense = 0.0
+    counts = {"attn": 0.0, "mlp": 0.0, "moe_active": 0.0, "moe_total": 0.0,
+              "rnn": 0.0}
+    for kind in cfg.block_pattern:
+        reps = L / cfg.pattern_period
+        if kind in ("attn", "local_attn"):
+            counts["attn"] += attn * reps
+            if cfg.moe:
+                e = cfg.moe.n_experts
+                nmat = 3 if cfg.moe.gated else 2
+                counts["moe_total"] += reps * e * nmat * d * f
+                counts["moe_active"] += reps * cfg.moe.top_k * nmat * d * f
+            elif f:
+                counts["mlp"] += reps * (3 if cfg.gated_mlp else 2) * d * f
+        elif kind == "rglru":
+            w = cfg.recurrent.width
+            counts["rnn"] += reps * (2 * d * w + 2 * w * w + w * d)
+            if f:
+                counts["mlp"] += reps * (3 if cfg.gated_mlp else 2) * d * f
+        elif kind in ("mlstm", "slstm"):
+            x = cfg.xlstm
+            inner = x.n_heads * x.head_dim
+            counts["rnn"] += reps * (d * (d + inner) + inner * d
+                                     + (3 * d * inner if kind == "mlstm"
+                                        else 4 * d * inner))
+    if cfg.encoder:
+        counts["attn"] += cfg.encoder.n_layers * attn
+        counts["mlp"] += cfg.encoder.n_layers * 2 * d * cfg.encoder.d_ff
+    dense_side = counts["attn"] + counts["mlp"] + counts["rnn"]
+    total += dense_side + counts["moe_total"]
+    active += dense_side + counts["moe_active"]
+    return total, active
+
+
+def model_flops(cfg, shape):
+    """6·N_active·D for train; 2·N_active per generated token for decode;
+    2·N_active·D for prefill."""
+    total, active = _param_count(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+def coll_bytes(rec):
+    total = 0.0
+    for kind, v in rec.get("collectives", {}).items():
+        b = v["bytes"]
+        if kind == "all-reduce":
+            b *= 2.0          # ring transfer ≈ 2× tensor bytes
+        total += b
+    return total
+
+
+def analyze(records):
+    rows = []
+    for rec in records:
+        if "skipped" in rec or "error" in rec:
+            continue
+        cfg = get_config(rec["arch"])
+        shape = get_shape(rec["shape"])
+        chips = rec["n_chips"]
+        flops = rec["cost"]["flops"]
+        b_hi = rec["cost"]["bytes_accessed"]
+        b_lo = max(rec["cost"].get("dot_bytes", 0.0),
+                   rec["memory"]["argument_bytes"])
+        b_mid = math.sqrt(max(b_hi, 1.0) * max(b_lo, 1.0))
+        cb = coll_bytes(rec)
+
+        t_compute = flops / PEAK_FLOPS_BF16
+        t_memory = b_mid / HBM_BW
+        t_coll = cb / ICI_BW
+        terms = {"compute": t_compute, "memory": t_memory,
+                 "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape)
+        useful = mf / max(flops * chips, 1.0)
+        bound = max(terms.values())
+        # roofline fraction: useful model flops over what the dominant
+        # term's wall time could have computed at peak
+        roofline_frac = (mf / chips) / max(bound * PEAK_FLOPS_BF16, 1e-9)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "tags": rec.get("tags", ""),
+            "chips": chips,
+            "compute_s": t_compute, "memory_s": t_memory,
+            "memory_s_hi": b_hi / HBM_BW, "memory_s_lo": b_lo / HBM_BW,
+            "collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops": mf, "hlo_flops_chip": flops,
+            "useful_ratio": useful,
+            "roofline_frac": roofline_frac,
+            "hbm_gib": rec["memory"]["peak_est_bytes"] / 2 ** 30,
+        })
+    return rows
+
+
+def render(rows, *, mesh="16x16", tags=""):
+    hdr = (f"{'arch':<26} {'shape':<12} {'comp(s)':>9} {'mem(s)':>9} "
+           f"{'coll(s)':>9} {'dom':>10} {'useful':>7} {'roofl%':>7} "
+           f"{'HBM GiB':>8}")
+    out = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r.get("tags", "") != tags:
+            continue
+        out.append(
+            f"{r['arch']:<26} {r['shape']:<12} {r['compute_s']:>9.3f} "
+            f"{r['memory_s']:>9.3f} {r['collective_s']:>9.3f} "
+            f"{r['dominant']:>10} {r['useful_ratio']:>7.2f} "
+            f"{100 * r['roofline_frac']:>6.1f}% {r['hbm_gib']:>8.2f}")
+    return "\n".join(out)
+
+
+def run():
+    if not os.path.exists(RESULTS):
+        print("roofline: results/dryrun.json missing — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    with open(RESULTS) as f:
+        records = json.load(f)
+    rows = analyze(records)
+    print(render(rows, mesh="16x16"))
+    print()
+    print(render(rows, mesh="2x16x16"))
+    with open(os.path.join(os.path.dirname(RESULTS), "roofline.json"),
+              "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

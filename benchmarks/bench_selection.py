@@ -1,0 +1,163 @@
+"""Paper experiment analogues (Figures 2, 3, 4).
+
+Three table families, matching the paper's experimental setup (§5):
+  * accuracy-vs-rounds   (Figs 2a/2d, 3a/3d, 4a/4d)
+  * accuracy-vs-k        (Figs 2b/2e, 3b/3e, 4b/4e)
+  * time-vs-k            (Figs 2c/2f, 3c/3f, 4c/4f)
+
+Algorithms: DASH, SDS_MA (parallel-oracle greedy), TOP-K, RANDOM, LASSO.
+Datasets: D1 (synthetic regression), D2 (clinical surrogate), D3
+(synthetic classification), D4 (gene surrogate), D1-design (A-opt).
+Sizes default to a CPU-friendly scale; pass ``full=True`` for the paper's
+n (the algorithms are identical — only wall time changes).
+
+Sequential-SDS_MA timing is *derived* (n−i single-gain oracle calls per
+round) rather than simulated call-by-call, matching the paper's
+parallel-vs-sequential accounting.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, wall_time
+from repro.core import (
+    AOptimalityObjective,
+    ClassificationObjective,
+    DashConfig,
+    RegressionObjective,
+    dash,
+    dash_auto,
+    greedy,
+    lasso_path_select,
+    random_select,
+    top_k_select,
+)
+from repro.data.synthetic import (
+    make_d1_design,
+    make_d1_regression,
+    make_d2_clinical,
+    make_d3_classification,
+    make_d4_gene,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _dash_call(obj, k, alpha):
+    """Practical DASH: OPT-guess lattice (paper App. G), best value wins."""
+    return dash_auto(obj, k, KEY, eps=0.25, alpha=alpha, n_samples=8,
+                     n_guesses=6)
+
+
+def _bench_objective(name, obj, k_grid, *, lasso_xy=None, task="linear",
+                     alpha=0.6):
+    rows = []
+    for k in k_grid:
+        # warmup=1: exclude jit compilation from the reported wall time
+        g_t, g = wall_time(lambda: jax.block_until_ready(greedy(obj, k)),
+                           warmup=1, iters=1)
+        d_t, d = wall_time(
+            lambda: jax.block_until_ready(_dash_call(obj, k, alpha)),
+            warmup=1, iters=1)
+        t = top_k_select(obj, k)
+        r = random_select(obj, k, KEY)
+        row = {
+            "dataset": name, "k": k,
+            "dash_value": float(d.value), "dash_time_s": d_t,
+            "dash_rounds": int(d.rounds),
+            "greedy_value": float(g.value), "greedy_time_s": g_t,
+            "greedy_rounds": k,
+            "topk_value": float(t.value),
+            "random_value": float(r.value),
+        }
+        if lasso_xy is not None:
+            X, y = lasso_xy
+            t0 = time.perf_counter()
+            best, _ = lasso_path_select(X, y, k, task=task, iters=150)
+            row["lasso_nnz"] = int(best.nnz)
+            row["lasso_time_s"] = time.perf_counter() - t0
+            sup = jnp.nonzero(best.support, size=k, fill_value=0)[0]
+            st = obj.add_set(obj.init(), sup.astype(jnp.int32),
+                             jnp.ones(k, bool))
+            row["lasso_value"] = float(obj.value(st))
+        rows.append(row)
+        emit(f"selection/{name}/k={k}/dash", d_t * 1e6,
+             f"value={row['dash_value']:.4f};rounds={row['dash_rounds']}")
+        emit(f"selection/{name}/k={k}/greedy", g_t * 1e6,
+             f"value={row['greedy_value']:.4f};rounds={k}")
+        emit(f"selection/{name}/k={k}/topk_random", 0.0,
+             f"topk={row['topk_value']:.4f};random={row['random_value']:.4f}")
+        # parallel-runtime proxy: adaptive rounds (depth).  Wall-clock on
+        # this 1-core CPU host cannot express parallel speedup — DASH's
+        # win is depth, which the paper converts to wall time on ≥8 cores.
+        emit(f"selection/{name}/k={k}/depth_speedup", 0.0,
+             f"greedy_rounds_over_dash={k / max(int(d.rounds), 1):.2f}x")
+    return rows
+
+
+def accuracy_vs_rounds(name, obj, k):
+    """Fig 2a-style trace: objective value per adaptive round."""
+    g = greedy(obj, k)
+    cfg = DashConfig(k=k, eps=0.25, alpha=0.6, n_samples=6)
+    res = dash(obj, cfg, KEY, opt=float(g.value) * 1.05)
+    emit(f"rounds/{name}/greedy_final", 0.0,
+         f"value={float(g.value):.4f};rounds={k}")
+    emit(f"rounds/{name}/dash_final", 0.0,
+         f"value={float(res.value):.4f};rounds={int(res.rounds)}")
+    return np.asarray(res.trace.values), np.asarray(g.values)
+
+
+def run(full: bool = False):
+    scale = 1 if full else 4
+
+    # D1 regression (paper: n=500 features, k≤100)
+    X, y, _ = make_d1_regression(
+        n_samples=1000 // scale * scale, n_features=500 // scale,
+        support=100 // scale)
+    obj = RegressionObjective(jnp.asarray(X), jnp.asarray(y),
+                              kmax=100 // scale)
+    _bench_objective("D1_regression", obj,
+                     [25 // scale, 50 // scale, 100 // scale],
+                     lasso_xy=(X, y))
+    accuracy_vs_rounds("D1_regression", obj, 100 // scale)
+
+    # D2 clinical surrogate
+    X2, y2 = make_d2_clinical(n_samples=1200 // scale, n_features=385 // scale)
+    obj2 = RegressionObjective(jnp.asarray(X2), jnp.asarray(y2),
+                               kmax=100 // scale)
+    _bench_objective("D2_clinical", obj2, [50 // scale, 100 // scale],
+                     lasso_xy=(X2, y2))
+
+    # D3 classification
+    X3, y3, _ = make_d3_classification(
+        n_samples=600 // scale, n_features=200 // scale,
+        support=50 // scale)
+    obj3 = ClassificationObjective(jnp.asarray(X3), jnp.asarray(y3),
+                                   kmax=60 // scale)
+    _bench_objective("D3_classification", obj3, [20 // scale, 40 // scale],
+                     lasso_xy=(X3, y3), task="logistic")
+
+    # D4 gene surrogate (paper: k up to 200)
+    X4, y4, _ = make_d4_gene(n_samples=800 // scale,
+                             n_features=2500 // scale)
+    obj4 = ClassificationObjective(jnp.asarray(X4), jnp.asarray(y4),
+                                   kmax=200 // scale)
+    _bench_objective("D4_gene", obj4, [100 // scale, 200 // scale])
+
+    # Bayesian A-optimal experimental design (Fig 4) — smaller γ ⇒
+    # smaller α guess (Cor. 9)
+    Xd = make_d1_design(n_samples=1024 // scale, n_features=256 // scale)
+    objd = AOptimalityObjective(jnp.asarray(Xd), kmax=100 // scale,
+                                beta2=1.0, sigma2=1.0)
+    _bench_objective("D1_design_aopt", objd, [50 // scale, 100 // scale],
+                     alpha=0.4)
+    accuracy_vs_rounds("D1_design_aopt", objd, 100 // scale)
+
+
+if __name__ == "__main__":
+    run()

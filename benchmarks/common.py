@@ -1,0 +1,31 @@
+"""Shared benchmark helpers + the TPU v5e hardware model."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+# --- TPU v5e roofline constants (per chip) --------------------------------
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (~ per-device usable)
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512
+
+
+def wall_time(fn, *args, warmup=1, iters=3, **kw):
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,20 @@
+"""repro — production-grade JAX framework reproducing and extending
+
+  "Fast Parallel Algorithms for Statistical Subset Selection Problems"
+  (Qian & Singer, NeurIPS 2019)
+
+Layers:
+  repro.core       — differential submodularity + DASH and baselines
+  repro.kernels    — Pallas TPU kernels for the oracle/attention hot-spots
+  repro.models     — assigned LM-family architectures
+  repro.sharding   — mesh partitioning rules
+  repro.train      — train/serve steps + loops
+  repro.optim      — optimizer, schedules, gradient compression
+  repro.data       — synthetic datasets (paper's D1-D4) + LM token pipeline
+  repro.ckpt       — fault-tolerant checkpointing
+  repro.runtime    — elastic scaling + straggler mitigation
+  repro.configs    — architecture registry
+  repro.launch     — mesh construction, dry-run, drivers
+"""
+
+__version__ = "1.0.0"

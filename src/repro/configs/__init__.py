@@ -1,0 +1,55 @@
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    AttentionConfig,
+    EncoderConfig,
+    ModelConfig,
+    MoEConfig,
+    RecurrentConfig,
+    ShapeConfig,
+    TrainConfig,
+    VisionConfig,
+    XLSTMConfig,
+    reduced,
+)
+
+__all__ = [
+    "ALL_SHAPES",
+    "DECODE_32K",
+    "LONG_500K",
+    "PREFILL_32K",
+    "SHAPES_BY_NAME",
+    "TRAIN_4K",
+    "AttentionConfig",
+    "EncoderConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RecurrentConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "VisionConfig",
+    "XLSTMConfig",
+    "reduced",
+]
+
+
+def get_config(arch_id: str):
+    from repro.configs.registry import get_config as _g
+
+    return _g(arch_id)
+
+
+def get_reduced_config(arch_id: str, **overrides):
+    from repro.configs.registry import get_reduced_config as _g
+
+    return _g(arch_id, **overrides)
+
+
+def list_archs():
+    from repro.configs.registry import list_archs as _l
+
+    return _l()

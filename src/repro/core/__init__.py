@@ -1,0 +1,57 @@
+"""The paper's contribution: differential submodularity + DASH.
+
+Public API:
+    objectives: RegressionObjective, ClassificationObjective,
+                AOptimalityObjective, DiversifiedObjective
+    algorithms: dash, dash_auto, DashConfig, greedy, lazy_greedy,
+                adaptive_sequencing, top_k_select, random_select,
+                lasso_path_select
+    analysis:   gamma_regression, gamma_classification, gamma_aopt,
+                alpha_from_gamma
+"""
+
+from repro.core.objectives import (
+    AOptimalityObjective,
+    ClassificationObjective,
+    ClusterDiversity,
+    DiversifiedObjective,
+    RegressionObjective,
+    normalize_columns,
+)
+from repro.core.dash import DashConfig, DashResult, dash, dash_auto
+from repro.core.greedy import greedy, lazy_greedy, greedy_parallel_cost, greedy_sequential_cost
+from repro.core.baselines import random_select, top_k_select
+from repro.core.lasso import fista, lasso_path_select
+from repro.core.adaptive_sequencing import adaptive_sequencing
+from repro.core.spectral import (
+    alpha_from_gamma,
+    gamma_aopt,
+    gamma_classification,
+    gamma_regression,
+)
+
+__all__ = [
+    "AOptimalityObjective",
+    "ClassificationObjective",
+    "ClusterDiversity",
+    "DiversifiedObjective",
+    "RegressionObjective",
+    "normalize_columns",
+    "DashConfig",
+    "DashResult",
+    "dash",
+    "dash_auto",
+    "greedy",
+    "lazy_greedy",
+    "greedy_parallel_cost",
+    "greedy_sequential_cost",
+    "random_select",
+    "top_k_select",
+    "fista",
+    "lasso_path_select",
+    "adaptive_sequencing",
+    "alpha_from_gamma",
+    "gamma_aopt",
+    "gamma_classification",
+    "gamma_regression",
+]

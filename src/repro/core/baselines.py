@@ -1,0 +1,35 @@
+"""RANDOM and TOP-k baselines (paper §5 benchmarks)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import sample_set_from_mask
+
+
+class SelectResult(NamedTuple):
+    sel_mask: jnp.ndarray
+    value: jnp.ndarray
+    state: Any
+
+
+def random_select(obj, k: int, key) -> SelectResult:
+    """Select k uniformly random elements in one round."""
+    idx, valid = sample_set_from_mask(key, jnp.ones((obj.n,), bool), k)
+    state = obj.add_set(obj.init(), idx, valid)
+    return SelectResult(state.sel_mask, obj.value(state), state)
+
+
+def top_k_select(obj, k: int) -> SelectResult:
+    """Select the k elements with the largest singleton value f(a).
+
+    App. J of the paper shows TOP-k is itself a γ²-approximation for the
+    no-diversity feature-selection objective.
+    """
+    g = obj.gains(obj.init())
+    _, idx = jax.lax.top_k(g, k)
+    state = obj.add_set(obj.init(), idx.astype(jnp.int32), jnp.ones((k,), bool))
+    return SelectResult(state.sel_mask, obj.value(state), state)

@@ -1,0 +1,280 @@
+"""Distributed DASH — the paper's parallelism mapped onto a device mesh.
+
+Layout (DESIGN.md §2/§5):
+  * ground-set columns of X sharded over the ``model`` axis — each shard
+    evaluates the batched gain oracle for its own candidate block
+    (the paper's "one oracle query per core", scaled to a pod),
+  * Monte-Carlo expectation replicas over the ``data`` axis — each data
+    row draws its own R ~ U(X) and the estimate is a ``pmean``
+    (straggler-robust trimming happens host-side, runtime/straggler.py),
+  * independent (OPT, α) guesses map onto the ``pod`` axis (or a host
+    loop on smaller meshes).
+
+Collectives per adaptive round (n = ground set, P = model shards,
+b = block size ⌈k/r⌉, d = feature dim):
+  sampling     all_gather  (P·b scores)             — O(P·b)
+  column fetch psum        (d × b one-hot GEMM)     — O(d·b)
+  estimates    pmean       (scalar / (n/P,) gains)  — O(n/P)
+Everything else is shard-local dense linear algebra.  This is why DASH
+parallelizes: per round the communication volume is O(d·b + n/P), while
+greedy must synchronize after every single pick (k rounds of latency).
+
+The implementation is a faithful mirror of ``core/dash.py``; it is tested
+against it for solution quality and for exact cross-shard state agreement.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dash import DashConfig, DashTrace
+from repro.core.objectives.regression import RegressionObjective
+from repro.core.objectives.a_optimal import AOptimalityObjective
+
+
+class DistDashResult(NamedTuple):
+    sel_mask: jnp.ndarray      # (n,) bool — global (gathered)
+    sel_count: jnp.ndarray
+    value: jnp.ndarray
+    rounds: jnp.ndarray
+    values_trace: jnp.ndarray  # (r,)
+
+
+# ---------------------------------------------------------------------------
+# distributed primitives (run inside shard_map; `axis` is the mesh axis name)
+# ---------------------------------------------------------------------------
+
+def _dist_sample(key, alive_local, m, n_local, axis):
+    """Globally-uniform without-replacement sample of ≤ m alive elements.
+
+    Every shard draws Gumbel noise for its own block (key folded with the
+    shard rank), publishes its local top-m via all_gather, and all shards
+    deterministically reduce to the same global top-m.  Returns the local
+    view: (idx_local, owned&valid, valid_global).
+    """
+    rank = jax.lax.axis_index(axis)
+    kl = jax.random.fold_in(key, rank)
+    u = jax.random.uniform(kl, (n_local,), minval=1e-9, maxval=1.0 - 1e-9)
+    g = -jnp.log(-jnp.log(u))
+    scores = jnp.where(alive_local, g, -jnp.inf)
+    loc_vals, loc_idx = jax.lax.top_k(scores, m)
+
+    all_vals = jax.lax.all_gather(loc_vals, axis)          # (P, m)
+    all_idx = jax.lax.all_gather(loc_idx, axis)            # (P, m)
+    nshards = all_vals.shape[0]
+    flat_vals = all_vals.reshape(-1)
+    top_vals, top_flat = jax.lax.top_k(flat_vals, m)       # global top-m
+    top_shard = top_flat // m
+    top_local = jnp.take(all_idx.reshape(-1), top_flat)
+    valid_global = jnp.isfinite(top_vals)
+    owned = (top_shard == rank) & valid_global
+    return top_local.astype(jnp.int32), owned, valid_global
+
+
+def _dist_gather_columns(X_local, idx_local, owned, axis):
+    """psum-gather of the sampled global set's columns: (d, m)."""
+    cols = jnp.take(X_local, idx_local, axis=1)
+    cols = cols * owned.astype(X_local.dtype)[None, :]
+    return jax.lax.psum(cols, axis)
+
+
+# ---------------------------------------------------------------------------
+# distributed regression oracle state (Q, resid replicated; sel_mask local)
+# ---------------------------------------------------------------------------
+
+def dash_distributed_regression(
+    X, y, cfg: DashConfig, key, opt, mesh,
+    *, model_axis: str = "model", data_axis: str | None = "data",
+):
+    """Run DASH with candidates sharded over ``model_axis`` and Monte-Carlo
+    replicas over ``data_axis``.  X: (d, n) with n divisible by the model
+    axis size (pad first — see ``pad_ground_set``)."""
+    d, n = X.shape
+    cfg = cfg.resolve(n)
+    Pm = mesh.shape[model_axis]
+    Dm = mesh.shape[data_axis] if data_axis else 1
+    assert n % Pm == 0, f"pad ground set: n={n} % model={Pm}"
+    n_local = n // Pm
+    k, r = cfg.k, cfg.r
+    block = max(1, -(-k // r))
+    alpha2 = cfg.alpha * cfg.alpha
+    ysq = jnp.maximum(jnp.sum(y * y), 1e-12)
+
+    in_specs = (P(None, model_axis), P(), P(), P())
+    out_specs = (P(model_axis), P(), P(), P(), P())
+
+    def run(X_local, y_rep, key_rep, opt_rep):
+        col_sq = jnp.sum(X_local * X_local, axis=0)
+
+        from repro.kernels.marginal_gains.ref import regression_gains_ref
+
+        def gains(Q, resid, sel_local):
+            g = regression_gains_ref(X_local, Q, resid, col_sq) / ysq
+            return jnp.where(sel_local, 0.0, g)
+
+        def set_gain(Q, resid, C):
+            Ct = C - Q @ (Q.T @ C)
+            csq = jnp.sum(C * C, axis=0)
+            G = Ct.T @ Ct + jnp.diag(
+                jnp.where(csq > 0, 1e-8 * jnp.maximum(csq, 1.0), 1.0)
+            )
+            b = Ct.T @ resid
+            L = jnp.linalg.cholesky(G)
+            z = jax.scipy.linalg.solve_triangular(L, b, lower=True)
+            return jnp.sum(z * z) / ysq
+
+        def add_set(Q, count, resid, C):
+            m = C.shape[1]
+
+            def body(j, carry):
+                Q, count, resid = carry
+                v = C[:, j]
+                nrm0 = jnp.sqrt(jnp.sum(v * v))
+                v = v - Q @ (Q.T @ v)
+                v = v - Q @ (Q.T @ v)
+                nrm = jnp.sqrt(jnp.sum(v * v))
+                accept = (nrm0 > 0) & (nrm > 1e-6 * jnp.maximum(nrm0, 1.0)) & (count < cfg.k)
+                q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
+                Q = jax.lax.dynamic_update_slice(
+                    Q, q[:, None], (0, jnp.minimum(count, cfg.k - 1))
+                )
+                resid = resid - q * jnp.dot(q, resid)
+                return Q, count + accept.astype(jnp.int32), resid
+
+            return jax.lax.fori_loop(0, m, body, (Q, count, resid))
+
+        def estimate_set_gain(Q, resid, alive, allowed, key):
+            # Each data-axis replica evaluates its own samples; pmean merges.
+            didx = jax.lax.axis_index(data_axis) if data_axis else 0
+            kd = jax.random.fold_in(key, didx)
+
+            def one(kk):
+                idx_l, owned, validg = _dist_sample(kk, alive, block, n_local, model_axis)
+                validg = validg & (jnp.arange(block) < allowed)
+                C = _dist_gather_columns(
+                    X_local, idx_l, owned & (jnp.arange(block) < allowed), model_axis
+                )
+                return set_gain(Q, resid, C)
+
+            vals = jax.vmap(one)(jax.random.split(kd, cfg.n_samples))
+            est = jnp.mean(vals)
+            if data_axis:
+                est = jax.lax.pmean(est, data_axis)
+            return est
+
+        def estimate_elem_gains(Q, count, resid, sel_local, alive, allowed, key):
+            didx = jax.lax.axis_index(data_axis) if data_axis else 0
+            kd = jax.random.fold_in(key, didx)
+
+            def one(kk):
+                idx_l, owned, validg = _dist_sample(kk, alive, block, n_local, model_axis)
+                slot_ok = validg & (jnp.arange(block) < allowed)
+                C = _dist_gather_columns(X_local, idx_l, owned & slot_ok, model_axis)
+                Q2, _, r2 = add_set(Q, count, resid, C)
+                g = gains(Q2, r2, sel_local)
+                w = jnp.ones((n_local,)).at[idx_l].add(
+                    jnp.where(owned & slot_ok, -1.0, 0.0)
+                )
+                return g * w, w
+
+            gs, ws = jax.vmap(one)(jax.random.split(kd, cfg.n_samples))
+            gsum, wsum = jnp.sum(gs, axis=0), jnp.sum(ws, axis=0)
+            if data_axis:
+                gsum = jax.lax.psum(gsum, data_axis)
+                wsum = jax.lax.psum(wsum, data_axis)
+            est = gsum / jnp.maximum(wsum, 1.0)
+            return jnp.where(wsum > 0, est, gains(Q, resid, sel_local))
+
+        # ---- DASH rounds ------------------------------------------------
+        Q0 = jnp.zeros((d, cfg.k), jnp.float32)
+        maxit = cfg.max_filter_iters
+
+        def round_body(rho, carry):
+            Q, count, resid, sel_local, alive, key, nsel, values = carry
+            key, k_est, k_pick = jax.random.split(key, 3)
+            value = (ysq - jnp.sum(resid * resid)) / ysq
+            t = jnp.maximum((1.0 - cfg.eps) * (opt_rep - value), 0.0)
+            thr_set = alpha2 * t / r
+            thr_elem = cfg.alpha * (1.0 + cfg.eps / 2.0) * t / k
+            allowed = jnp.maximum(k - nsel, 0)
+
+            est0 = estimate_set_gain(Q, resid, alive, allowed, k_est)
+
+            def cond(w):
+                alive_w, key_w, est_w, it = w
+                n_alive = jax.lax.psum(jnp.sum(alive_w.astype(jnp.int32)), model_axis)
+                return (est_w < thr_set) & (it < maxit) & (n_alive > 0)
+
+            def body(w):
+                alive_w, key_w, est_w, it = w
+                key_w, k_f, k_e = jax.random.split(key_w, 3)
+                eg = estimate_elem_gains(Q, count, resid, sel_local, alive_w, allowed, k_f)
+                alive_w = alive_w & (eg >= thr_elem) & ~sel_local
+                est_w = estimate_set_gain(Q, resid, alive_w, allowed, k_e)
+                return alive_w, key_w, est_w, it + 1
+
+            alive, key, est, iters = jax.lax.while_loop(
+                cond, body, (alive, key, est0, jnp.zeros((), jnp.int32))
+            )
+
+            idx_l, owned, validg = _dist_sample(k_pick, alive, block, n_local, model_axis)
+            slot_ok = validg & (jnp.arange(block) < allowed)
+            C = _dist_gather_columns(X_local, idx_l, owned & slot_ok, model_axis)
+            Q, count, resid = add_set(Q, count, resid, C)
+            sel_local = sel_local.at[idx_l].set(sel_local[idx_l] | (owned & slot_ok))
+            alive = alive & ~sel_local
+            added = jax.lax.psum(
+                jnp.sum((owned & slot_ok).astype(jnp.int32)), model_axis
+            )
+            value = (ysq - jnp.sum(resid * resid)) / ysq
+            values = values.at[rho].set(value)
+            return Q, count, resid, sel_local, alive, key, nsel + added, values
+
+        init = (
+            Q0,
+            jnp.zeros((), jnp.int32),
+            y_rep,
+            jnp.zeros((n_local,), bool),
+            jnp.ones((n_local,), bool),
+            key_rep,
+            jnp.zeros((), jnp.int32),
+            jnp.zeros((r,), jnp.float32),
+        )
+        Q, count, resid, sel_local, alive, key_f, nsel, values = jax.lax.fori_loop(
+            0, r, round_body, init
+        )
+        value = (ysq - jnp.sum(resid * resid)) / ysq
+        return sel_local, nsel, value, jnp.asarray(r, jnp.int32), values
+
+    # check_vma=False: the Monte-Carlo estimators vmap over sample keys with
+    # collectives (psum/all_gather) inside the vmapped body; the VMA
+    # invariant checker does not yet support that composition.
+    run_sharded = jax.jit(
+        jax.shard_map(
+            run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    )
+    sel, nsel, value, rounds, values = run_sharded(
+        X, y, key, jnp.asarray(opt, jnp.float32)
+    )
+    return DistDashResult(
+        sel_mask=sel, sel_count=nsel, value=value, rounds=rounds,
+        values_trace=values,
+    )
+
+
+def pad_ground_set(X, multiple: int):
+    """Pad candidate columns with zeros to a multiple (zero columns can
+    never be selected: their gains are 0)."""
+    d, n = X.shape
+    n_pad = (-n) % multiple
+    if n_pad == 0:
+        return X, n
+    return jnp.concatenate([X, jnp.zeros((d, n_pad), X.dtype)], axis=1), n

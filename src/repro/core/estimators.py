@@ -1,0 +1,58 @@
+"""Sampling + expectation-estimation utilities for adaptive sampling.
+
+The idealized DASH (Alg. 1) uses exact expectations E_{R~U(X)}[·]; the
+practical algorithm (paper App. G) replaces them with Monte-Carlo
+estimates over ``n_samples`` i.i.d. sets.  On a fleet these estimates are
+computed by different replicas, so we also provide a *trimmed* reduction:
+dropping the extreme quantiles makes the estimator robust both to
+statistical outliers and to straggler replicas returning stale/partial
+values (runtime/straggler.py wires that policy in).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_set_from_mask(key, mask, m: int):
+    """Uniformly sample ≤ m distinct elements of the alive ``mask``.
+
+    Gumbel-top-k trick: taking the top-m of i.i.d. Gumbel noise restricted
+    to the alive entries is a uniform without-replacement sample.  Returns
+    (idx, valid): int32 (m,) indices and bool (m,) slot validity (invalid
+    slots occur when fewer than m elements are alive).
+    """
+    n = mask.shape[0]
+    u = jax.random.uniform(key, (n,), minval=1e-9, maxval=1.0 - 1e-9)
+    g = -jnp.log(-jnp.log(u))
+    scores = jnp.where(mask, g, -jnp.inf)
+    vals, idx = jax.lax.top_k(scores, m)
+    return idx.astype(jnp.int32), jnp.isfinite(vals)
+
+
+def sample_set_batch(key, mask, m: int, n_samples: int):
+    """(n_samples, m) independent uniform set samples from ``mask``."""
+    keys = jax.random.split(key, n_samples)
+    return jax.vmap(lambda k: sample_set_from_mask(k, mask, m))(keys)
+
+
+def trimmed_mean(vals, trim_frac: float = 0.0):
+    """Symmetric trimmed mean along axis 0 (static trim count).
+
+    ``trim_frac`` = fraction trimmed from EACH side.  With 0 it is the
+    plain mean.  Used as the straggler/outlier-robust estimator for
+    E[f_S(R)] (DESIGN.md §9).
+    """
+    m = vals.shape[0]
+    t = int(m * trim_frac)
+    if t == 0:
+        return jnp.mean(vals, axis=0)
+    svals = jnp.sort(vals, axis=0)
+    return jnp.mean(svals[t : m - t], axis=0)
+
+
+def masked_argmax(values, mask):
+    """argmax of ``values`` restricted to ``mask`` (int32)."""
+    neg = jnp.finfo(values.dtype).min
+    return jnp.argmax(jnp.where(mask, values, neg)).astype(jnp.int32)

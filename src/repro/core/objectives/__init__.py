@@ -1,0 +1,17 @@
+from repro.core.objectives.base import Objective, normalize_columns
+from repro.core.objectives.regression import RegressionObjective
+from repro.core.objectives.classification import ClassificationObjective
+from repro.core.objectives.a_optimal import AOptimalityObjective
+from repro.core.objectives.diversity import ClusterDiversity, DiversifiedObjective
+from repro.core.objectives.r2 import R2Objective
+
+__all__ = [
+    "Objective",
+    "normalize_columns",
+    "RegressionObjective",
+    "ClassificationObjective",
+    "AOptimalityObjective",
+    "ClusterDiversity",
+    "DiversifiedObjective",
+    "R2Objective",
+]

@@ -1,0 +1,121 @@
+"""Bayesian A-optimal experimental design (paper §3.1, Corollary 9; App. D).
+
+    f_A-opt(S) = Tr(Λ⁻¹) − Tr((Λ + σ⁻² X_S X_Sᵀ)⁻¹),   Λ = β² I
+
+Oracles
+-------
+State carries M = Λ + σ⁻² X_S X_Sᵀ and its Cholesky factor L.
+
+* Singleton gains (Sherman–Morrison):
+      f_S(a) = σ⁻² ‖M⁻¹ x_a‖² / (1 + σ⁻² x_aᵀ M⁻¹ x_a)
+  Batched: W = M⁻¹X is one pair of triangular-solve GEMMs; the remaining
+  fused column-norm/ratio math is ``repro.kernels.aopt_gains``.
+* Set gains (Woodbury):
+      f_S(R) = σ⁻² Tr( (I + σ⁻² CᵀM⁻¹C)⁻¹ · (M⁻¹C)ᵀ(M⁻¹C) ),  C = X_R.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objectives.base import gather_columns
+
+
+class AOptState(NamedTuple):
+    M: jnp.ndarray          # (d, d) posterior precision
+    L: jnp.ndarray          # (d, d) chol(M)
+    sel_mask: jnp.ndarray   # (n,) bool
+    value: jnp.ndarray      # () f32
+
+
+class AOptimalityObjective:
+    """Bayesian A-optimality oracle.  X: (d, n) stimuli columns."""
+
+    def __init__(
+        self,
+        X: jnp.ndarray,
+        kmax: int,
+        *,
+        beta2: float = 1.0,
+        sigma2: float = 1.0,
+        use_kernel: bool = False,
+    ):
+        self.X = jnp.asarray(X, jnp.float32)
+        self.d, self.n = self.X.shape
+        self.kmax = int(kmax)
+        self.beta2 = float(beta2)
+        self.isig2 = 1.0 / float(sigma2)
+        self.use_kernel = bool(use_kernel)
+        self.tr_prior = self.d / self.beta2  # Tr(Λ⁻¹)
+
+    def _chol(self, M):
+        return jnp.linalg.cholesky(M)
+
+    def _trace_inv(self, L):
+        # Tr(M⁻¹) = ‖L⁻¹‖_F²  via triangular solve against I.
+        Z = jax.scipy.linalg.solve_triangular(L, jnp.eye(self.d), lower=True)
+        return jnp.sum(Z * Z)
+
+    def init(self) -> AOptState:
+        M = self.beta2 * jnp.eye(self.d)
+        L = jnp.sqrt(self.beta2) * jnp.eye(self.d)
+        return AOptState(
+            M=M,
+            L=L,
+            sel_mask=jnp.zeros((self.n,), bool),
+            value=jnp.zeros((), jnp.float32),
+        )
+
+    def value(self, state: AOptState):
+        return state.value
+
+    # -- oracles ----------------------------------------------------------
+    def _minv(self, L, B):
+        z = jax.scipy.linalg.solve_triangular(L, B, lower=True)
+        return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
+
+    def gains(self, state: AOptState):
+        W = self._minv(state.L, self.X)            # (d, n) = M⁻¹X
+        if self.use_kernel:
+            from repro.kernels.aopt_gains.ops import aopt_gains
+
+            g = aopt_gains(self.X, W, self.isig2)
+        else:
+            from repro.kernels.aopt_gains.ref import aopt_gains_ref
+
+            g = aopt_gains_ref(self.X, W, self.isig2)
+        return jnp.where(state.sel_mask, 0.0, g)
+
+    def set_gain(self, state: AOptState, idx, mask):
+        C = gather_columns(self.X, idx, mask)      # (d, m)
+        m = idx.shape[0]
+        W = self._minv(state.L, C)                 # (d, m)
+        K = jnp.eye(m) + self.isig2 * (C.T @ W)
+        K = K + jnp.diag(jnp.where(mask, 0.0, 1.0))  # pin padded slots
+        Lk = jnp.linalg.cholesky(K)
+        Z = jax.scipy.linalg.solve_triangular(Lk, W.T, lower=True)  # (m, d)
+        return self.isig2 * jnp.sum(Z * Z)
+
+    def add_set(self, state: AOptState, idx, mask) -> AOptState:
+        # Re-adding an already-selected stimulus must be a no-op for set
+        # semantics, so mask out duplicates.
+        new_mask = mask & ~state.sel_mask[idx]
+        C = gather_columns(self.X, idx, new_mask)
+        M = state.M + self.isig2 * (C @ C.T)
+        L = self._chol(M)
+        sel = state.sel_mask.at[idx].set(state.sel_mask[idx] | mask)
+        value = self.tr_prior - self._trace_inv(L)
+        return AOptState(M=M, L=L, sel_mask=sel, value=value)
+
+    def add_one(self, state: AOptState, a) -> AOptState:
+        idx = jnp.full((1,), a, jnp.int32)
+        return self.add_set(state, idx, jnp.ones((1,), bool))
+
+    # -- exact reference (tests) ------------------------------------------
+    def brute_value(self, sel_idx):
+        Xs = self.X[:, jnp.asarray(sel_idx)]
+        M = self.beta2 * jnp.eye(self.d) + self.isig2 * (Xs @ Xs.T)
+        return self.tr_prior - jnp.trace(jnp.linalg.inv(M))

@@ -1,0 +1,77 @@
+"""Objective interface for statistical subset selection.
+
+Every objective is a *functional* oracle over a fixed ground set of ``n``
+columns (features or experiment stimuli).  The selection algorithms (DASH,
+greedy, ...) only interact through this interface, so they are agnostic to
+which of the paper's three applications (Cor. 7/8/9) is being optimized.
+
+All methods are pure and jit-compatible; solution sets are carried in
+fixed-capacity padded index vectors so the whole algorithm can live inside
+``lax`` control flow and be ``shard_map``-ped over a device mesh.
+
+State conventions
+-----------------
+``state`` is a NamedTuple specific to the objective with at least:
+  * ``sel_mask``: (n,) bool — membership of the current solution S,
+  * ``value``:    ()   f32 — f(S) (normalized where noted).
+
+Set arguments are passed as ``(idx, mask)`` where ``idx`` is an int32
+vector of column indices (padded arbitrarily) and ``mask`` a bool vector
+marking the real entries.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol
+
+import jax.numpy as jnp
+
+Array = Any
+
+
+class Objective(Protocol):
+    """Protocol implemented by all subset-selection objectives."""
+
+    n: int          # ground-set size
+    kmax: int       # static capacity for |S|
+
+    def init(self) -> Any:
+        """State for S = ∅."""
+
+    def value(self, state) -> Array:
+        """f(S)."""
+
+    def gains(self, state) -> Array:
+        """(n,) vector of singleton marginals f_S(a); 0 for a ∈ S."""
+
+    def set_gain(self, state, idx, mask) -> Array:
+        """f_S(R) for the padded set R = idx[mask]."""
+
+    def add_set(self, state, idx, mask):
+        """State for S ∪ R."""
+
+
+def normalize_columns(X: Array, eps: float = 1e-12) -> Array:
+    """Zero-mean, unit-variance columns (paper's preprocessing for D1-D4)."""
+    X = X - jnp.mean(X, axis=0, keepdims=True)
+    nrm = jnp.sqrt(jnp.sum(X * X, axis=0, keepdims=True))
+    return X / jnp.maximum(nrm, eps)
+
+
+def one_hot_columns(idx: Array, mask: Array, n: int) -> Array:
+    """(n, m) selection matrix E with E[idx[j], j] = mask[j].
+
+    ``X @ E`` gathers the padded set's columns — this formulation keeps the
+    gather expressible as a GEMM, which is what the distributed oracle uses
+    to fetch remote columns with a single ``psum`` (see core/distributed.py).
+    """
+    m = idx.shape[0]
+    e = jnp.zeros((n, m), dtype=jnp.float32)
+    e = e.at[idx, jnp.arange(m)].add(mask.astype(jnp.float32))
+    return e
+
+
+def gather_columns(X: Array, idx: Array, mask: Array) -> Array:
+    """(d, m) columns X[:, idx] with padded entries zeroed."""
+    cols = jnp.take(X, idx, axis=1)
+    return cols * mask.astype(X.dtype)[None, :]

@@ -1,0 +1,43 @@
+"""R² goodness-of-fit objective (paper Appendix F).
+
+    R²(S) = b_Sᵀ C_S⁻¹ b_S
+
+with C the predictor correlation matrix and b the predictor–response
+correlations, assuming standardized variables (App. F Def. 14).  After
+standardization this equals the normalized ℓ_reg variance-reduction
+objective — Lemma 15's eigenvalue sandwich on C_A^S is exactly
+Corollary 7's with the correlation spectrum — so the oracle is the
+(standardizing) RegressionObjective; this module makes the equivalence
+explicit, testable, and importable under the paper's name.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.objectives.base import normalize_columns
+from repro.core.objectives.regression import RegressionObjective
+
+
+def standardize(X, y):
+    """Zero-mean unit-variance columns; y centred to zero mean."""
+    Xs = normalize_columns(jnp.asarray(X, jnp.float32))
+    y = jnp.asarray(y, jnp.float32)
+    return Xs, y - jnp.mean(y)
+
+
+class R2Objective(RegressionObjective):
+    """f(S) = R²(S) on standardized data; f ∈ [0, 1]."""
+
+    def __init__(self, X, y, kmax: int, **kw):
+        Xs, ys = standardize(X, y)
+        super().__init__(Xs, ys, kmax, **kw)
+
+    def brute_r2(self, sel_idx):
+        """Direct Def.-14 evaluation: b_Sᵀ C_S⁻¹ b_S (test oracle)."""
+        idx = jnp.asarray(sel_idx)
+        Xs = self.X[:, idx]
+        C = Xs.T @ Xs
+        b = Xs.T @ (self.y / jnp.maximum(jnp.linalg.norm(self.y), 1e-12))
+        sol = jnp.linalg.solve(C, b)
+        return jnp.dot(b, sol)

@@ -1,0 +1,139 @@
+"""Feature selection for linear regression (paper §3.1, Corollary 7).
+
+Objective (normalized to [0, 1] by ||y||²):
+
+    f(S) = ( ||y||² − min_w ||y − X_S w||² ) / ||y||²
+         = ||proj_{span(X_S)} y||² / ||y||²
+
+which is the ℓ_reg variance-reduction utility of the paper.  The R²
+goodness-of-fit variant (Appendix F) is identical after column
+normalization, which ``normalize_columns`` provides.
+
+Fast oracle
+-----------
+We maintain an orthonormal basis Q of span(X_S) (incremental modified
+Gram–Schmidt).  With residual r = y − QQᵀy:
+
+    f_S(a)  = (x_aᵀ r)² / (‖x_a‖² − ‖Qᵀ x_a‖²)          (singleton gains)
+    f_S(R)  = bᵀ G⁻¹ b,  C̃ = (I−QQᵀ) X_R, G = C̃ᵀC̃, b = C̃ᵀ r
+
+The batched singleton-gain evaluation — one (k×d)·(d×n) GEMM plus
+elementwise math — is the per-round hot-spot that
+``repro.kernels.marginal_gains`` fuses on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objectives.base import gather_columns
+
+
+class RegressionState(NamedTuple):
+    Q: jnp.ndarray          # (d, kcap) orthonormal basis (zero-padded cols)
+    count: jnp.ndarray      # () int32 — number of basis vectors
+    resid: jnp.ndarray      # (d,) current residual y − QQᵀy
+    sel_mask: jnp.ndarray   # (n,) bool
+    value: jnp.ndarray      # () f32 — normalized f(S)
+
+
+class RegressionObjective:
+    """ℓ_reg feature selection oracle.  X: (d, n) columns, y: (d,)."""
+
+    def __init__(
+        self,
+        X: jnp.ndarray,
+        y: jnp.ndarray,
+        kmax: int,
+        *,
+        span_tol: float = 1e-6,
+        jitter: float = 1e-8,
+        use_kernel: bool = False,
+    ):
+        self.X = jnp.asarray(X, jnp.float32)
+        self.y = jnp.asarray(y, jnp.float32)
+        self.d, self.n = self.X.shape
+        self.kmax = int(kmax)
+        self.span_tol = float(span_tol)
+        self.jitter = float(jitter)
+        self.use_kernel = bool(use_kernel)
+        self.ysq = jnp.maximum(jnp.sum(self.y * self.y), 1e-12)
+        self.col_sq = jnp.sum(self.X * self.X, axis=0)  # (n,)
+
+    # -- state ------------------------------------------------------------
+    def init(self) -> RegressionState:
+        return RegressionState(
+            Q=jnp.zeros((self.d, self.kmax), jnp.float32),
+            count=jnp.zeros((), jnp.int32),
+            resid=self.y,
+            sel_mask=jnp.zeros((self.n,), bool),
+            value=jnp.zeros((), jnp.float32),
+        )
+
+    def value(self, state: RegressionState):
+        return state.value
+
+    # -- oracles ----------------------------------------------------------
+    def gains(self, state: RegressionState):
+        if self.use_kernel:
+            from repro.kernels.marginal_gains.ops import regression_gains
+
+            g = regression_gains(self.X, state.Q, state.resid, self.col_sq)
+        else:
+            from repro.kernels.marginal_gains.ref import regression_gains_ref
+
+            g = regression_gains_ref(self.X, state.Q, state.resid, self.col_sq)
+        g = g / self.ysq
+        return jnp.where(state.sel_mask, 0.0, g)
+
+    def set_gain(self, state: RegressionState, idx, mask):
+        C = gather_columns(self.X, idx, mask)                  # (d, m)
+        Ct = C - state.Q @ (state.Q.T @ C)                     # project ⟂ span(Q)
+        m = idx.shape[0]
+        G = Ct.T @ Ct
+        # Padded/in-span columns: pin the diagonal so Cholesky stays PD.
+        diag_fix = jnp.where(mask, self.jitter * jnp.maximum(self.col_sq[idx], 1.0), 1.0)
+        G = G + jnp.diag(diag_fix)
+        b = Ct.T @ state.resid * mask
+        L = jnp.linalg.cholesky(G)
+        z = jax.scipy.linalg.solve_triangular(L, b, lower=True)
+        return jnp.sum(z * z) / self.ysq
+
+    def add_set(self, state: RegressionState, idx, mask) -> RegressionState:
+        C = gather_columns(self.X, idx, mask)                  # (d, m)
+        m = idx.shape[0]
+
+        def body(j, carry):
+            Q, count, resid = carry
+            v = C[:, j]
+            # Two rounds of MGS against the (padded-capacity) basis.
+            v = v - Q @ (Q.T @ v)
+            v = v - Q @ (Q.T @ v)
+            nrm = jnp.sqrt(jnp.sum(v * v))
+            ref = jnp.sqrt(jnp.maximum(self.col_sq[idx[j]], 1e-12))
+            accept = mask[j] & (nrm > self.span_tol * jnp.maximum(ref, 1.0)) & (count < self.kmax)
+            q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
+            Q = jax.lax.dynamic_update_slice(Q, q[:, None], (0, jnp.minimum(count, self.kmax - 1)))
+            resid = resid - q * jnp.dot(q, resid)
+            count = count + accept.astype(jnp.int32)
+            return Q, count, resid
+
+        Q, count, resid = jax.lax.fori_loop(0, m, body, (state.Q, state.count, state.resid))
+        sel = state.sel_mask.at[idx].set(state.sel_mask[idx] | mask)
+        value = (self.ysq - jnp.sum(resid * resid)) / self.ysq
+        return RegressionState(Q=Q, count=count, resid=resid, sel_mask=sel, value=value)
+
+    def add_one(self, state: RegressionState, a) -> RegressionState:
+        idx = jnp.full((1,), a, jnp.int32)
+        return self.add_set(state, idx, jnp.ones((1,), bool))
+
+    # -- exact reference (tests) ------------------------------------------
+    def brute_value(self, sel_idx) -> jnp.ndarray:
+        """f(S) via full lstsq — oracle for property tests."""
+        Xs = self.X[:, jnp.asarray(sel_idx)]
+        w, *_ = jnp.linalg.lstsq(Xs, self.y, rcond=None)
+        resid = self.y - Xs @ w
+        return (self.ysq - jnp.sum(resid * resid)) / self.ysq

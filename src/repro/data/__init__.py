@@ -1,0 +1,22 @@
+from repro.data.synthetic import (
+    make_d1_regression,
+    make_d1_design,
+    make_d2_clinical,
+    make_d3_classification,
+    make_d4_gene,
+    make_lm_tokens,
+)
+from repro.data.pipeline import TokenPipeline, shard_batch
+from repro.data.selection import DashBatchSelector
+
+__all__ = [
+    "make_d1_regression",
+    "make_d1_design",
+    "make_d2_clinical",
+    "make_d3_classification",
+    "make_d4_gene",
+    "make_lm_tokens",
+    "TokenPipeline",
+    "shard_batch",
+    "DashBatchSelector",
+]

@@ -1,0 +1,78 @@
+"""Host-side data pipeline: deterministic, shardable, prefetching.
+
+``TokenPipeline`` cuts a token stream into (batch, seq) examples with a
+deterministic per-step mapping (so restart from checkpoint step N replays
+the exact same data order — a fault-tolerance requirement), and a
+background prefetch thread.
+
+``shard_batch`` places a host batch onto the mesh with batch-axis
+sharding (pod+data).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.partitioning import batch_axes_for_mesh
+
+
+class TokenPipeline:
+    def __init__(self, tokens: np.ndarray, batch: int, seq: int,
+                 *, start_step: int = 0, prefetch: int = 2):
+        self.tokens = tokens
+        self.batch = batch
+        self.seq = seq
+        self.step = start_step
+        n_per_example = seq
+        self.examples_total = len(tokens) // n_per_example
+        assert self.examples_total >= batch, "token stream too small"
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def batch_for_step(self, step: int) -> dict:
+        """Deterministic batch for a global step (restart-replayable)."""
+        rng = np.random.default_rng(1234 + step)
+        idx = rng.choice(self.examples_total, size=self.batch, replace=False)
+        rows = np.stack(
+            [self.tokens[i * self.seq:(i + 1) * self.seq] for i in idx])
+        return {"tokens": rows.astype(np.int32)}
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            try:
+                self._q.put(self.batch_for_step(step), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = self._q.get()
+        self.step += 1
+        return b
+
+    def close(self):
+        self._stop.set()
+
+
+def shard_batch(batch, mesh):
+    """Place a host batch on the mesh, sharded over the batch axes."""
+    axes = batch_axes_for_mesh(mesh)
+
+    def put(x):
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        return jax.device_put(jnp.asarray(x), NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, batch)

@@ -1,0 +1,83 @@
+"""DASH-driven training-batch selection — the paper's technique as a
+first-class data-engine feature (DESIGN.md §4).
+
+Experimental-design view: each candidate example is a stimulus vector
+(its pooled embedding under the current/frozen model).  Selecting the
+batch that maximally reduces posterior variance over a linear probe of
+the embedding space is exactly Bayesian A-optimal design (paper Cor. 9),
+so we run DASH on ``AOptimalityObjective`` over the pool.
+
+On a mesh, the candidate pool is sharded over the model axis via
+``dash_distributed_regression``'s machinery; here we expose the
+single-controller API used by the training loop and examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dash import DashConfig, dash
+from repro.core.greedy import greedy
+from repro.core.objectives.a_optimal import AOptimalityObjective
+
+
+class DashBatchSelector:
+    """Select k of a candidate pool by A-optimal design over embeddings."""
+
+    def __init__(self, k: int, *, alpha: float = 0.5, eps: float = 0.25,
+                 n_samples: int = 6, beta2: float = 1.0, sigma2: float = 1.0,
+                 embed_dim_cap: int = 256, method: str = "dash"):
+        self.k = k
+        self.alpha = alpha
+        self.eps = eps
+        self.n_samples = n_samples
+        self.beta2 = beta2
+        self.sigma2 = sigma2
+        self.embed_dim_cap = embed_dim_cap
+        assert method in ("dash", "greedy", "random")
+        self.method = method
+
+    def _project(self, embeds, key):
+        """Random projection to ≤ embed_dim_cap dims (A-opt state is d×d)."""
+        p, d = embeds.shape
+        if d <= self.embed_dim_cap:
+            return embeds
+        R = jax.random.normal(key, (d, self.embed_dim_cap)) / jnp.sqrt(d)
+        return embeds @ R
+
+    def select(self, embeds, key):
+        """embeds: (pool, d) pooled example embeddings → (k,) indices."""
+        if self.method == "random":
+            return jax.random.choice(
+                key, embeds.shape[0], shape=(self.k,), replace=False)
+        kp, kd = jax.random.split(key)
+        E = self._project(jnp.asarray(embeds, jnp.float32), kp)
+        E = E / jnp.maximum(
+            jnp.linalg.norm(E, axis=1, keepdims=True), 1e-9)
+        obj = AOptimalityObjective(
+            E.T, kmax=self.k, beta2=self.beta2, sigma2=self.sigma2)
+        if self.method == "greedy":
+            res = greedy(obj, self.k)
+            return jnp.nonzero(res.sel_mask, size=self.k, fill_value=0)[0]
+        gres = greedy(obj, self.k)   # cheap OPT estimate for the guess
+        cfg = DashConfig(k=self.k, eps=self.eps, alpha=self.alpha,
+                         n_samples=self.n_samples)
+        res = dash(obj, cfg, kd, opt=gres.value * 1.05)
+        idx = jnp.nonzero(res.sel_mask, size=self.k, fill_value=-1)[0]
+        # backfill (DASH may select < k under a bad OPT guess)
+        need = idx < 0
+        filler = jnp.nonzero(~res.sel_mask, size=self.k, fill_value=0)[0]
+        return jnp.where(need, filler, idx)
+
+
+def pool_embeddings(model, params, batch):
+    """Mean-pooled pre-head hidden states as selection embeddings.
+
+    Uses the model's embedding table on tokens (cheap, frozen-backbone
+    proxy); swap in a full forward for higher-fidelity scoring.
+    """
+    tokens = batch["tokens"]
+    emb = jnp.take(params["embed"], tokens, axis=0)   # (B, S, D)
+    return jnp.mean(emb.astype(jnp.float32), axis=1)  # (B, D)

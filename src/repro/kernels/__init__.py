@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package has three modules:
+  kernel.py — the ``pl.pallas_call`` with explicit BlockSpec VMEM tiling
+              (TPU is the target; validated with ``interpret=True`` on CPU)
+  ops.py    — the jit'd public wrapper (shape padding, dtype policy)
+  ref.py    — pure-jnp oracle used by the objectives on non-TPU backends
+              and by the allclose test sweeps
+
+Kernels:
+  marginal_gains  — fused batched regression singleton-gain oracle
+                    (the per-round hot-spot of DASH, paper §4)
+  aopt_gains      — fused Sherman–Morrison A-optimality gain oracle
+  flash_attention — online-softmax attention for the LM serving substrate
+"""

@@ -1,0 +1,39 @@
+"""Public jit'd wrapper for the A-optimality gains kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.aopt_gains.kernel import aopt_gains_pallas
+from repro.kernels.aopt_gains.ref import aopt_gains_ref
+
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block_n(d: int) -> int:
+    for bn in (512, 256, 128):
+        if 4 * (2 * d * bn + bn) <= _VMEM_BUDGET:
+            return bn
+    return 128
+
+
+def aopt_gains(X, W, isig2, *, interpret: bool | None = None):
+    """Batched Sherman–Morrison gains; Pallas path with padding."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d, n = X.shape
+    dp = _round_up(d, 8)
+    bn = _pick_block_n(dp)
+    np_ = _round_up(n, bn)
+    if dp * np_ > 64 * 1024 * 1024:
+        return aopt_gains_ref(X, W, isig2)
+    Xp = jnp.zeros((dp, np_), jnp.float32).at[:d, :n].set(X)
+    Wp = jnp.zeros((dp, np_), jnp.float32).at[:d, :n].set(W)
+    out = aopt_gains_pallas(Xp, Wp, isig2=float(isig2), block_n=bn,
+                            interpret=interpret)
+    return out[:n]

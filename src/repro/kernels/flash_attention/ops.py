@@ -1,0 +1,52 @@
+"""Public jit'd wrapper for the flash-attention kernel.
+
+Accepts the model's (B, S, H, D) layout with GQA (Hkv ≤ H), repeats KV
+heads, pads sequence dims to block multiples, and dispatches to the
+Pallas kernel (interpret mode off-TPU for validation).
+
+Note on block-sparsity: for causal/windowed masks, real-TPU deployments
+prune fully-masked (iq, ik) grid cells with a block-sparse grid
+(num_kv_blocks per q block); the portable kernel executes them as
+exp(−inf)=0 no-ops so interpret-mode validation covers the same code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_offset: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D) → (B, Sq, H, D)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+
+    sq_p = _round_up(sq, block_q)
+    skv_p = _round_up(skv, block_kv)
+    qt = jnp.swapaxes(q, 1, 2)                       # (B, H, Sq, D)
+    kt = jnp.swapaxes(k, 1, 2)                       # (B, Hkv, Skv, D)
+    vt = jnp.swapaxes(v, 1, 2)
+    if sq_p != sq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+
+    out = flash_attention_pallas(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, q_offset=q_offset,
+        skv_actual=skv, interpret=interpret,
+    )
+    return jnp.swapaxes(out[:, :, :sq], 1, 2)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + window + softcap)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, q_offset: int = 0):
+    """q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D).  Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    n_rep = h // hkv
+    k = jnp.repeat(k, n_rep, axis=2)
+    v = jnp.repeat(v, n_rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    rel = qpos[:, None] - kpos[None, :]
+    valid = jnp.ones_like(rel, bool)
+    if causal:
+        valid &= rel >= 0
+    if window and window > 0:
+        valid &= rel < window
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused 1-D-Newton logistic marginal gains.
+
+Each grid step holds one candidate block X[:, j:j+bn] in VMEM and runs the
+full ``steps``-iteration scalar-Newton recurrence *in registers/VMEM*,
+then emits the per-candidate log-likelihood gain.  Fusion matters here:
+the jnp reference materializes a (d, n) logits tensor per Newton step
+(``steps``+1 HBM round-trips of d·n·4 bytes); the kernel streams X once.
+This is the oracle hot-spot of the paper's logistic-regression experiment
+(Fig. 3: a single oracle sweep took >1 min on their gene dataset).
+
+VMEM per step: d·bn·4 (X block) + ~3·bn·4 + 2·d·4 bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _logistic_kernel(x_ref, y_ref, eta_ref, o_ref, *, steps: int, eps: float):
+    x = x_ref[...]                      # (d, bn)
+    y = y_ref[...]                      # (d, 1)
+    eta = eta_ref[...]                  # (d, 1)
+
+    bn = x.shape[1]
+    w = jnp.zeros((1, bn), jnp.float32)
+
+    def newton(w, _):
+        z = eta + x * w                 # (d, bn)
+        p = jax.nn.sigmoid(z)
+        g = jnp.sum(x * (y - p), axis=0, keepdims=True)
+        h = jnp.sum((x * x) * (p * (1.0 - p)), axis=0, keepdims=True)
+        return w + g / (h + eps), None
+
+    w, _ = jax.lax.scan(newton, w, None, length=steps)
+    z = eta + x * w
+    ll_new = jnp.sum(y * z - jax.nn.softplus(z), axis=0, keepdims=True)
+    ll_old = jnp.sum(y * eta - jax.nn.softplus(eta))
+    o_ref[...] = jnp.maximum(ll_new - ll_old, 0.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("steps", "block_n", "eps", "interpret")
+)
+def logistic_gains_pallas(X, y, eta, *, steps: int = 3, block_n: int = 256,
+                          eps: float = 1e-9, interpret: bool = True):
+    """X: (d, n) with n % block_n == 0; y, eta: (d,).  Returns (n,) f32."""
+    d, n = X.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_logistic_kernel, steps=steps, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, block_n), lambda i: (0, i)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(X, y[:, None], eta[:, None])
+    return out[0]

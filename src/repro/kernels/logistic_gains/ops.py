@@ -1,0 +1,40 @@
+"""Public jit'd wrapper for the logistic-gains kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.logistic_gains.kernel import logistic_gains_pallas
+from repro.kernels.logistic_gains.ref import logistic_gains_ref
+
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block_n(d: int) -> int:
+    for bn in (512, 256, 128):
+        if 4 * (d * bn + 2 * d + 4 * bn) <= _VMEM_BUDGET:
+            return bn
+    return 128
+
+
+def logistic_gains(X, y, eta, *, steps: int = 3,
+                   interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d, n = X.shape
+    dp = _round_up(d, 8)
+    bn = _pick_block_n(dp)
+    np_ = _round_up(n, bn)
+    if dp * np_ > 64 * 1024 * 1024:
+        return logistic_gains_ref(X, y, eta, steps=steps)
+    Xp = jnp.zeros((dp, np_), jnp.float32).at[:d, :n].set(X)
+    yp = jnp.zeros((dp,), jnp.float32).at[:d].set(y)
+    ep = jnp.zeros((dp,), jnp.float32).at[:d].set(eta)
+    out = logistic_gains_pallas(Xp, yp, ep, steps=steps, block_n=bn,
+                                interpret=interpret)
+    return out[:n]

@@ -1,0 +1,4 @@
+from repro.kernels.marginal_gains.ops import regression_gains
+from repro.kernels.marginal_gains.ref import regression_gains_ref
+
+__all__ = ["regression_gains", "regression_gains_ref"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the batched regression marginal-gain computation.
+
+    gain(a) = (x_aᵀ r)² / (‖x_a‖² − ‖Qᵀ x_a‖²)
+
+with gains of in-span columns (denominator ≤ tol·‖x_a‖²) clamped to 0.
+Unnormalized — the objective divides by ‖y‖².
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SPAN_TOL = 1e-6
+
+
+def regression_gains_ref(X, Q, resid, col_sq, *, span_tol: float = SPAN_TOL):
+    """X: (d, n), Q: (d, k) zero-padded orthonormal basis, resid: (d,),
+    col_sq: (n,) = column squared norms of X.  Returns (n,) gains."""
+    c = X.T @ resid                               # (n,)
+    B = Q.T @ X                                   # (k, n)
+    denom = col_sq - jnp.sum(B * B, axis=0)       # (n,)
+    floor = span_tol * jnp.maximum(col_sq, 1.0)
+    gains = (c * c) / jnp.maximum(denom, 1e-30)
+    return jnp.where(denom > floor, gains, 0.0)

@@ -1,0 +1,77 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> …``.
+
+Single-host entry point: reduced configs run directly on CPU/GPU; on a
+TPU pod the same loop runs with ``--mesh`` (the per-host mesh slice comes
+from jax.distributed initialization, which the cluster scheduler
+provides).  The dry-run (launch/dryrun.py) is the no-hardware proof that
+the full configs lower on the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import numpy as np
+
+from repro.configs import TrainConfig, get_config, get_reduced_config
+from repro.data.selection import DashBatchSelector
+from repro.data.synthetic import make_lm_tokens
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.train.loop import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (production) config instead of the "
+                         "reduced smoke config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "topk", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mesh", action="store_true",
+                    help="build a mesh from the host's devices")
+    ap.add_argument("--dash-selection", action="store_true")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    cfg = (get_config(args.arch) if args.full_config
+           else get_reduced_config(args.arch))
+    model = build_model(cfg)
+    tokens = make_lm_tokens(0, max(2_000_000, 4 * args.batch * args.seq),
+                            cfg.vocab_size)
+    n_examples = len(tokens) // args.seq
+
+    def batch_for_step(step):
+        rng = np.random.default_rng(1234 + step)
+        idx = rng.choice(n_examples, size=args.batch, replace=False)
+        rows = np.stack([tokens[i * args.seq:(i + 1) * args.seq]
+                         for i in idx])
+        return {"tokens": rows.astype(np.int32)}
+
+    tcfg = TrainConfig(
+        total_steps=args.steps, learning_rate=args.lr, warmup_steps=20,
+        microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+        checkpoint_every=max(args.steps // 4, 1),
+    )
+    selector = DashBatchSelector(k=args.batch, method="dash") \
+        if args.dash_selection else None
+    mesh = make_host_mesh() if args.mesh else None
+
+    result = train_loop(model, tcfg, batch_for_step, mesh=mesh,
+                        ckpt_dir=args.ckpt_dir, selector=selector,
+                        log_every=max(args.steps // 20, 1))
+    print(f"done: {result.steps_run} steps, "
+          f"loss {result.losses[0]:.3f} → {result.losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Attention: GQA + RoPE + sliding window + logit softcap.
+
+Three execution paths (selected by ``impl``):
+  * ``full``    — materializes (S, S) scores; used for short training
+                  sequences and the reduced smoke configs.
+  * ``chunked`` — flash-attention algorithm (online softmax over KV
+                  chunks) in pure JAX ``lax.scan``; O(S·W) memory.  This
+                  is what the big prefill shapes lower with — it is the
+                  TPU-native adaptation of FlashAttention's insight
+                  (never materialize S², stream KV through fast memory).
+  * ``pallas``  — the Pallas TPU kernel (repro.kernels.flash_attention);
+                  bit-for-bit the same online-softmax recurrence,
+                  validated in interpret mode against ``full``.
+
+Decode (single query position vs a KV cache) has its own entry points,
+including a ring-buffer cache for sliding-window archs so the long_500k
+cache stays O(window), not O(seq).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.rotary import apply_rope
+
+NEG_INF = -1e30
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, S, Hkv, D) → (B, S, Hkv*n_rep, D).  Only used where a kernel
+    needs dense heads; the jnp paths use grouped einsums instead so the
+    repeat is never materialized in HBM."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _group_q(q, n_kv: int):
+    """(B, S, H, D) → (B, S, Hkv, G, D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def qkv_project(params, x, cfg):
+    """x: (B, S, D) → q (B,S,Hq,Dh), k/v (B,S,Hkv,Dh)."""
+    b, s, _ = x.shape
+    a = cfg.attn
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if a.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, a.n_heads, a.head_dim)
+    k = k.reshape(b, s, a.n_kv_heads, a.head_dim)
+    v = v.reshape(b, s, a.n_kv_heads, a.head_dim)
+    return q, k, v
+
+
+def full_attention(q, k, v, *, causal: bool, window: int, softcap: float,
+                   q_offset: int = 0, kv_positions=None):
+    """Reference attention.  q: (B,Sq,H,D), k/v: (B,Skv,Hkv,D).
+    GQA via grouped einsum — the KV repeat is never materialized."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    qg = _group_q(q, hkv)                                  # (B,Sq,Hkv,G,D)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = kv_positions if kv_positions is not None else jnp.arange(skv)
+    rel = qpos[:, None] - jnp.asarray(kpos)[None, :]       # (Sq, Skv)
+    valid = jnp.ones_like(rel, dtype=bool)
+    if causal:
+        valid &= rel >= 0
+    if window and window > 0:
+        valid &= rel < window
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int, softcap: float,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      q_offset: int = 0):
+    """Flash-style attention: q-chunk outer map × kv-chunk online-softmax
+    inner scan, with the inner body rematted.
+
+    Peak live memory is O(q_chunk · kv_chunk) scores — independent of S —
+    in both forward and backward (the remat makes the backward recompute
+    p-blocks instead of saving (q_chunk, S_kv) rows).  Exactly equals
+    ``full_attention`` up to f32 rounding (tested).
+    """
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    nkv = -(-skv // kv_chunk)
+    pad_kv = nkv * kv_chunk - skv
+    kr, vr = k, v
+    if pad_kv:
+        kr = jnp.pad(kr, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    kr = kr.reshape(b, nkv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+    vr = vr.reshape(b, nkv, kv_chunk, hkv, d).transpose(1, 0, 3, 2, 4)
+    # kr/vr: (nkv, B, Hkv, kv_chunk, D) — GQA repeat never materialized
+
+    nq = -(-sq // q_chunk)
+    pad_q = nq * q_chunk - sq
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    qp = qp.reshape(b, nq, q_chunk, hkv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    # qp: (nq, B, Hkv, G, q_chunk, D)
+
+    def per_q_chunk(args):
+        qi, qc = args
+        qpos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def inner_body(carry, inp):
+            acc, m, l = carry               # (B,Hkv,G,Qc,D), (B,Hkv,G,Qc)×2
+            kc, vc, cidx = inp              # (B,Hkv,kc,D)
+            kpos = cidx * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc).astype(jnp.float32) \
+                * scale
+            s = _softcap(s, softcap)
+            rel = qpos[:, None] - kpos[None, :]
+            valid = (kpos < skv)[None, :] | jnp.zeros_like(rel, bool)
+            if causal:
+                valid &= rel >= 0
+            if window and window > 0:
+                valid &= rel < window
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(qc.dtype), vc
+            ).astype(jnp.float32)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(inner_body), (acc0, m0, l0),
+            (kr, vr, jnp.arange(nkv)),
+        )
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    outs = jax.lax.map(per_q_chunk, (jnp.arange(nq), qp))
+    # outs: (nq, B, Hkv, G, q_chunk, D) → (B, Sq, H, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * q_chunk, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, pos, *,
+                     window: int, softcap: float):
+    """Single-step decode: q (B,1,H,D) vs cache (B,C,Hkv,D).
+
+    ``cache_positions``: (B, C) absolute position stored in each cache
+    slot (−1 = empty).  Works for both linear caches (C = max_seq) and
+    ring-buffer sliding-window caches (C = window).  Grouped einsum: the
+    cache is read once, never head-repeated (the cache is the decode
+    working set — repeating it would double HBM traffic).
+    """
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    qg = _group_q(q, hkv)                                  # (B,1,Hkv,G,D)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache).astype(jnp.float32) \
+        * scale
+    s = _softcap(s, softcap)
+    rel = pos[:, None] - cache_positions                   # (B, C)
+    valid = (cache_positions >= 0) & (rel >= 0)
+    if window and window > 0:
+        valid &= rel < window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray            # (B, C, Hkv, Dh)
+    v: jnp.ndarray            # (B, C, Hkv, Dh)
+    positions: jnp.ndarray    # (B, C) int32; −1 = empty
+
+
+def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int, dtype):
+    return KVCache(
+        k=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        positions=jnp.full((batch, capacity), -1, jnp.int32),
+    )
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos):
+    """Write one step at absolute position ``pos`` (B,) into the cache.
+    Ring semantics: slot = pos % capacity (linear caches simply have
+    capacity ≥ max_seq so the mod is the identity)."""
+    cap = cache.k.shape[1]
+    slot = pos % cap                                        # (B,)
+    bidx = jnp.arange(cache.k.shape[0])
+    k = cache.k.at[bidx, slot].set(k_new[:, 0])
+    v = cache.v.at[bidx, slot].set(v_new[:, 0])
+    p = cache.positions.at[bidx, slot].set(pos)
+    return KVCache(k=k, v=v, positions=p)
+
+
+def attention_output(params, attn_out):
+    """(B,S,H,Dh) → (B,S,D)."""
+    b, s, h, d = attn_out.shape
+    return attn_out.reshape(b, s, h * d) @ params["wo"]
+
+
+def attention_block(params, x, cfg, *, impl: str, positions, window_override=None):
+    """Full training/prefill attention block (projection + mix + out)."""
+    from repro.sharding.flags import get_flags
+    from repro.sharding.partitioning import constrain_attention_seq
+
+    a = cfg.attn
+    window = a.window if window_override is None else window_override
+    q, k, v = qkv_project(params, x, cfg)
+    q = apply_rope(q, positions, a.rope_theta, cfg.rope_scaling)
+    k = apply_rope(k, positions, a.rope_theta, cfg.rope_scaling)
+    if get_flags().seq_shard:
+        # context parallelism: shard q over sequence on the model axis;
+        # k/v replicate across it (for GQA/MQA the KV tensors are
+        # n_heads/n_kv× smaller than q, so the gather is cheap) — every
+        # score/output tensor then carries S/model_size query rows.
+        q = constrain_attention_seq(q, replicate=False)
+        k = constrain_attention_seq(k, replicate=True)
+        v = constrain_attention_seq(v, replicate=True)
+    kwargs = dict(causal=a.causal, window=window, softcap=a.softcap)
+    if impl == "full":
+        o = full_attention(q, k, v, **kwargs)
+    elif impl == "chunked":
+        o = chunked_attention(q, k, v, **kwargs)
+    elif impl == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        o = flash_attention(q, k, v, **kwargs)
+    else:
+        raise ValueError(impl)
+    return attention_output(params, o)
+
+
+def init_attention(key, cfg, dtype):
+    a = cfg.attn
+    d = cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d, a.n_heads * a.head_dim)) * scale).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, a.n_kv_heads * a.head_dim)) * scale).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, a.n_kv_heads * a.head_dim)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ko, (a.n_heads * a.head_dim, d))
+               * (a.n_heads * a.head_dim) ** -0.5).astype(dtype),
+    }
+    if a.qkv_bias:
+        p["bq"] = jnp.zeros((a.n_heads * a.head_dim,), dtype)
+        p["bk"] = jnp.zeros((a.n_kv_heads * a.head_dim,), dtype)
+        p["bv"] = jnp.zeros((a.n_kv_heads * a.head_dim,), dtype)
+    return p

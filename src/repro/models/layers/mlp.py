@@ -1,0 +1,35 @@
+"""Dense MLP: gated (SwiGLU/GeGLU) or plain (whisper-style)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def mlp_apply(params, x, cfg):
+    h = x @ params["w1"]
+    if cfg.gated_mlp:
+        h = _act(cfg.activation, h) * (x @ params["w3"])
+    else:
+        h = _act(cfg.activation, h)
+    return h @ params["w2"]
+
+
+def init_mlp(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w1": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(k2, (f, d)) * f ** -0.5).astype(dtype),
+    }
+    if cfg.gated_mlp:
+        p["w3"] = (jax.random.normal(k3, (d, f)) * d ** -0.5).astype(dtype)
+    return p

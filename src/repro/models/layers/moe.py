@@ -1,0 +1,152 @@
+"""Mixture-of-Experts layer with capacity-bounded sort dispatch + EP.
+
+Token-choice top-k routing.  Dispatch is sort-based (MegaBlocks-style
+grouping adapted to static shapes):
+
+  1. router logits → top-k (expert, weight) per token,
+  2. stable-sort the T·k assignments by expert id,
+  3. position-in-expert by segment arithmetic; tokens beyond the
+     per-expert capacity C = ⌈T·k/E⌉·capacity_factor are dropped,
+  4. scatter into an (E, C, D) buffer, dense per-expert GEMMs,
+  5. gather back, unsort, combine with routing weights.
+
+Expert parallelism: the (E, C, D) buffer and the (E, D, F) expert weights
+are sharded over the ``model`` axis on E (sharding/partitioning.py), so
+GSPMD materializes the dispatch/return as all-to-alls — the collective
+the roofline's MoE rows account for.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.mlp import _act
+from repro.sharding.partitioning import (
+    constrain_moe_buffer,
+    constrain_moe_hidden,
+)
+
+
+def _dispatch_group(xt, flat_e, e: int, cap: int, topk: int):
+    """Sort-based dispatch for one token group.
+
+    xt: (T, D), flat_e: (T·k,) expert ids.  Returns
+    (buf (E, cap, D), dest, keep, sort_idx, counts)."""
+    t, d = xt.shape
+    tk = flat_e.shape[0]
+    sort_idx = jnp.argsort(flat_e)                          # stable
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.bincount(flat_e, length=e)                 # (E,)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]]
+    )
+    pos = jnp.arange(tk) - starts[sorted_e]                 # pos within expert
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)   # overflow slot
+    token_of = sort_idx // topk                             # original token id
+    src = xt[token_of]                                      # (T·k, D)
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[dest].add(
+        src * keep[:, None].astype(xt.dtype)
+    )
+    return buf[: e * cap].reshape(e, cap, d), dest, keep, sort_idx, counts
+
+
+def _combine_group(out_buf, dest, keep, sort_idx, e: int, cap: int,
+                   topk: int, dtype):
+    """Inverse of _dispatch_group: (E, cap, D) → (T, k, D)."""
+    tk = dest.shape[0]
+    d = out_buf.shape[-1]
+    out_sorted = out_buf.reshape(e * cap, d)[jnp.minimum(dest, e * cap - 1)]
+    out_sorted = out_sorted * keep[:, None].astype(dtype)
+    out_flat = jnp.zeros((tk, d), dtype).at[sort_idx].set(out_sorted)
+    return out_flat.reshape(tk // topk, topk, d)
+
+
+def moe_apply(params, x, cfg):
+    """x: (B, S, D) → (B, S, D), aux_loss (scalar f32).
+
+    With ``moe_groups = G`` (perf flag) the token axis is pre-split into
+    G groups aligned with the data sharding, and the sort/scatter
+    dispatch runs vmapped per group — the permutation then never crosses
+    shards, so GSPMD emits all-to-alls instead of gathering the full
+    (T, D) token array (the dominant collective of the naive layout)."""
+    from repro.sharding.flags import get_flags
+
+    b, s, d = x.shape
+    m = cfg.moe
+    e, topk = m.n_experts, m.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)    # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, topk)               # (T, k)
+    top_w = top_w / jnp.maximum(
+        jnp.sum(top_w, axis=-1, keepdims=True), 1e-9
+    )
+    flat_e = top_e.reshape(-1)                              # (T·k,)
+    tk = t * topk
+
+    groups = get_flags().moe_groups
+    if groups and t % groups == 0 and b % groups == 0:
+        g = groups
+        cap = max(int(-(-tk // (g * e)) * m.capacity_factor), 1)
+        xg = xt.reshape(g, t // g, d)
+        eg = flat_e.reshape(g, tk // g)
+        buf, dest, keep, sort_idx, counts = jax.vmap(
+            lambda xx, ee: _dispatch_group(xx, ee, e, cap, topk)
+        )(xg, eg)
+        # (G, E, cap, D) → (E, G·cap, D): the capacity dim carries the
+        # group (=data) sharding through the expert GEMMs
+        buf = buf.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+        counts = jnp.sum(counts, axis=0)
+    else:
+        g = 1
+        cap = max(int(-(-tk // e) * m.capacity_factor), 1)
+        buf, dest, keep, sort_idx, counts = _dispatch_group(
+            xt, flat_e, e, cap, topk)
+    buf = constrain_moe_buffer(buf, e)
+
+    # dense per-expert GEMMs (E-sharded, or C×f 2D-sharded under moe_2d)
+    h = constrain_moe_hidden(
+        jnp.einsum("ecd,edf->ecf", buf, params["w1"]), e)
+    if m.gated:
+        h = _act(cfg.activation, h) * constrain_moe_hidden(
+            jnp.einsum("ecd,edf->ecf", buf, params["w3"]), e)
+    else:
+        h = _act(cfg.activation, h)
+    out_buf = constrain_moe_buffer(
+        jnp.einsum("ecf,efd->ecd", h, params["w2"]), e)
+
+    if g > 1:
+        out_g = out_buf.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
+        out_tk = jax.vmap(
+            lambda ob, de, ke, si: _combine_group(
+                ob, de, ke, si, e, cap, topk, x.dtype)
+        )(out_g, dest, keep, sort_idx)                      # (G, T/g, k, D)
+        out = out_tk.reshape(t, topk, d)
+    else:
+        out = _combine_group(out_buf, dest, keep, sort_idx, e, cap, topk,
+                             x.dtype)
+    out = out * top_w[..., None].astype(x.dtype)
+    out = jnp.sum(out, axis=1).reshape(b, s, d)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    dispatch_frac = counts.astype(jnp.float32) / tk
+    aux = e * jnp.sum(me * dispatch_frac) * m.aux_loss_weight
+    return out, aux
+
+
+def init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    p = {
+        "router": (jax.random.normal(kr, (d, e)) * d ** -0.5).astype(dtype),
+        "w1": (jax.random.normal(k1, (e, d, f)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(k2, (e, f, d)) * f ** -0.5).astype(dtype),
+    }
+    if cfg.moe.gated:
+        p["w3"] = (jax.random.normal(k3, (e, d, f)) * d ** -0.5).astype(dtype)
+    return p

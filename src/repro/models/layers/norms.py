@@ -1,0 +1,52 @@
+"""Normalization layers.  All normalize in f32 and cast back.
+
+``nonparametric`` is OLMo's LayerNorm without affine parameters
+(arXiv:2402.00838 §2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf / jnp.sqrt(ms + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) / jnp.sqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparametric_ln(x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) / jnp.sqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, params, x):
+    """Dispatch by config.norm.  ``params`` may be None (nonparametric)."""
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    if kind == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    if kind == "nonparametric":
+        return nonparametric_ln(x)
+    raise ValueError(kind)
+
+
+def init_norm(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparametric":
+        return {}
+    raise ValueError(kind)

@@ -1,0 +1,177 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Temporal-mixing block:
+
+    branch = W_in·x ;  gate = GeLU(W_gate·x)
+    xc     = CausalConv1D(branch)                      (depthwise, width 4)
+    r_t    = σ(W_a·xc + b_a);   i_t = σ(W_i·xc + b_i)
+    log a_t = −c · softplus(Λ) · r_t                   (a_t ∈ (0,1))
+    h_t    = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ xc)
+    out    = W_out·(h ⊙ gate)
+
+Training/prefill uses ``jax.lax.associative_scan`` over time — O(log S)
+depth, the TPU-native replacement for a sequential RNN loop.  Decode is a
+single recurrence step with O(1) state: (h, conv tail) — this is what
+makes the long_500k cell affordable for this arch.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray          # (B, W) recurrent state
+    conv: jnp.ndarray       # (B, conv_width−1, W) conv tail
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv.  x: (B, S, W), w: (CW, W)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def _gate_matmul(xc, w):
+    """Full (W, W) gate, or block-local (P, W/P, W/P) gate: the latter is
+    a sharding-diagonal structure — with blocks on the model axis the
+    gate never mixes across shards, so the recurrent interior needs zero
+    collectives (perf flag rglru_block_gates; DESIGN.md §7)."""
+    if w.ndim == 2:
+        return xc @ w
+    p, bw, _ = w.shape
+    b_, s, W = xc.shape
+    xb = xc.reshape(b_, s, p, bw)
+    return jnp.einsum("bspw,pwv->bspv", xb, w).reshape(b_, s, W)
+
+
+def _gates(params, xc, c_exp):
+    r = jax.nn.sigmoid(_gate_matmul(xc, params["w_a"]) + params["b_a"])
+    i = jax.nn.sigmoid(_gate_matmul(xc, params["w_i"]) + params["b_i"])
+    log_a = (-c_exp * jax.nn.softplus(params["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = beta * (i.astype(jnp.float32) * xc.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(params, x, cfg, state: RGLRUState | None = None):
+    """Train/prefill path.  x: (B, S, D) → (B, S, D), final state."""
+    from repro.sharding import constrain
+
+    rc = cfg.recurrent
+    # Width-shard the whole recurrent interior: conv, gates and the
+    # associative scan are elementwise over W, so with W on the model
+    # axis the only collectives left are the gate matmuls' reductions.
+    branch = constrain(x @ params["w_in"], "width")        # (B, S, W)
+    gate = constrain(jax.nn.gelu(x @ params["w_gate"]), "width")
+    if state is not None:
+        xfull = jnp.concatenate([state.conv.astype(branch.dtype), branch], axis=1)
+        xc = _causal_conv(xfull, params["conv"])[:, state.conv.shape[1]:]
+    else:
+        xc = _causal_conv(branch, params["conv"])
+    xc = constrain(xc, "width")
+    a, b = _gates(params, xc, rc.c_exponent)               # (B,S,W) f32
+    a = constrain(a, "width")
+    b = constrain(b, "width")
+
+    h0 = None if state is None else state.h.astype(jnp.float32)
+    if h0 is not None:
+        # fold the incoming state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    from repro.sharding.flags import get_flags
+
+    chunk = get_flags().rglru_chunk
+    if chunk and x.shape[1] > chunk:
+        # Chunked scan (perf flag): bound the associative scan's live set
+        # (and its backward residuals) to one chunk.  Padding with
+        # (a=1, b=0) steps is state-neutral.
+        B, S, W = a.shape
+        pad = (-S) % chunk
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        nc = a.shape[1] // chunk
+        ac = a.reshape(B, nc, chunk, W).transpose(1, 0, 2, 3)
+        bc = b.reshape(B, nc, chunk, W).transpose(1, 0, 2, 3)
+
+        def chunk_body(hprev, inp):
+            aj, bj = inp
+            bj = bj.at[:, 0, :].add(aj[:, 0, :] * hprev)
+            _, hj = jax.lax.associative_scan(combine, (aj, bj), axis=1)
+            return hj[:, -1, :], hj
+
+        _, hs = jax.lax.scan(jax.checkpoint(chunk_body),
+                             jnp.zeros((B, W), jnp.float32), (ac, bc))
+        h = hs.transpose(1, 0, 2, 3).reshape(B, nc * chunk, W)[:, :S]
+    else:
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(x.dtype) * gate) @ params["w_out"]
+    tail = branch[:, -(rc.conv_width - 1):, :] if branch.shape[1] >= rc.conv_width - 1 \
+        else jnp.pad(branch, ((0, 0), (rc.conv_width - 1 - branch.shape[1], 0), (0, 0)))
+    new_state = RGLRUState(h=h[:, -1, :].astype(x.dtype), conv=tail)
+    return out, new_state
+
+
+def rglru_decode_step(params, x, cfg, state: RGLRUState):
+    """x: (B, 1, D) single step."""
+    rc = cfg.recurrent
+    branch = x @ params["w_in"]                            # (B, 1, W)
+    gate = jax.nn.gelu(x @ params["w_gate"])               # gates handled
+    # by _gates → _gate_matmul (works for both full and block-local)
+    xfull = jnp.concatenate([state.conv.astype(branch.dtype), branch], axis=1)
+    xc = _causal_conv(xfull, params["conv"])[:, -1:, :]
+    a, b = _gates(params, xc, rc.c_exponent)               # (B,1,W)
+    h = a[:, 0] * state.h.astype(jnp.float32) + b[:, 0]
+    out = (h[:, None, :].astype(x.dtype) * gate) @ params["w_out"]
+    conv_tail = xfull[:, -(rc.conv_width - 1):, :]
+    return out, RGLRUState(h=h.astype(x.dtype), conv=conv_tail)
+
+
+def init_rglru_state(batch: int, cfg, dtype) -> RGLRUState:
+    rc = cfg.recurrent
+    return RGLRUState(
+        h=jnp.zeros((batch, rc.width), dtype),
+        conv=jnp.zeros((batch, rc.conv_width - 1, rc.width), dtype),
+    )
+
+
+def init_rglru(key, cfg, dtype):
+    from repro.sharding.flags import get_flags
+
+    d = cfg.d_model
+    w = cfg.recurrent.width
+    cw = cfg.recurrent.conv_width
+    ks = jax.random.split(key, 6)
+    if get_flags().rglru_block_gates and w % 16 == 0:
+        bw = w // 16
+        wa = (jax.random.normal(ks[3], (16, bw, bw)) * bw ** -0.5).astype(dtype)
+        wi = (jax.random.normal(ks[4], (16, bw, bw)) * bw ** -0.5).astype(dtype)
+    else:
+        wa = (jax.random.normal(ks[3], (w, w)) * w ** -0.5).astype(dtype)
+        wi = (jax.random.normal(ks[4], (w, w)) * w ** -0.5).astype(dtype)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, w)) * d ** -0.5).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d, w)) * d ** -0.5).astype(dtype),
+        "conv": (jax.random.normal(ks[2], (cw, w)) * cw ** -0.5).astype(dtype),
+        "w_a": wa,
+        "b_a": jnp.zeros((w,), dtype),
+        "w_i": wi,
+        "b_i": jnp.zeros((w,), dtype),
+        # Λ init so a ≈ 0.9–0.999 under r≈0.5 (Griffin's init range)
+        "lam": jnp.linspace(0.0, 2.0, w).astype(dtype),
+        "w_out": (jax.random.normal(ks[5], (w, d)) * w ** -0.5).astype(dtype),
+    }

@@ -1,0 +1,26 @@
+"""Rotary position embeddings (RoPE)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float, scaling: float = 1.0):
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return inv / scaling
+
+
+def apply_rope(x, positions, theta: float, scaling: float = 1.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    half = x.shape[-1] // 2
+    inv = rope_freqs(x.shape[-1], theta, scaling)          # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)

@@ -1,0 +1,269 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM.
+
+Block skeleton (both kinds):   u = x·W_up → (a, g);  h = core(a);
+                               out = W_down(h ⊙ SiLU(g))
+
+mLSTM core (per head, matrix memory C ∈ R^{dh×dh}, stabilizer m):
+    C_t = f'_t C_{t−1} + i'_t v_t k_tᵀ ;  n_t = f'_t n_{t−1} + i'_t k_t
+    h_t = C_t q_t / max(|n_tᵀ q_t|, e^{−m_t})
+with log-space stabilization m_t = max(log f_t + m_{t−1}, ĩ_t).
+
+Training/prefill uses the **chunkwise-parallel** form: a ``lax.scan`` over
+chunks of ``chunk_size`` carrying (C, n, m); within a chunk the quadratic
+(W×W) decay-masked form runs on the MXU.  Cost O(S·W) — linear in S —
+which is what qualifies this arch for the long_500k cell.  Decode is the
+O(1)-state recurrence.
+
+sLSTM core: scalar memory with recurrent gate mixing (R·h_{t−1}) — the
+recurrence is not associative, so it is an honest ``lax.scan`` over time.
+
+Deviation noted in DESIGN.md: the paper's pre/post-projection factors are
+simplified to a single 2× up-projection gate; head counts/dims follow the
+assigned config.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray    # (B, H, Dh, Dh)
+    n: jnp.ndarray    # (B, H, Dh)
+    m: jnp.ndarray    # (B, H)
+
+
+class SLSTMState(NamedTuple):
+    h: jnp.ndarray    # (B, H, Dh)
+    c: jnp.ndarray    # (B, H, Dh)
+    n: jnp.ndarray    # (B, H, Dh)
+    m: jnp.ndarray    # (B, H, Dh)
+
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkvg(params, a, xcfg):
+    b, s, d = a.shape
+    h, dh = xcfg.n_heads, xcfg.head_dim
+    q = (a @ params["wq"]).reshape(b, s, h, dh) * (dh ** -0.5)
+    k = (a @ params["wk"]).reshape(b, s, h, dh)
+    v = (a @ params["wv"]).reshape(b, s, h, dh)
+    ig = (a @ params["wi"]).astype(jnp.float32)            # (B,S,H) input gate
+    fg = (a @ params["wf"]).astype(jnp.float32)            # (B,S,H) forget gate
+    return q, k, v, ig, fg
+
+
+def mlstm_chunkwise(params, a, xcfg, state: MLSTMState):
+    """a: (B, S, D).  S is padded up to a chunk multiple with
+    state-neutral steps (input gate −∞ ⇒ i′=0, forget log 0 ⇒ f′=1) so the
+    carried (C, n, m) state is exact regardless of padding."""
+    b, s, d = a.shape
+    H, dh = xcfg.n_heads, xcfg.head_dim
+    W = min(xcfg.chunk_size, s)
+    q, k, v, ig, fg = _mlstm_qkvg(params, a, xcfg)
+    pad = (-s) % W
+    if pad:
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=NEG)      # i′ = 0: no state write
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)),
+                     constant_values=40.0)     # log σ(40) ≈ 0: no decay
+        s_pad = s + pad
+    else:
+        s_pad = s
+    s_orig, s = s, s_pad
+    nc = s // W
+    # reshape to chunks: (nc, B, H, W, ...)
+    def rc(x, tail):
+        return x.reshape(b, nc, W, *tail).transpose(1, 0, *range(3, 3 + len(tail)), 2) \
+            if False else x
+
+    q = q.reshape(b, nc, W, H, dh).transpose(1, 0, 3, 2, 4)   # (nc,B,H,W,dh)
+    k = k.reshape(b, nc, W, H, dh).transpose(1, 0, 3, 2, 4)
+    v = v.reshape(b, nc, W, H, dh).transpose(1, 0, 3, 2, 4)
+    ig = ig.reshape(b, nc, W, H).transpose(1, 0, 3, 2)        # (nc,B,H,W)
+    logf = jax.nn.log_sigmoid(fg).reshape(b, nc, W, H).transpose(1, 0, 3, 2)
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry                                    # (B,H,dh,dh),(B,H,dh),(B,H)
+        qc, kc, vc, igc, lfc = inp
+        F = jnp.cumsum(lfc, axis=-1)                          # (B,H,W) inclusive
+        Ftot = F[..., -1]
+        # D_{ts} = F_t − F_s + ĩ_s  for s ≤ t
+        Dm = F[..., :, None] - F[..., None, :] + igc[..., None, :]
+        tri = jnp.tril(jnp.ones((W, W), bool))
+        Dm = jnp.where(tri, Dm, NEG)
+        m_intra = jnp.max(Dm, axis=-1)                        # (B,H,W)
+        m_t = jnp.maximum(F + m0[..., None], m_intra)
+        Sw = jnp.exp(Dm - m_t[..., None])                     # (B,H,W,W)
+        g_t = jnp.exp(F + m0[..., None] - m_t)                # (B,H,W)
+
+        qk = jnp.einsum("bhtd,bhsd->bhts", qc, kc).astype(jnp.float32)
+        intra = jnp.einsum("bhts,bhsd->bhtd", Sw * qk, vc.astype(jnp.float32))
+        inter = g_t[..., None] * jnp.einsum(
+            "bhde,bhte->bhtd", C0, qc.astype(jnp.float32)
+        )
+        n_t = g_t[..., None] * n0[..., None, :] + jnp.einsum(
+            "bhts,bhsd->bhtd", Sw, kc.astype(jnp.float32)
+        )
+        qn = jnp.einsum("bhtd,bhtd->bht", n_t, qc.astype(jnp.float32))
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        h = (intra + inter) / denom[..., None]                # (B,H,W,dh)
+
+        # chunk-end carry
+        m_out = jnp.maximum(Ftot + m0, jnp.max(Ftot[..., None] - F + igc, axis=-1))
+        wts = jnp.exp(Ftot[..., None] - F + igc - m_out[..., None])  # (B,H,W)
+        C_new = jnp.exp(Ftot + m0 - m_out)[..., None, None] * C0 + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", wts, vc.astype(jnp.float32), kc.astype(jnp.float32)
+        )
+        n_new = jnp.exp(Ftot + m0 - m_out)[..., None] * n0 + jnp.einsum(
+            "bhs,bhsd->bhd", wts, kc.astype(jnp.float32)
+        )
+        return (C_new, n_new, m_out), h
+
+    carry0 = (state.C.astype(jnp.float32), state.n.astype(jnp.float32),
+              state.m.astype(jnp.float32))
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, carry0, (q, k, v, ig, logf))
+    # hs: (nc, B, H, W, dh) → (B, S, H*dh)
+    out = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, H * dh).astype(a.dtype)
+    return out[:, :s_orig], MLSTMState(C=Cf.astype(a.dtype),
+                                       n=nf.astype(a.dtype), m=mf)
+
+
+def mlstm_decode_step(params, a, xcfg, state: MLSTMState):
+    """a: (B, 1, D) → (B, 1, H*Dh), new state."""
+    b = a.shape[0]
+    H, dh = xcfg.n_heads, xcfg.head_dim
+    q, k, v, ig, fg = _mlstm_qkvg(params, a, xcfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                      # (B,H,dh)
+    ig, lf = ig[:, 0], jax.nn.log_sigmoid(fg[:, 0])          # (B,H)
+    m0 = state.m.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m0, ig)
+    fprime = jnp.exp(lf + m0 - m_new)[..., None]
+    iprime = jnp.exp(ig - m_new)[..., None]
+    C = fprime[..., None] * state.C.astype(jnp.float32) + iprime[..., None] * (
+        v.astype(jnp.float32)[..., :, None] * k.astype(jnp.float32)[..., None, :]
+    )
+    n = fprime * state.n.astype(jnp.float32) + iprime * k.astype(jnp.float32)
+    qn = jnp.sum(n * q.astype(jnp.float32), axis=-1)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h = jnp.einsum("bhde,bhe->bhd", C, q.astype(jnp.float32)) / denom[..., None]
+    out = h.reshape(b, 1, H * dh).astype(a.dtype)
+    return out, MLSTMState(C=C.astype(a.dtype), n=n.astype(a.dtype), m=m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_scan(params, a, xcfg, state: SLSTMState):
+    """a: (B, S, D).  Sequential scan (non-associative recurrence)."""
+    b, s, d = a.shape
+    H, dh = xcfg.n_heads, xcfg.head_dim
+    gates_x = (a @ params["w_gates"]).reshape(b, s, H, 4, dh)
+
+    def step(carry, gx):
+        h, c, n, m = carry                                   # (B,H,dh) f32
+        rec = jnp.einsum("bhd,hdge->bhge", h,
+                         params["r_gates"].astype(jnp.float32))
+        z = gx.astype(jnp.float32) + rec                     # (B,H,4,dh)
+        it, ft, zt, ot = z[:, :, 0], z[:, :, 1], z[:, :, 2], z[:, :, 3]
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(lf + m - m_new)
+        c_new = fp * c + ip * jnp.tanh(zt)
+        n_new = fp * n + ip
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+        return (h_new, c_new, n_new, m_new), h_new
+
+    carry0 = tuple(x.astype(jnp.float32) for x in state)
+    (h, c, n, m), hs = jax.lax.scan(step, carry0, gates_x.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1).reshape(b, s, H * dh).astype(a.dtype)
+    new = SLSTMState(*(x.astype(a.dtype) for x in (h, c, n, m)))
+    return out, new
+
+
+def slstm_decode_step(params, a, xcfg, state: SLSTMState):
+    out, new = slstm_scan(params, a, xcfg, state)
+    return out, new
+
+
+# ---------------------------------------------------------------------------
+# block wrappers + init
+# ---------------------------------------------------------------------------
+
+def xlstm_block_apply(kind, params, x, cfg, state, *, decode: bool):
+    """Pre-norm residual block with up-projection gate.
+
+    u = x·W_up → (a ∈ R^D branch, g ∈ R^{H·Dh} gate); the gate matches the
+    core's output width so head_dim need not equal d_model/n_heads."""
+    xcfg = cfg.xlstm
+    d = cfg.d_model
+    u = x @ params["w_up"]                                   # (B,S,D+inner)
+    a, g = u[..., :d], u[..., d:]
+    if kind == "mlstm":
+        if decode:
+            h, new_state = mlstm_decode_step(params, a, xcfg, state)
+        else:
+            h, new_state = mlstm_chunkwise(params, a, xcfg, state)
+    else:
+        h, new_state = (slstm_decode_step if decode else slstm_scan)(
+            params, a, xcfg, state
+        )
+    out = (h * jax.nn.silu(g)) @ params["w_down"]
+    return out, new_state
+
+
+def init_xlstm_state(kind: str, batch: int, cfg, dtype):
+    x = cfg.xlstm
+    H, dh = x.n_heads, x.head_dim
+    if kind == "mlstm":
+        return MLSTMState(
+            C=jnp.zeros((batch, H, dh, dh), dtype),
+            n=jnp.zeros((batch, H, dh), dtype),
+            m=jnp.full((batch, H), 0.0, jnp.float32),
+        )
+    return SLSTMState(
+        h=jnp.zeros((batch, H, dh), dtype),
+        c=jnp.zeros((batch, H, dh), dtype),
+        n=jnp.zeros((batch, H, dh), dtype),
+        m=jnp.zeros((batch, H, dh), jnp.float32),
+    )
+
+
+def init_xlstm_block(key, kind: str, cfg, dtype):
+    d = cfg.d_model
+    x = cfg.xlstm
+    H, dh = x.n_heads, x.head_dim
+    inner = H * dh
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_up": (jax.random.normal(ks[0], (d, d + inner)) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[1], (inner, d)) * inner ** -0.5).astype(dtype),
+    }
+    if kind == "mlstm":
+        p.update(
+            wq=(jax.random.normal(ks[2], (d, inner)) * d ** -0.5).astype(dtype),
+            wk=(jax.random.normal(ks[3], (d, inner)) * d ** -0.5).astype(dtype),
+            wv=(jax.random.normal(ks[4], (d, inner)) * d ** -0.5).astype(dtype),
+            wi=(jax.random.normal(ks[5], (d, H)) * d ** -0.5).astype(dtype),
+            wf=(jax.random.normal(ks[6], (d, H)) * d ** -0.5 + 2.0).astype(dtype),
+        )
+    else:
+        p.update(
+            w_gates=(jax.random.normal(ks[2], (d, 4 * inner)) * d ** -0.5).astype(dtype),
+            r_gates=(jax.random.normal(ks[3], (H, dh, 4, dh)) * dh ** -0.5).astype(dtype),
+        )
+    return p

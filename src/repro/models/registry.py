@@ -1,0 +1,15 @@
+"""Model factory: ``build_model(cfg_or_arch_id)``."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Model
+
+
+def build_model(cfg) -> Model:
+    if isinstance(cfg, str):
+        from repro.configs.registry import get_config
+
+        cfg = get_config(cfg)
+    assert isinstance(cfg, ModelConfig), type(cfg)
+    return Model(cfg.validate())

@@ -1,0 +1,495 @@
+"""Unified model assembly for every assigned architecture family.
+
+One ``Model`` covers: dense/MoE decoder LMs, hybrid (RG-LRU + local
+attention), xLSTM, encoder-decoder (whisper) and VLM (stub frontend).
+Layer heterogeneity is expressed by ``cfg.block_pattern``: layers are
+grouped into ``n_super = n_layers / period`` *super-blocks*; parameters of
+each pattern position are stacked over super-blocks and the forward pass
+is a ``lax.scan`` over super-blocks (small HLO, fast compiles, and the
+natural unit for remat).
+
+Entry points
+------------
+  init(key)                      → params (also works under eval_shape)
+  loss(params, batch)            → scalar LM loss + aux (train_step target)
+  prefill(params, batch)         → (last_logits, cache)
+  decode_step(params, cache, tok, pos) → (logits, cache)
+  init_cache(batch, capacity)    → decode cache pytree
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import attention as attn_mod
+from repro.models.layers.attention import (
+    KVCache,
+    attention_block,
+    attention_output,
+    cache_update,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+    qkv_project,
+)
+from repro.models.layers.mlp import init_mlp, mlp_apply
+from repro.models.layers.moe import init_moe, moe_apply
+from repro.models.layers.norms import apply_norm, init_norm
+from repro.models.layers.rglru import (
+    init_rglru,
+    init_rglru_state,
+    rglru_apply,
+    rglru_decode_step,
+)
+from repro.models.layers.rotary import apply_rope
+from repro.models.layers.xlstm import (
+    init_xlstm_block,
+    init_xlstm_state,
+    xlstm_block_apply,
+)
+from repro.sharding import constrain
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_block(key, kind: str, cfg: ModelConfig, pdt, *, cross_attn: bool):
+    ks = jax.random.split(key, 6)
+    p: dict = {"norm1": init_norm(cfg.norm, cfg.d_model, pdt)}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = init_attention(ks[0], cfg, pdt)
+    elif kind == "rglru":
+        p["rglru"] = init_rglru(ks[0], cfg, pdt)
+    elif kind in ("mlstm", "slstm"):
+        p["xlstm"] = init_xlstm_block(ks[0], kind, cfg, pdt)
+    else:
+        raise ValueError(kind)
+    if cross_attn:
+        p["norm_x"] = init_norm(cfg.norm, cfg.d_model, pdt)
+        p["xattn"] = init_attention(ks[1], cfg, pdt)
+    if cfg.d_ff > 0:
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, pdt)
+        if cfg.moe is not None:
+            p["moe"] = init_moe(ks[2], cfg, pdt)
+        else:
+            p["mlp"] = init_mlp(ks[2], cfg, pdt)
+    return p
+
+
+def _apply_mixer(kind, p, x, cfg, *, impl, positions, cache, pos, decode,
+                 enc_out=None):
+    """Temporal mixing for one block.  Returns (y, new_cache_entry)."""
+    a = cfg.attn
+    if kind in ("attn", "local_attn"):
+        window = a.window if kind == "attn" else (a.window or 2048)
+        if kind == "local_attn":
+            window = a.window if a.window else 2048
+        if not decode:
+            y = attention_block(
+                p["attn"], x, cfg, impl=impl, positions=positions,
+                window_override=window,
+            )
+            if cache is not None:
+                # prefill: also populate the KV cache
+                q, k, v = qkv_project(p["attn"], x, cfg)
+                k = apply_rope(k, positions, a.rope_theta, cfg.rope_scaling)
+                v_ = v
+                cap = cache.k.shape[1]
+                s = k.shape[1]
+                if cap >= s:
+                    newk = jax.lax.dynamic_update_slice(
+                        cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+                    newv = jax.lax.dynamic_update_slice(
+                        cache.v, v_.astype(cache.v.dtype), (0, 0, 0, 0))
+                    posline = jnp.broadcast_to(
+                        jnp.arange(s, dtype=jnp.int32)[None],
+                        (x.shape[0], s))
+                    newpos = cache.positions.at[:, :s].set(posline)
+                    cache = KVCache(newk, newv, newpos)
+                else:
+                    # ring cache (window): keep the last `cap` positions
+                    tail_k = k[:, -cap:].astype(cache.k.dtype)
+                    tail_v = v_[:, -cap:].astype(cache.v.dtype)
+                    tpos = jnp.arange(s - cap, s, dtype=jnp.int32)
+                    slots = tpos % cap
+                    order = jnp.argsort(slots)
+                    cache = KVCache(
+                        tail_k[:, order], tail_v[:, order],
+                        jnp.broadcast_to(tpos[order][None],
+                                         (x.shape[0], cap)),
+                    )
+            return y, cache
+        # decode
+        q, k, v = qkv_project(p["attn"], x, cfg)
+        q = apply_rope(q, pos[:, None], a.rope_theta, cfg.rope_scaling)
+        k = apply_rope(k, pos[:, None], a.rope_theta, cfg.rope_scaling)
+        cache = cache_update(cache, k.astype(cache.k.dtype),
+                             v.astype(cache.v.dtype), pos)
+        o = decode_attention(q, cache.k, cache.v, cache.positions, pos,
+                             window=window, softcap=a.softcap)
+        return attention_output(p["attn"], o), cache
+    if kind == "rglru":
+        if decode:
+            return rglru_decode_step(p["rglru"], x, cfg, cache)
+        y, st = rglru_apply(p["rglru"], x, cfg,
+                            state=cache if decode else None)
+        return y, (st if cache is not None else cache)
+    if kind in ("mlstm", "slstm"):
+        state = cache if cache is not None else init_xlstm_state(
+            kind, x.shape[0], cfg, x.dtype)
+        y, st = xlstm_block_apply(kind, p["xlstm"], x, cfg, state,
+                                  decode=decode)
+        return y, (st if cache is not None else cache)
+    raise ValueError(kind)
+
+
+def _apply_cross_attn(p, x, enc_out, cfg):
+    """Decoder cross-attention (whisper).  No RoPE, non-causal."""
+    b, s, _ = x.shape
+    a = cfg.attn
+    q = (x @ p["xattn"]["wq"]).reshape(b, s, a.n_heads, a.head_dim)
+    k = (enc_out @ p["xattn"]["wk"]).reshape(
+        b, enc_out.shape[1], a.n_kv_heads, a.head_dim)
+    v = (enc_out @ p["xattn"]["wv"]).reshape(
+        b, enc_out.shape[1], a.n_kv_heads, a.head_dim)
+    o = attn_mod.full_attention(q, k, v, causal=False, window=0, softcap=0.0)
+    return attention_output(p["xattn"], o)
+
+
+def _apply_block(kind, p, x, cfg, *, impl, positions, cache, pos, decode,
+                 enc_out=None):
+    y, new_cache = _apply_mixer(
+        kind, p, apply_norm(cfg.norm, p.get("norm1"), x), cfg,
+        impl=impl, positions=positions, cache=cache, pos=pos, decode=decode,
+    )
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if enc_out is not None and "xattn" in p:
+        x = x + _apply_cross_attn(
+            p, apply_norm(cfg.norm, p.get("norm_x"), x), enc_out, cfg)
+    if cfg.d_ff > 0:
+        h = apply_norm(cfg.norm, p.get("norm2"), x)
+        if cfg.moe is not None:
+            mo, aux = moe_apply(p["moe"], h, cfg)
+            x = x + mo
+        else:
+            x = x + mlp_apply(p["mlp"], h, cfg)
+    x = constrain(x)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---- init ------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        pdt = _dtype(cfg.param_dtype)
+        n_super = cfg.n_layers // cfg.pattern_period
+        keys = jax.random.split(key, 8)
+        vp = cfg.padded_vocab
+        params: dict = {
+            "embed": (jax.random.normal(keys[0], (vp, cfg.d_model))
+                      * cfg.d_model ** -0.5).astype(pdt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(keys[1], (cfg.d_model, vp))
+                * cfg.d_model ** -0.5
+            ).astype(pdt)
+        params["final_norm"] = init_norm(cfg.norm, cfg.d_model, pdt)
+        if cfg.vision is not None:
+            params["img_proj"] = (
+                jax.random.normal(keys[2], (cfg.vision.embed_dim, cfg.d_model))
+                * cfg.vision.embed_dim ** -0.5
+            ).astype(pdt)
+
+        cross = cfg.is_encdec
+
+        def init_super(k):
+            kk = jax.random.split(k, cfg.pattern_period)
+            return tuple(
+                _init_block(kk[j], kind, cfg, pdt, cross_attn=cross)
+                for j, kind in enumerate(cfg.block_pattern)
+            )
+
+        params["blocks"] = jax.vmap(init_super)(
+            jax.random.split(keys[3], n_super))
+
+        if cfg.is_encdec:
+            enc = cfg.encoder
+
+            def init_enc(k):
+                ks = jax.random.split(k, 3)
+                return {
+                    "norm1": init_norm(cfg.norm, cfg.d_model, pdt),
+                    "enc_attn": init_attention(ks[0], cfg, pdt),
+                    "norm2": init_norm(cfg.norm, cfg.d_model, pdt),
+                    "mlp": init_mlp(ks[1], cfg, pdt),
+                }
+
+            params["enc_blocks"] = jax.vmap(init_enc)(
+                jax.random.split(keys[4], enc.n_layers))
+            params["enc_final_norm"] = init_norm(cfg.norm, cfg.d_model, pdt)
+        return params
+
+    # ---- encoder (whisper) ------------------------------------------------
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(_dtype(cfg.dtype))
+        positions = jnp.arange(x.shape[1])
+
+        def enc_block_nc(x, p):
+            # encoder self-attention is bidirectional (causal=False)
+            h = apply_norm(cfg.norm, p.get("norm1"), x)
+            q, k, v = qkv_project(p["enc_attn"], h, cfg)
+            q = apply_rope(q, positions, cfg.attn.rope_theta, cfg.rope_scaling)
+            k = apply_rope(k, positions, cfg.attn.rope_theta, cfg.rope_scaling)
+            o = attn_mod.full_attention(q, k, v, causal=False, window=0,
+                                        softcap=0.0)
+            x = x + attention_output(p["enc_attn"], o)
+            h = apply_norm(cfg.norm, p.get("norm2"), x)
+            x = x + mlp_apply(p["mlp"], h, cfg)
+            return x, None
+
+        x, _ = jax.lax.scan(enc_block_nc, x, params["enc_blocks"])
+        return apply_norm(cfg.norm, params.get("enc_final_norm"), x)
+
+    # ---- embedding / unembedding ------------------------------------------
+    def _embed_tokens(self, params, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        return x.astype(_dtype(cfg.dtype))
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return x @ head.astype(x.dtype)
+
+    # ---- forward (train / prefill shared) ----------------------------------
+    def _backbone(self, params, x, *, impl, collect_cache, cache=None,
+                  enc_out=None):
+        """x: (B, S, D).  Runs all super-blocks via scan."""
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])
+        period = cfg.pattern_period
+
+        with_cache = cache is not None
+
+        def super_block(carry, scan_in):
+            x = carry
+            if with_cache:
+                p_stack, cache_stack = scan_in
+            else:
+                p_stack, cache_stack = scan_in, None
+            aux_total = jnp.zeros((), jnp.float32)
+            new_caches = []
+            for j, kind in enumerate(cfg.block_pattern):
+                c_j = cache_stack[j] if cache_stack is not None else None
+
+                def one_block(x, p_j, c_j, _kind=kind):
+                    return _apply_block(
+                        _kind, p_j, x, cfg, impl=impl,
+                        positions=positions, cache=c_j, pos=None,
+                        decode=False, enc_out=enc_out,
+                    )
+
+                if cfg.remat:
+                    # per-SUB-layer remat: the backward of a period-p
+                    # super-block holds one sub-layer's activations at a
+                    # time instead of all p (recurrentgemma: p=13)
+                    one_block = jax.checkpoint(one_block)
+                x, nc, aux = one_block(x, p_stack[j], c_j)
+                new_caches.append(nc)
+                aux_total = aux_total + aux
+            out_cache = tuple(new_caches) if with_cache else ()
+            return x, (out_cache, aux_total)
+
+        scan_fn = super_block
+        if cfg.remat:
+            scan_fn = jax.checkpoint(
+                super_block, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        xs = (params["blocks"], cache) if with_cache else params["blocks"]
+        x, (caches, auxes) = jax.lax.scan(scan_fn, x, xs)
+        x = apply_norm(cfg.norm, params.get("final_norm"), x)
+        return x, caches, jnp.sum(auxes)
+
+    # ---- training loss ------------------------------------------------------
+    def loss(self, params, batch):
+        """batch: dict(tokens (B,S) int32 [, img_embeds | enc_frames]).
+        Causal LM loss; enc-dec uses teacher forcing on decoder tokens."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        tokens = constrain(tokens, "batch")
+        x = self._embed_tokens(params, tokens)
+        enc_out = None
+        n_prefix = 0
+        if cfg.vision is not None:
+            img = constrain(batch["img_embeds"], "batch").astype(x.dtype)
+            img = img @ params["img_proj"].astype(x.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+            n_prefix = cfg.vision.n_img_tokens
+        if cfg.is_encdec:
+            enc_out = self._encode(params, constrain(batch["enc_frames"],
+                                                     "batch"))
+        impl = "full" if x.shape[1] <= 1024 else "chunked"
+        x, _, aux = self._backbone(params, x, impl=impl, collect_cache=False,
+                                   enc_out=enc_out)
+        logits = self._logits(params, x[:, n_prefix:])
+        labels = jnp.concatenate(
+            [tokens[:, 1:], tokens[:, :1]], axis=1)      # shifted; last wraps
+        lmask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        # CE via logsumexp − one-hot contraction: both reduce over the
+        # (model-sharded) vocab axis with partial sums — no all-gather of
+        # the logits (a take_along_axis here would gather the full vocab).
+        lf = constrain(logits.astype(jnp.float32), "vocab")
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        onehot = constrain(
+            jax.nn.one_hot(labels, lf.shape[-1], dtype=lf.dtype), "vocab")
+        gold = jnp.einsum("bsv,bsv->bs", lf, onehot)
+        nll = lse - gold
+        loss = jnp.sum(nll * lmask) / jnp.maximum(jnp.sum(lmask), 1.0)
+        return loss + aux, {"lm_loss": loss, "aux_loss": aux}
+
+    # ---- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, capacity: int):
+        """Decode cache pytree: per pattern position, stacked over
+        super-blocks.  Attention gets KV (ring if windowed), recurrent
+        blocks get their states."""
+        cfg = self.cfg
+        a = cfg.attn
+        adt = _dtype(cfg.dtype)
+        n_super = cfg.n_layers // cfg.pattern_period
+
+        def one(kind):
+            if kind in ("attn", "local_attn"):
+                window = a.window if a.window else (
+                    2048 if kind == "local_attn" else 0)
+                cap = min(capacity, window) if window else capacity
+                return init_kv_cache(batch, cap, a.n_kv_heads, a.head_dim, adt)
+            if kind == "rglru":
+                return init_rglru_state(batch, cfg, adt)
+            return init_xlstm_state(kind, batch, cfg, adt)
+
+        def stack(leaf_fn):
+            return jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l[None], (n_super,) + l.shape),
+                leaf_fn)
+
+        cache = tuple(stack(one(kind)) for kind in cfg.block_pattern)
+        extra = {}
+        if cfg.is_encdec:
+            extra["enc_out"] = jnp.zeros(
+                (batch, cfg.encoder.src_len, cfg.d_model), adt)
+        return {"layers": cache, "step_offset": jnp.zeros((batch,), jnp.int32),
+                **extra}
+
+    def prefill(self, params, batch, *, max_new_tokens: int = 64):
+        """Run the prompt, build the decode cache (with ``max_new_tokens``
+        of headroom for full-attention caches), return last logits."""
+        cfg = self.cfg
+        tokens = constrain(batch["tokens"], "batch")
+        b, s = tokens.shape
+        x = self._embed_tokens(params, tokens)
+        n_prefix = 0
+        enc_out = None
+        if cfg.vision is not None:
+            img = constrain(batch["img_embeds"], "batch").astype(x.dtype)
+            x = jnp.concatenate([img @ params["img_proj"].astype(x.dtype), x],
+                                axis=1)
+            n_prefix = cfg.vision.n_img_tokens
+        if cfg.is_encdec:
+            enc_out = self._encode(params, constrain(batch["enc_frames"],
+                                                     "batch"))
+        cache0 = self.init_cache(b, s + n_prefix + max_new_tokens)
+        impl = "full" if x.shape[1] <= 1024 else "chunked"
+        x, caches, _ = self._backbone(
+            params, x, impl=impl, collect_cache=True,
+            cache=cache0["layers"], enc_out=enc_out,
+        )
+        logits = self._logits(params, x[:, -1:])
+        cache = {"layers": caches,
+                 "step_offset": jnp.full((b,), s + n_prefix, jnp.int32)}
+        if cfg.is_encdec:
+            cache["enc_out"] = enc_out
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1) int32; pos: (B,) absolute positions.
+        Returns (logits (B, V), new cache)."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens)
+        enc_out = cache.get("enc_out")
+
+        def super_block(x, scan_in):
+            p_stack, cache_stack = scan_in
+            new_caches = []
+            for j, kind in enumerate(cfg.block_pattern):
+                x, nc, _ = _apply_block(
+                    kind, p_stack[j], x, cfg, impl="full", positions=None,
+                    cache=cache_stack[j], pos=pos, decode=True,
+                    enc_out=enc_out,
+                )
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        x, new_layers = jax.lax.scan(
+            super_block, x, (params["blocks"], cache["layers"]))
+        x = apply_norm(cfg.norm, params.get("final_norm"), x)
+        logits = self._logits(params, x)[:, 0]
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+        return logits, new_cache
+
+    # ---- input specs (dry-run / launchers) ----------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.vision is not None:
+                batch["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vision.n_img_tokens, cfg.vision.embed_dim),
+                    jnp.bfloat16)
+            if cfg.is_encdec:
+                batch["enc_frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder.src_len, cfg.d_model), jnp.bfloat16)
+            return batch
+        if shape.kind == "prefill":
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.vision is not None:
+                batch["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vision.n_img_tokens, cfg.vision.embed_dim),
+                    jnp.bfloat16)
+            if cfg.is_encdec:
+                batch["enc_frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder.src_len, cfg.d_model), jnp.bfloat16)
+            return batch
+        # decode kinds: one new token against a seq_len-deep cache
+        cache = jax.eval_shape(lambda: self.init_cache(b, s))
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+            "cache": cache,
+        }

@@ -1,0 +1,17 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import (
+    compress_gradients,
+    decompress_gradients,
+    init_error_feedback,
+)
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "compress_gradients",
+    "decompress_gradients",
+    "init_error_feedback",
+]

@@ -1,0 +1,84 @@
+"""AdamW with bf16 params + f32 master copy and ZeRO-1-style state sharding.
+
+State layout (per leaf): f32 master params, f32 m, f32 v.  With
+``zero1=True`` the sharding layer additionally shards every optimizer
+state leaf over the data(+pod) axes on its first divisible dimension —
+the memory (not algorithm) half of ZeRO-1; the parameter all-gather half
+is implicit in GSPMD's resharding of the bf16 params each step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: Any     # f32 params
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    # copy=True: when params are already f32 (smoke configs) astype would
+    # alias the same buffer as master, breaking train_step donation.
+    f32 = lambda x: jnp.array(x, dtype=jnp.float32, copy=True)
+    zeros = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree_util.tree_map(f32, params),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(grads, state: AdamWState, lr, tcfg: TrainConfig,
+                 param_dtype=jnp.bfloat16):
+    """Returns (new_params (param_dtype), new_state, metrics)."""
+    grads, gnorm = _clip_by_global_norm(grads, tcfg.grad_clip)
+    step = state.step + 1
+    b1, b2 = tcfg.beta1, tcfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        mu = b1 * mu + (1.0 - b1) * g
+        nu = b2 * nu + (1.0 - b2) * g * g
+        mhat = mu / c1
+        nhat = nu / c2
+        p = p - lr * (mhat / (jnp.sqrt(nhat) + 1e-8) + tcfg.weight_decay * p)
+        return mu, nu, p
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(state.master)
+    new_m, new_v, new_p = [], [], []
+    for g, mu, nu, p in zip(flat_g, flat_m, flat_v, flat_p):
+        mu, nu, p = upd(g, mu, nu, p)
+        new_m.append(mu)
+        new_v.append(nu)
+        new_p.append(p)
+    master = jax.tree_util.tree_unflatten(treedef, new_p)
+    new_state = AdamWState(
+        step=step,
+        master=master,
+        m=jax.tree_util.tree_unflatten(treedef, new_m),
+        v=jax.tree_util.tree_unflatten(treedef, new_v),
+    )
+    params = jax.tree_util.tree_map(lambda p: p.astype(param_dtype), master)
+    return params, new_state, {"grad_norm": gnorm}

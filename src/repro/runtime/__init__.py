@@ -1,0 +1,12 @@
+from repro.runtime.fault_tolerance import run_with_restart, FailureInjector
+from repro.runtime.elastic import elastic_mesh, reshard_tree
+from repro.runtime.straggler import StragglerPolicy, robust_estimate
+
+__all__ = [
+    "run_with_restart",
+    "FailureInjector",
+    "elastic_mesh",
+    "reshard_tree",
+    "StragglerPolicy",
+    "robust_estimate",
+]

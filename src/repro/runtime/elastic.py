@@ -1,0 +1,45 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard.
+
+On a fleet, losing a host shrinks the device set; the recovery path is
+  1. ``elastic_mesh(devices)`` — largest power-of-two data axis that the
+     surviving device count supports, model axis preserved if possible,
+  2. ``reshard_tree`` — device_put every leaf with the new sharding
+     (in combination with ckpt.restore_checkpoint this is also the
+     restore-onto-smaller-fleet path),
+  3. the caller re-jits its step functions for the new mesh (shapes are
+     unchanged — only shardings move).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.launch.mesh import make_mesh
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def elastic_mesh(devices=None, *, model_axis: int | None = None,
+                 axes=("data", "model")):
+    """Build the best (data, model) mesh from the surviving devices."""
+    devices = devices if devices is not None else jax.devices()
+    n = _pow2_floor(len(devices))
+    if model_axis is None:
+        model_axis = min(n, 16)
+    while n % model_axis and model_axis > 1:
+        model_axis //= 2
+    data_axis = n // model_axis
+    return make_mesh((data_axis, model_axis), axes)
+
+
+def reshard_tree(tree, specs, mesh):
+    """device_put every leaf with NamedSharding(mesh, spec)."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs
+    )

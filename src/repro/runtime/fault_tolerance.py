@@ -1,0 +1,63 @@
+"""Checkpoint/restart fault tolerance.
+
+``run_with_restart`` wraps a step loop: on failure it restores the last
+checkpoint and resumes, preserving data-order determinism because the
+pipeline's batches are a pure function of the global step
+(data/pipeline.py).  ``FailureInjector`` provides deterministic failure
+injection for the integration tests (and doubles as the documented
+chaos-testing hook for real deployments).
+"""
+
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass, field
+from typing import Callable
+
+log = logging.getLogger(__name__)
+
+
+@dataclass
+class FailureInjector:
+    """Raise at configured steps (once each) to simulate node loss."""
+
+    fail_at: tuple = ()
+    _fired: set = field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+def run_with_restart(
+    *,
+    total_steps: int,
+    make_state: Callable[[], tuple],        # () → (state, start_step)
+    restore: Callable[[], tuple | None],    # () → (state, step) or None
+    step_fn: Callable[[object, int], object],   # (state, step) → state
+    on_step: Callable[[object, int], None] | None = None,
+    max_failures: int = 3,
+):
+    """Generic restartable loop.  Returns the final state."""
+    failures = 0
+    restored = restore()
+    state, step = restored if restored is not None else make_state()
+    while step < total_steps:
+        try:
+            state = step_fn(state, step)
+            if on_step:
+                on_step(state, step)
+            step += 1
+        except Exception as e:  # noqa: BLE001 — any step failure
+            failures += 1
+            log.warning("step %d failed (%s); restart %d/%d",
+                        step, e, failures, max_failures)
+            if failures > max_failures:
+                raise
+            restored = restore()
+            if restored is None:
+                state, step = make_state()
+            else:
+                state, step = restored
+    return state

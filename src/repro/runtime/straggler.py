@@ -1,0 +1,52 @@
+"""Straggler mitigation for the selection oracle fleet.
+
+DASH's per-round statistics are Monte-Carlo means over sample replicas.
+At fleet scale some replicas return late (preempted host, slow NIC) or
+stale (retry storms).  The policy:
+
+  * over-provision: request ``n_samples × overprovision`` replicas,
+  * deadline: use whatever arrived by the deadline (simulated here by a
+    host-side arrival mask; on a real fleet the collective would run on
+    the arrived subset's sub-mesh),
+  * trim: reduce with the symmetric trimmed mean
+    (core/estimators.trimmed_mean), which bounds the influence of any
+    single replica — covering both stragglers-turned-stale and outliers.
+
+``robust_estimate`` is the host-facing helper used by the benchmarks to
+quantify the estimator's bias/variance under drop rates; the in-graph
+estimator path is ``DashConfig(trim_frac=...)``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import trimmed_mean
+
+
+@dataclass(frozen=True)
+class StragglerPolicy:
+    overprovision: float = 1.5
+    trim_frac: float = 0.125
+    min_replicas: int = 4
+
+    def replicas_to_request(self, n_samples: int) -> int:
+        return max(self.min_replicas, int(n_samples * self.overprovision))
+
+
+def robust_estimate(values, arrived_mask, policy: StragglerPolicy):
+    """Trimmed mean over the replicas that made the deadline.
+
+    values: (R,) per-replica estimates; arrived_mask: (R,) bool.
+    Missing replicas are imputed with the median of arrived ones before
+    trimming (keeps the reduction shape static for jit).
+    """
+    values = jnp.asarray(values, jnp.float32)
+    arrived = jnp.asarray(arrived_mask, bool)
+    med = jnp.median(jnp.where(arrived, values, jnp.nan))
+    med = jnp.nan_to_num(med)
+    filled = jnp.where(arrived, values, med)
+    return trimmed_mean(jnp.sort(filled), policy.trim_frac)

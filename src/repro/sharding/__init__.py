@@ -1,0 +1,15 @@
+from repro.sharding.partitioning import (
+    activation_sharding_ctx,
+    batch_axes_for_mesh,
+    constrain,
+    param_partition_specs,
+    shardings_for_tree,
+)
+
+__all__ = [
+    "activation_sharding_ctx",
+    "batch_axes_for_mesh",
+    "constrain",
+    "param_partition_specs",
+    "shardings_for_tree",
+]

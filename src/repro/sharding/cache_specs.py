@@ -1,0 +1,97 @@
+"""PartitionSpecs for decode caches and batches (dry-run + serving)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def batch_spec(batch_size: int, axes: tuple, extra_dims: int = 1):
+    """Shard dim0 over the batch axes iff divisible (long_500k has B=1)."""
+    total = 1
+    # axes is a tuple of axis names; mesh sizes handled by caller check
+    return axes, total
+
+
+def _div(n, by):
+    return by > 0 and n % by == 0
+
+
+def batch_dim_spec(b: int, mesh, axes):
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return axes if _div(b, size) else None
+
+
+def cache_partition_specs(cache_shapes, cfg, mesh, axes):
+    """Spec tree matching a decode-cache pytree of ShapeDtypeStructs.
+
+    Layout: every stacked leaf is (n_super, B, ...).  B shards over the
+    batch axes when divisible; KV-cache head dims shard over model when
+    divisible; everything else replicated.
+    """
+    model_size = mesh.shape.get("model", 1)
+    n_kv = cfg.attn.n_kv_heads
+
+    def spec_for(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = names[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        if name == "step_offset":
+            return P(batch_dim_spec(shape[0], mesh, axes))
+        if name == "enc_out":
+            return P(batch_dim_spec(shape[0], mesh, axes), None, None)
+        # stacked layer leaves: (n_super, B, ...)
+        spec = [None] * nd
+        if nd >= 2:
+            spec[1] = batch_dim_spec(shape[1], mesh, axes)
+        if name in ("k", "v") and nd == 5:
+            if shape[3] == n_kv and _div(n_kv, model_size):
+                spec[3] = "model"          # KV heads over model
+            elif _div(shape[2], model_size):
+                spec[2] = "model"          # cache seq dim over model
+                                           # (kv heads too few to split)
+        if name == "positions" and nd == 3 and spec[1] is not None and \
+                _div(shape[2], model_size) and not _div(n_kv, model_size):
+            spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def batch_partition_specs(batch_shapes, mesh, axes):
+    def spec_for(_, leaf):
+        b = leaf.shape[0]
+        return P(batch_dim_spec(b, mesh, axes),
+                 *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shapes)
+
+
+def zero1_specs(param_specs, param_shapes, mesh, axes):
+    """Extend param specs with optimizer-state (ZeRO-1) sharding: shard
+    the first unsharded, divisible dim over the data(+pod) axes."""
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+
+    def extend(spec, leaf):
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = set()
+        for d in dims:
+            for a in (d if isinstance(d, tuple) else (d,)):
+                used.add(a)
+        if any(a in used for a in axes):
+            return P(*dims)       # already sharded over a data axis (FSDP)
+        for i, d in enumerate(dims):
+            if d is None and _div(leaf.shape[i], size):
+                dims[i] = axes if len(axes) > 1 else axes[0]
+                break
+        return P(*dims)
+
+    return jax.tree_util.tree_map(
+        extend, param_specs, param_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )

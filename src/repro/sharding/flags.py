@@ -1,0 +1,43 @@
+"""Perf-pass flags (EXPERIMENTS.md §Perf).
+
+Baseline keeps every flag off so the paper-faithful/naive rows stay
+reproducible; the hillclimb rows flip flags per cell via
+``repro.launch.dryrun --fsdp/--moe2d/--rglru-chunk`` (recorded in the
+result's ``tags``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class PerfFlags:
+    fsdp: bool = False          # shard params over data axis too (ZeRO-3)
+    moe_2d: bool = False        # (E,C,D) buffer: C→data, f→model 2D layout
+    moe_groups: int = 0         # group-local dispatch: sort/scatter per
+                                # data-shard group (no global permutation
+                                # collectives); 0 = single global dispatch
+    rglru_chunk: int = 0        # chunked associative scan (0 = full-seq)
+    rglru_block_gates: bool = False  # block-local (W/16)² gate matrices —
+                                # removes ALL full-width gate collectives
+                                # (beyond-paper structural change)
+    seq_shard: bool = False     # sequence-parallel block boundaries
+
+
+_FLAGS = PerfFlags()
+
+
+def get_flags() -> PerfFlags:
+    return _FLAGS
+
+
+def set_flags(**kw) -> PerfFlags:
+    global _FLAGS
+    _FLAGS = replace(_FLAGS, **kw)
+    return _FLAGS
+
+
+def reset_flags() -> None:
+    global _FLAGS
+    _FLAGS = PerfFlags()

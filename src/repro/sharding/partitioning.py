@@ -1,0 +1,291 @@
+"""Mesh partitioning rules (DESIGN.md §5).
+
+Parameters are annotated by *name-based rules* over their path in the
+param pytree plus shape divisibility checks against the mesh:
+
+  * vocab/embedding dims        → ``model``
+  * d_ff (MLP hidden)           → ``model``
+  * MoE expert dim E            → ``model``   (expert parallelism)
+  * attention head dims         → ``model`` iff divisible, else the
+                                   contracting d_model dim iff divisible
+  * everything else             → replicated
+
+Activations are constrained at block boundaries to batch-sharding over
+``('pod','data')`` (or ``('data',)`` single-pod) via ``constrain``; a
+contextvar carries the axis names so model code stays mesh-agnostic and
+smoke tests (no mesh) skip constraints entirely.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.flags import get_flags
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(batch_axes, model_axis="model", seq_shard=False,
+                            model_size: int = 16, data_size: int = 16):
+    """Enable activation sharding constraints inside model code.
+
+    seq_shard=True additionally shards the sequence dim of block-boundary
+    activations over the model axis (sequence parallelism) — a perf-pass
+    knob, see EXPERIMENTS.md §Perf.
+    """
+    tok = _ACT_CTX.set(
+        {"batch": batch_axes, "model": model_axis, "seq_shard": seq_shard,
+         "model_size": model_size, "data_size": data_size}
+    )
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(tok)
+
+
+def constrain_attention_seq(t, *, replicate: bool):
+    """(B, S, H, Dh) attention tensors under context parallelism:
+    q sharded on S over the model axis, k/v explicitly replicated."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return t
+    msize = ctx.get("model_size", 0)
+    if not msize or t.shape[1] % msize:
+        return t
+    seq = None if replicate else ctx["model"]
+    return jax.lax.with_sharding_constraint(
+        t, P(ctx["batch"], seq, None, None))
+
+
+def constrain_moe_buffer(buf, n_experts: int):
+    """(E, C, D) dispatch buffer: E over model under EP.  When E does not
+    divide the model axis (grok: 8 experts, 16-wide axis):
+      * baseline: C over model,
+      * moe_2d (perf flag): C over data — so the expert GEMMs against
+        f-sharded weights are 2D-sharded (C×f) with no resharding of the
+        buffer between dispatch and the GEMM."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return buf
+    msize = ctx.get("model_size", 0)
+    dsize = ctx.get("data_size", 0)
+    e, c, _ = buf.shape
+    # group-local dispatch leaves the group (=data) sharding on the
+    # capacity dim — keep it there in every layout
+    c_spec = ctx["batch"] if (
+        get_flags().moe_groups and dsize and c % dsize == 0) else None
+    if msize and e % msize == 0:
+        spec = P("model", c_spec, None)
+    elif get_flags().moe_2d and dsize and c % dsize == 0:
+        spec = P(None, ctx["batch"], None)
+    elif msize and c % msize == 0:
+        spec = P(None, "model", None)
+    else:
+        return buf
+    return jax.lax.with_sharding_constraint(buf, spec)
+
+
+def constrain_moe_hidden(h, n_experts: int):
+    """(E, C, F) expert-MLP hidden under the moe_2d layout: C over data,
+    F over model — the natural 2D output of the dispatch GEMM."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or not get_flags().moe_2d:
+        return h
+    msize = ctx.get("model_size", 0)
+    dsize = ctx.get("data_size", 0)
+    e, c, f = h.shape
+    if e % max(msize, 1) == 0:
+        return h      # EP path: already expert-sharded
+    if dsize and c % dsize == 0 and msize and f % msize == 0:
+        return jax.lax.with_sharding_constraint(
+            h, P(None, ctx["batch"], "model"))
+    return h
+
+
+def constrain(x, kind: str = "act"):
+    """Apply a with_sharding_constraint if a sharding context is active.
+
+    kind: "act"   — (B, S, D) block-boundary activation
+          "batch" — shard dim 0 only (tokens, labels, scalars per example)
+          "vocab" — (B, S, V) logits-like: V over the model axis (iff
+                    divisible) — keeps CE partial-summed, never gathered
+          "width" — (B, S, W) recurrence-width tensors: W over the model
+                    axis (the RG-LRU scan is elementwise over W, so the
+                    whole recurrent block stays width-local)
+    """
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    batch = ctx["batch"]
+    if kind == "batch":
+        spec = P(batch, *([None] * (x.ndim - 1)))
+    elif kind in ("vocab", "width"):
+        vdim = ctx.get("model") if x.shape[-1] % ctx.get("model_size", 0) == 0 \
+            else None
+        spec = P(batch, *([None] * (x.ndim - 2)), vdim)
+    else:
+        seq = ctx["model"] if ctx["seq_shard"] and x.ndim >= 3 else None
+        spec = P(batch, seq, *([None] * (x.ndim - 2))) if x.ndim >= 2 else P(batch)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs
+# ---------------------------------------------------------------------------
+
+def _divisible(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def _attn_spec(name: str, shape, cfg, model_size: int, stacked: bool):
+    """Attention weights: head-dim sharding iff heads divide the axis,
+    else contracting-dim (d_model) sharding, else replicated."""
+    a = cfg.attn
+    heads_div = _divisible(a.n_heads, model_size) and _divisible(
+        a.n_kv_heads, model_size
+    )
+    off = 1 if stacked else 0
+    dims = len(shape)
+    spec = [None] * dims
+    if name in ("wq", "wk", "wv"):
+        if heads_div:
+            spec[off + 1] = "model"        # (d, H*dh) → shard output
+        elif _divisible(shape[off], model_size):
+            spec[off] = "model"            # shard contracting d_model
+    elif name == "wo":
+        if heads_div:
+            spec[off] = "model"            # (H*dh, d) → shard contracting
+        elif _divisible(shape[off + 1], model_size):
+            spec[off + 1] = "model"
+    elif name in ("bq", "bk", "bv"):
+        if heads_div:
+            spec[off] = "model"
+    return P(*spec)
+
+
+def param_partition_specs(params, cfg, mesh) -> Any:
+    """Pytree of PartitionSpec matching ``params``.
+
+    Works on real params or ShapeDtypeStructs (dry-run).  Stacked layer
+    params (leading n_super dim) get a leading None.
+    """
+    model_size = mesh.shape.get("model", 1)
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = names[-1]
+        stacked = "blocks" in names or "enc_blocks" in names
+        off = 1 if stacked else 0
+
+        # embeddings / lm head: vocab over model
+        if name == "embed":
+            return P("model", None) if _divisible(shape[0], model_size) else P()
+        if name == "lm_head":
+            return P(None, "model") if _divisible(shape[1], model_size) else P()
+        if name == "img_proj":
+            return P()
+
+        # MoE: expert-parallel (E over model) when E divides the axis;
+        # otherwise tensor-parallel within experts (d_ff over model) —
+        # grok-1's 8 experts on a 16-wide axis take the second path.
+        if "moe" in names:
+            if name == "router":
+                return P(*([None] * len(shape)))
+            spec = [None] * len(shape)
+            if _divisible(shape[off], model_size):
+                spec[off] = "model"        # E dim
+            elif cfg.moe is not None and _divisible(cfg.d_ff, model_size):
+                for i in range(off + 1, len(shape)):
+                    if shape[i] == cfg.d_ff:
+                        spec[i] = "model"
+                        break
+            return P(*spec)
+
+        # dense MLP: d_ff over model
+        if "mlp" in names:
+            spec = [None] * len(shape)
+            f_dim = cfg.d_ff
+            for i in range(off, len(shape)):
+                if shape[i] == f_dim and _divisible(f_dim, model_size):
+                    spec[i] = "model"
+                    break
+            return P(*spec)
+
+        # attention
+        if "attn" in names or "xattn" in names or "enc_attn" in names:
+            return _attn_spec(name, shape, cfg, model_size, stacked)
+
+        # RG-LRU: shard the recurrence width where divisible
+        if "rglru" in names:
+            spec = [None] * len(shape)
+            w = cfg.recurrent.width if cfg.recurrent else -1
+            # shard output dim of w_in/w_gate, input dim of w_out
+            if name in ("w_in", "w_gate") and _divisible(w, model_size):
+                spec[off + 1] = "model"
+            elif name == "w_out" and _divisible(w, model_size):
+                spec[off] = "model"
+            elif name in ("w_a", "w_i"):
+                if len(shape) - off == 3:          # block-local gates
+                    if _divisible(shape[off], model_size):
+                        spec[off] = "model"        # (P, W/P, W/P): P dim
+                elif _divisible(w, model_size):
+                    spec[off + 1] = "model"
+            elif name in ("b_a", "b_i", "lam", "conv") and _divisible(w, model_size):
+                spec[len(shape) - 1] = "model"
+            return P(*spec)
+
+        # xLSTM: shard the 2× up-projection / inner dim where divisible
+        if "xlstm" in names:
+            spec = [None] * len(shape)
+            if name == "w_up" and _divisible(shape[off + 1], model_size):
+                spec[off + 1] = "model"
+            elif name == "w_down" and _divisible(shape[off], model_size):
+                spec[off] = "model"
+            elif name in ("wq", "wk", "wv", "w_gates") and _divisible(
+                shape[off + 1], model_size
+            ):
+                spec[off + 1] = "model"
+            return P(*spec)
+
+        return P(*([None] * len(shape)))
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, params)
+    if get_flags().fsdp:
+        data_size = mesh.shape.get("data", 1)
+
+        def add_fsdp(spec, leaf):
+            if leaf.ndim < 2 or leaf.size < (1 << 20):
+                return spec       # skip norms/biases/small tensors
+            dims = list(spec) + [None] * (leaf.ndim - len(spec))
+            for i, d in enumerate(dims):
+                if d is None and _divisible(leaf.shape[i], data_size):
+                    dims[i] = "data"
+                    break
+            return P(*dims)
+
+        specs = jax.tree_util.tree_map(
+            add_fsdp, specs, params, is_leaf=lambda x: isinstance(x, P))
+    return specs
+
+
+def shardings_for_tree(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_axes_for_mesh(mesh):
+    """('pod','data') on multi-pod meshes, ('data',) otherwise."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)

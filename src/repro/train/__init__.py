@@ -1,0 +1,10 @@
+from repro.train.step import make_train_step, init_train_state
+from repro.train.serve import make_decode_step, make_prefill, generate
+
+__all__ = [
+    "make_train_step",
+    "init_train_state",
+    "make_decode_step",
+    "make_prefill",
+    "generate",
+]

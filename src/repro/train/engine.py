@@ -1,0 +1,140 @@
+"""Continuous-batching serving engine.
+
+Production serving shape for the decode cells: a fixed pool of
+``max_batch`` slots over one pre-allocated batched KV cache; finished
+requests free their slot, pending requests prefill (capacity-aligned)
+and are *inserted* into the batched cache, and every ``step()`` advances
+all active slots by one token.  This is the slot/insert machinery that
+vLLM-style engines run per iteration, expressed over the framework's
+cache pytrees (ring caches and recurrent states insert identically —
+the tree_map is layout-agnostic).
+
+Single-host reference implementation: the decode step is jit'd once for
+the fixed engine shapes; insertion is a per-slot dynamic-update (also
+jit'd).  On a mesh the same engine runs with the decode-cell shardings
+(launch/dryrun.py proves those lower at 32k × 128 slots).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+def _insert_slot(engine_cache, one_cache, slot):
+    """Insert a batch-1 cache into batched cache position ``slot``."""
+
+    def ins(dst, src):
+        if dst.ndim == 0 or dst.shape == src.shape and dst.ndim == 1:
+            return dst
+        # stacked leaves: (n_super, B, ...) — batch dim 1; flat extras
+        # like step_offset are (B,)
+        if src.shape[0] == 1 and dst.ndim == src.ndim:      # (B, ...) leaf
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=0)
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=1)
+
+    return jax.tree_util.tree_map(ins, engine_cache, one_cache)
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_batch: int = 4,
+                 max_seq: int = 256, eos_id: int = 1,
+                 temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.cache = model.init_cache(max_batch, max_seq)
+        self.pos = np.zeros(max_batch, np.int32)
+        self.active: list[Optional[Request]] = [None] * max_batch
+        self.pending: list[Request] = []
+        self.finished: dict[int, Request] = {}
+        self._next_rid = 0
+        self.last_tok = np.zeros(max_batch, np.int32)
+
+        self._decode = jax.jit(model.decode_step)
+        self._insert = jax.jit(_insert_slot, static_argnums=())
+
+    # ---- request management ---------------------------------------------
+    def submit(self, prompt_tokens, max_new: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(Request(rid, np.asarray(prompt_tokens,
+                                                    np.int32), max_new))
+        return rid
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.active[slot] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            s = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            logits, one_cache = self.model.prefill(
+                self.params, batch, max_new_tokens=self.max_seq - s)
+            tok = int(jnp.argmax(logits[0]))
+            req.out.append(tok)
+            self.cache = self._insert(self.cache, one_cache,
+                                      jnp.asarray(slot))
+            self.active[slot] = req
+            self.pos[slot] = s
+            self.last_tok[slot] = tok
+            if tok == self.eos_id or len(req.out) >= req.max_new:
+                self._retire(slot)
+
+    def _retire(self, slot):
+        req = self.active[slot]
+        req.done = True
+        self.finished[req.rid] = req
+        self.active[slot] = None
+
+    # ---- one engine iteration --------------------------------------------
+    def step(self):
+        """Admit pending prefills, then decode one token for every active
+        slot.  Returns the number of active slots stepped."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        toks = jnp.asarray(self.last_tok[:, None])
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, self.cache, toks,
+                                          pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for slot in live:
+            req = self.active[slot]
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self.pos[slot] += 1
+            self.last_tok[slot] = tok
+            if tok == self.eos_id or len(req.out) >= req.max_new \
+                    or self.pos[slot] >= self.max_seq - 1:
+                self._retire(slot)
+        return len(live)
+
+    def run_until_done(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.pending or any(r is not None for r in self.active)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return {rid: np.asarray(req.out) for rid, req in
+                sorted(self.finished.items())}

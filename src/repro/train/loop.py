@@ -1,0 +1,134 @@
+"""Training loop: jit'd train_step on a mesh + checkpoint/restart +
+optional DASH batch selection.
+
+This is the single-controller driver used by examples/ and
+launch/train.py; the same step functions lower unchanged on the
+production mesh (launch/dryrun.py proves it).
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager, restore_checkpoint
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import shard_batch
+from repro.data.selection import DashBatchSelector, pool_embeddings
+from repro.runtime.fault_tolerance import FailureInjector, run_with_restart
+from repro.sharding import (
+    activation_sharding_ctx,
+    batch_axes_for_mesh,
+    param_partition_specs,
+)
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+log = logging.getLogger(__name__)
+
+
+@dataclass
+class LoopResult:
+    state: TrainState
+    losses: list
+    steps_run: int
+    restarts: int
+
+
+def train_loop(
+    model,
+    tcfg: TrainConfig,
+    batch_for_step: Callable[[int], dict],
+    *,
+    mesh=None,
+    ckpt_dir: str | None = None,
+    selector: DashBatchSelector | None = None,
+    selection_pool_factor: int = 4,
+    failure_injector: FailureInjector | None = None,
+    log_every: int = 10,
+) -> LoopResult:
+    """Run tcfg.total_steps steps.  ``batch_for_step`` must be a pure
+    function of the step (determinism across restarts)."""
+    train_step = make_train_step(model, tcfg)
+    manager = (
+        CheckpointManager(ckpt_dir, every=tcfg.checkpoint_every)
+        if ckpt_dir else None
+    )
+    losses: list = []
+    restarts = [0]
+
+    if mesh is not None:
+        axes = batch_axes_for_mesh(mesh)
+        ctx = activation_sharding_ctx(axes)
+    else:
+        import contextlib
+
+        ctx = contextlib.nullcontext()
+
+    with ctx:
+        jstep = jax.jit(train_step, donate_argnums=(0,))
+        key = jax.random.PRNGKey(tcfg.seed)
+        skey = jax.random.PRNGKey(tcfg.seed + 1)
+
+        def make_state():
+            return TrainState(*init_train_state(model, key, tcfg)), 0
+
+        def restore():
+            if manager is None or manager.latest() is None:
+                return None
+            restarts[0] += 1 if losses else 0
+            like = init_train_state(model, key, tcfg)
+            state, step = restore_checkpoint(manager.directory, like)
+            log.info("restored checkpoint at step %d", step)
+            return state, step + 1
+
+        def select_batch(state, step):
+            batch = batch_for_step(step)
+            if selector is None:
+                return batch
+            # build an over-provisioned pool and keep the DASH-selected rows
+            pool = [batch_for_step(step)]
+            for j in range(1, selection_pool_factor):
+                pool.append(batch_for_step(step * 7919 + j))
+            pooled = {
+                k: np.concatenate([p[k] for p in pool], axis=0)
+                for k in batch
+            }
+            emb = pool_embeddings(model, state.params, pooled)
+            idx = selector.select(emb, jax.random.fold_in(skey, step))
+            return {k: v[np.asarray(idx)] for k, v in pooled.items()}
+
+        def step_fn(state, step):
+            if failure_injector is not None:
+                failure_injector.check(step)
+            batch = select_batch(state, step)
+            if mesh is not None:
+                batch = shard_batch(batch, mesh)
+            else:
+                batch = jax.tree_util.tree_map(jnp.asarray, batch)
+            t0 = time.perf_counter()
+            state, metrics = jstep(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % log_every == 0:
+                log.info("step %d loss %.4f (%.3fs)", step, loss,
+                         time.perf_counter() - t0)
+            if manager is not None:
+                manager.maybe_save(step, state)
+            return state
+
+        state = run_with_restart(
+            total_steps=tcfg.total_steps,
+            make_state=make_state,
+            restore=restore,
+            step_fn=step_fn,
+        )
+        if manager is not None:
+            manager.wait()
+    return LoopResult(state=state, losses=losses, steps_run=len(losses),
+                      restarts=restarts[0])

@@ -1,0 +1,52 @@
+"""Serving: prefill + decode steps and a host-side generation loop."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill(model):
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step
+
+
+def sample_token(logits, key, *, temperature: float = 0.0, top_k: int = 0):
+    """Greedy (T=0) or top-k sampled next token.  logits: (B, V)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        logits = jnp.where(logits < vals[..., -1:], -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def generate(model, params, batch, n_steps: int, key=None, *,
+             temperature: float = 0.0, top_k: int = 0):
+    """Host-side autoregressive generation (batched, greedy by default)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    prefill = jax.jit(make_prefill(model))
+    decode = jax.jit(make_decode_step(model))
+    logits, cache = prefill(params, batch)
+    b = batch["tokens"].shape[0]
+    pos0 = cache["step_offset"]
+    out = []
+    tok = sample_token(logits, key, temperature=temperature, top_k=top_k)
+    out.append(tok)
+    for i in range(n_steps - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, cache, tok[:, None],
+                               pos0 + i)
+        tok = sample_token(logits, sub, temperature=temperature, top_k=top_k)
+        out.append(tok)
+    return jnp.stack(out, axis=1)   # (B, n_steps)

@@ -1,0 +1,114 @@
+"""train_step: value_and_grad + microbatched accumulation + AdamW.
+
+Microbatching (gradient accumulation via ``lax.scan``) serves two
+purposes at scale: (1) activation memory ∝ 1/M, and (2) GSPMD can overlap
+the pod-axis gradient all-reduce of microbatch i with the compute of
+microbatch i+1 (DESIGN.md §9 "overlap").  Optional gradient compression
+applies to the accumulated gradient before the optimizer.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.compression import (
+    compress_gradients,
+    decompress_gradients,
+    init_error_feedback,
+)
+from repro.optim.schedule import cosine_schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    error_fb: Any       # gradient-compression error feedback (or empty)
+
+
+def init_train_state(model, key, tcfg: TrainConfig) -> TrainState:
+    params = model.init(key)
+    opt = adamw_init(params)
+    ef = init_error_feedback(params) if tcfg.grad_compression != "none" else ()
+    return TrainState(params=params, opt=opt, error_fb=ef)
+
+
+def _split_microbatches(batch, m: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % m == 0, (b, m)
+        return x.reshape(m, b // m, *x.shape[1:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(model, tcfg: TrainConfig, *, grad_specs=None):
+    """``grad_specs``: optional PartitionSpec tree (the ZeRO-1/FSDP
+    optimizer-state specs) applied to gradients and the accumulation
+    carry.  Without it GSPMD may leave grads replicated across the data
+    axis (they flow from FSDP-gathered weights), which multiplies the
+    f32 accumulator/Adam memory by the data-axis size — the dominant
+    temp buffer of the large MoE train cells (EXPERIMENTS.md §Perf)."""
+    cfg = model.cfg
+    pdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+
+    def _constrain_grads(g):
+        if grad_specs is None:
+            return g
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), g,
+            grad_specs)
+
+    def train_step(state: TrainState, batch):
+        lr = cosine_schedule(
+            state.opt.step, base_lr=tcfg.learning_rate,
+            warmup_steps=tcfg.warmup_steps, total_steps=tcfg.total_steps,
+        )
+
+        def loss_fn(p, mb):
+            loss, metrics = model.loss(p, mb)
+            return loss, metrics
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if tcfg.microbatches > 1:
+            mbs = _split_microbatches(batch, tcfg.microbatches)
+
+            def acc(carry, mb):
+                gacc, lacc = carry
+                (loss, metrics), g = grad_fn(state.params, mb)
+                g = _constrain_grads(g)     # reduce-scatter per microbatch
+                gacc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (_constrain_grads(gacc), lacc + loss), metrics
+
+            gzero = _constrain_grads(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc, (gzero, jnp.zeros(())), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tcfg.microbatches, grads)
+            loss = loss_sum / tcfg.microbatches
+            metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x), metrics)
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            grads = _constrain_grads(jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads))
+
+        error_fb = state.error_fb
+        if tcfg.grad_compression != "none":
+            comp, error_fb = compress_gradients(
+                grads, error_fb, tcfg.grad_compression)
+            grads = decompress_gradients(comp, tcfg.grad_compression)
+
+        params, opt, om = adamw_update(grads, state.opt, lr, tcfg,
+                                       param_dtype=pdt)
+        metrics = {**metrics, **om, "loss": loss, "lr": lr}
+        return TrainState(params=params, opt=opt, error_fb=error_fb), metrics
+
+    return train_step

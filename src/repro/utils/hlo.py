@@ -1,0 +1,268 @@
+"""Optimized-HLO cost analysis with loop trip-count folding.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts each while-loop *body once*
+(verified empirically — a scan of 8 matmuls reports 1 matmul of FLOPs),
+which would make every scan-over-layers model look ~n_layers× too cheap.
+The roofline therefore uses this module, which walks the optimized HLO
+text and:
+
+  * counts dot FLOPs (2·out_elems·K from shapes + contracting dims) in
+    every computation, rolling fusion-called computations into callers,
+  * estimates HBM traffic as Σ(operand + output bytes) of top-level
+    instructions (mirroring HloCostAnalysis's bytes-accessed model;
+    fusion-internal ops are register-resident and excluded),
+  * sums collective output bytes by kind,
+  * multiplies while bodies by XLA's ``known_trip_count`` (always present
+    for lax.scan/map/fori), composing across nesting.
+
+Known approximations (documented in EXPERIMENTS.md §Roofline):
+  * elementwise/transcendental FLOPs are not counted (<2% of a
+    transformer step, which is dot-dominated),
+  * all-reduce wire bytes are reported raw (output size); ring transfer
+    is ≈2× that — both forms are surfaced,
+  * conditional branches are counted as if all branches execute (upper
+    bound; the models here do not use lax.cond on hot paths).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+# type is either an array type `bf16[16,4096]{1,0}` or a tuple
+# `(s32[], f32[...]{...}, /*index=5*/ ...)` — tuple bodies never contain
+# parens, but do contain `=` inside /*index=N*/ comments.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\]{},]+))\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "reduce-scatter-start", "all-to-all-start",
+}
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "opt-barrier", "partition-id",
+    "replica-id",
+}
+
+
+def _dims_of(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.group(1), m.group(2)
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+class _Comp:
+    __slots__ = ("flops", "bytes", "dot_bytes", "coll", "edges")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.dot_bytes = 0.0    # operand+output bytes of dots only
+        self.coll = defaultdict(lambda: [0.0, 0])   # kind → [bytes, count]
+        self.edges = []                              # (callee, trips, kind)
+
+
+def _parse(hlo_text: str):
+    comps: dict[str, _Comp] = {}
+    types: dict[str, str] = {}      # instruction name → output type string
+    lines_by_comp: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr:
+            current = hdr.group(2)
+            comps[current] = _Comp()
+            lines_by_comp[current] = []
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        lines_by_comp[current].append(line)
+        im = _INSTR_RE.match(line)
+        if im:
+            types[im.group(1)] = im.group(2)
+
+    for cname, lines in lines_by_comp.items():
+        comp = comps[cname]
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, out_type, op = im.group(1), im.group(2), im.group(3)
+
+            # ---- control-flow / call edges -----------------------------
+            if op == "while":
+                body = _WHILE_BODY_RE.search(line)
+                cond = _WHILE_COND_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                if body:
+                    comp.edges.append((body.group(1), trips, "while"))
+                if cond:
+                    comp.edges.append((cond.group(1), trips, "while"))
+                continue
+            if op == "conditional":
+                bm = _BRANCHES_RE.search(line)
+                if bm:
+                    for b in _OPERAND_RE.findall(bm.group(1)):
+                        comp.edges.append((b, 1, "branch"))
+                continue
+            cm = _CALLS_RE.search(line)
+            if cm:
+                comp.edges.append((cm.group(1), 1, "call"))
+            am = _TO_APPLY_RE.search(line)
+            if am and op in ("call",):
+                comp.edges.append((am.group(1), 1, "call"))
+
+            # operand list: the parens right after the op name
+            arg_str = line[im.end():].split(")", 1)[0]
+
+            # ---- dot flops ---------------------------------------------
+            if op == "dot":
+                _, out_dims = _dims_of(out_type)
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                k = 1
+                lcm = _LHS_C_RE.search(line)
+                ops = _OPERAND_RE.findall(arg_str)
+                if lcm and ops:
+                    lhs_type = types.get(ops[0], "")
+                    _, lhs_dims = _dims_of(lhs_type)
+                    for idx in lcm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            k *= lhs_dims[int(idx)]
+                comp.flops += 2.0 * out_elems * k
+                db = _bytes_of_type(out_type)
+                for opnd in ops:
+                    if opnd in types:
+                        db += _bytes_of_type(types[opnd])
+                comp.dot_bytes += db
+
+            # ---- collective bytes --------------------------------------
+            if op in _COLLECTIVE_OPS:
+                kind = op.replace("-start", "")
+                slot = comp.coll[kind]
+                slot[0] += _bytes_of_type(out_type)
+                slot[1] += 1
+
+            # ---- HBM traffic (top-level ops only; fusion bodies are
+            #      register-resident and handled by the caller's op) -----
+            if op in _FREE_OPS or op.endswith("-done"):
+                continue
+            b = _bytes_of_type(out_type)
+            for opnd in _OPERAND_RE.findall(arg_str):
+                if opnd in types:
+                    b += _bytes_of_type(types[opnd])
+            comp.bytes += b
+
+    return comps, lines_by_comp
+
+
+def _entry_name(hlo_text: str):
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                return m.group(1)
+    return None
+
+
+# computations reachable ONLY through call/fusion edges contribute flops
+# but their bytes live in registers; while-reachable computations
+# contribute both.
+
+def module_costs(hlo_text: str) -> dict:
+    comps, _ = _parse(hlo_text)
+    entry = _entry_name(hlo_text)
+    if entry is None or entry not in comps:
+        entry = next(iter(comps), None)
+        if entry is None:
+            return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+
+    memo: dict[tuple[str, bool], tuple] = {}
+
+    def total(cname: str, via_call: bool):
+        key = (cname, via_call)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(cname)
+        if comp is None:
+            return 0.0, 0.0, 0.0, {}
+        flops = comp.flops
+        db = comp.dot_bytes
+        byts = 0.0 if via_call else comp.bytes
+        coll = {k: [v[0], v[1]] for k, v in comp.coll.items()} \
+            if not via_call else {}
+        memo[key] = (flops, byts, db, coll)  # cycle guard
+        for callee, trips, kind in comp.edges:
+            sub_f, sub_b, sub_d, sub_c = total(
+                callee, kind == "call" or via_call)
+            flops += sub_f * trips
+            byts += sub_b * trips
+            db += sub_d * trips
+            for k, v in sub_c.items():
+                slot = coll.setdefault(k, [0.0, 0])
+                slot[0] += v[0] * trips
+                slot[1] += v[1] * trips
+        memo[key] = (flops, byts, db, coll)
+        return memo[key]
+
+    flops, byts, dot_bytes, coll = total(entry, False)
+    return {
+        "flops": flops,
+        "bytes": byts,          # conservative: every top-level op streams
+        "dot_bytes": dot_bytes,  # TPU-fused floor: GEMM traffic only
+        "collectives": {
+            k: {"bytes": v[0], "count": v[1]} for k, v in coll.items()
+        },
+    }
+
+
+def collective_bytes_by_kind(hlo_text: str) -> dict:
+    return module_costs(hlo_text)["collectives"]
+
+
+def collective_total_bytes(coll: dict, *, ring_adjust: bool = False) -> float:
+    """Sum bytes over kinds.  ring_adjust doubles all-reduce (a ring moves
+    2·(N−1)/N ≈ 2× the tensor bytes per device)."""
+    total = 0.0
+    for kind, v in coll.items():
+        b = v["bytes"]
+        if ring_adjust and kind == "all-reduce":
+            b *= 2
+        total += b
+    return total

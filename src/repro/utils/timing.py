@@ -1,0 +1,45 @@
+"""Wall-clock timing helpers (host side, benchmark harness only)."""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+
+
+@dataclass
+class Timer:
+    """Accumulating named timer."""
+
+    totals: dict = field(default_factory=dict)
+    counts: dict = field(default_factory=dict)
+
+    @contextmanager
+    def section(self, name: str):
+        t0 = time.perf_counter()
+        yield
+        dt = time.perf_counter() - t0
+        self.totals[name] = self.totals.get(name, 0.0) + dt
+        self.counts[name] = self.counts.get(name, 0) + 1
+
+    def report(self) -> str:
+        lines = []
+        for name, total in sorted(self.totals.items()):
+            n = self.counts[name]
+            lines.append(f"{name}: total={total:.4f}s calls={n} mean={total / n:.6f}s")
+        return "\n".join(lines)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5, **kwargs):
+    """Time a jitted function with block_until_ready; returns (result, s/call)."""
+    result = None
+    for _ in range(max(warmup, 1)):
+        result = fn(*args, **kwargs)
+    jax.block_until_ready(result)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = fn(*args, **kwargs)
+    jax.block_until_ready(result)
+    return result, (time.perf_counter() - t0) / iters

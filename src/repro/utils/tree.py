@@ -1,0 +1,37 @@
+"""Small pytree helpers used across the framework."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree (by declared dtype)."""
+    return int(
+        sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_norm(tree) -> jnp.ndarray:
+    """Global L2 norm of a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

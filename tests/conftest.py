@@ -1,0 +1,78 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS forcing here — unit tests must see
+the real single-device host (the dry-run sets its own device count in a
+separate process)."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.objectives import (  # noqa: E402
+    AOptimalityObjective,
+    ClassificationObjective,
+    RegressionObjective,
+    normalize_columns,
+)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def reg_problem():
+    """Small planted-support regression problem (paper D1 style)."""
+    rng = np.random.default_rng(0)
+    d, n, k = 120, 60, 10
+    X0 = rng.normal(size=(d, n)) + 0.4 * rng.normal(size=(d, 1))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32))
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, size=k)
+    y = jnp.asarray(X0 @ w + 0.1 * rng.normal(size=d), jnp.float32)
+    return X, y, k
+
+
+@pytest.fixture(scope="session")
+def reg_obj(reg_problem):
+    X, y, k = reg_problem
+    return RegressionObjective(X, y, kmax=2 * k), k
+
+
+@pytest.fixture(scope="session")
+def cls_problem():
+    rng = np.random.default_rng(1)
+    d, n, k = 150, 40, 8
+    X0 = rng.normal(size=(d, n))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32)) * np.sqrt(d)
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, size=k)
+    y = jnp.asarray((1 / (1 + np.exp(-X0 @ w)) > 0.5).astype(np.float32))
+    return X, y, k
+
+
+@pytest.fixture(scope="session")
+def cls_obj(cls_problem):
+    X, y, k = cls_problem
+    return ClassificationObjective(X, y, kmax=2 * k), k
+
+
+@pytest.fixture(scope="session")
+def aopt_problem():
+    rng = np.random.default_rng(2)
+    d, n, k = 24, 50, 8
+    X = rng.normal(size=(d, n))
+    X = X / np.linalg.norm(X, axis=0, keepdims=True)
+    return jnp.asarray(X, jnp.float32), k
+
+
+@pytest.fixture(scope="session")
+def aopt_obj(aopt_problem):
+    X, k = aopt_problem
+    return AOptimalityObjective(X, kmax=2 * k, beta2=1.0, sigma2=1.0), k

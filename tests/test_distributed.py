@@ -1,0 +1,199 @@
+"""Distributed behaviour on a fake 8-device host (subprocess so the unit
+tests in this process keep seeing 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run(code: str, devices: int = 8) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_distributed_dash_parity_and_determinism():
+    res = _run("""
+        import json, jax, numpy as np, jax.numpy as jnp
+        from repro.core import RegressionObjective, normalize_columns, greedy, DashConfig
+        from repro.core.distributed import dash_distributed_regression
+        from repro.launch.mesh import make_mesh
+        rng = np.random.default_rng(0)
+        d, n, k = 120, 64, 12
+        X0 = rng.normal(size=(d, n)) + 0.4*rng.normal(size=(d, 1))
+        X = normalize_columns(jnp.asarray(X0, jnp.float32))
+        w = np.zeros(n); w[:k] = rng.uniform(-2, 2, k)
+        y = jnp.asarray(X0 @ w + 0.1*rng.normal(size=d), jnp.float32)
+        obj = RegressionObjective(X, y, kmax=k)
+        g = greedy(obj, k)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        cfg = DashConfig(k=k, eps=0.25, alpha=0.6, n_samples=4)
+        r1 = dash_distributed_regression(X, y, cfg, jax.random.PRNGKey(0), float(g.value)*1.05, mesh)
+        r2 = dash_distributed_regression(X, y, cfg, jax.random.PRNGKey(0), float(g.value)*1.05, mesh)
+        print(json.dumps({
+            "greedy": float(g.value), "dist": float(r1.value),
+            "deterministic": float(r1.value) == float(r2.value),
+            "count": int(r1.sel_count),
+        }))
+    """)
+    assert res["deterministic"]
+    assert res["count"] <= 12
+    assert res["dist"] >= 0.6 * res["greedy"]
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    res = _run("""
+        import json, jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_reduced_config, TrainConfig
+        from repro.models import build_model
+        from repro.train.step import init_train_state, make_train_step
+        from repro.launch.mesh import make_mesh
+        from repro.sharding import param_partition_specs, shardings_for_tree, activation_sharding_ctx
+
+        cfg = get_reduced_config("olmo-1b")
+        model = build_model(cfg)
+        tcfg = TrainConfig(total_steps=1, learning_rate=1e-3, warmup_steps=1)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)}
+
+        # single-device reference
+        state = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+        _, m_ref = jax.jit(make_train_step(model, tcfg))(state, batch)
+
+        # sharded
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with mesh, activation_sharding_ctx(("data",), model_size=4):
+            state2 = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+            pspecs = param_partition_specs(state2.params, cfg, mesh)
+            step = jax.jit(make_train_step(model, tcfg))
+            batch_sh = jax.device_put(batch, NamedSharding(mesh, P("data", None)))
+            _, m_sh = step(state2, batch_sh)
+        print(json.dumps({"ref": float(m_ref["loss"]), "sharded": float(m_sh["loss"])}))
+    """)
+    assert abs(res["ref"] - res["sharded"]) < 2e-2
+
+
+@pytest.mark.slow
+def test_elastic_mesh_and_reshard():
+    res = _run("""
+        import json, jax, jax.numpy as jnp
+        from repro.runtime.elastic import elastic_mesh, reshard_tree
+        from jax.sharding import PartitionSpec as P
+        devs = jax.devices()
+        mesh_full = elastic_mesh(devs, model_axis=4)
+        mesh_small = elastic_mesh(devs[:6], model_axis=2)   # lost 2 devices
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        specs = {"w": P("data", "model")}
+        placed = reshard_tree(tree, specs, mesh_full)
+        moved = reshard_tree(placed, specs, mesh_small)
+        ok = bool(jnp.all(moved["w"] == tree["w"]))
+        print(json.dumps({
+            "full": list(mesh_full.devices.shape),
+            "small": list(mesh_small.devices.shape),
+            "data_ok": ok,
+        }))
+    """)
+    assert res["full"] == [2, 4]
+    assert res["small"] == [2, 2]   # pow2 floor of 6 = 4 devices
+    assert res["data_ok"]
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_both_meshes():
+    """The minimum multi-pod proof in-tree: one cell on 16x16 and 2x16x16."""
+    res = _run("""
+        import json
+        from repro.launch.dryrun import lower_cell
+        r1 = lower_cell("smollm-135m", "decode_32k", multi_pod=False)
+        r2 = lower_cell("smollm-135m", "decode_32k", multi_pod=True)
+        print(json.dumps({
+            "single_ok": "error" not in r1 and r1["cost"]["flops"] > 0,
+            "multi_ok": "error" not in r2 and r2["cost"]["flops"] > 0,
+            "chips": [r1["n_chips"], r2["n_chips"]],
+        }))
+    """, devices=512)
+    assert res["single_ok"] and res["multi_ok"]
+    assert res["chips"] == [256, 512]
+
+
+def test_straggler_robust_estimate():
+    import jax.numpy as jnp
+
+    from repro.runtime.straggler import StragglerPolicy, robust_estimate
+
+    vals = jnp.asarray([1.0, 1.1, 0.9, 1.05, 50.0, 0.95, 1.0, 1.02])
+    arrived = jnp.asarray([True] * 7 + [False])
+    pol = StragglerPolicy(trim_frac=0.125)
+    est = float(robust_estimate(vals, arrived, pol))
+    assert 0.9 <= est <= 1.6      # the 50.0 outlier is trimmed
+
+    assert pol.replicas_to_request(8) == 12
+
+
+@pytest.mark.slow
+def test_elastic_restart_onto_smaller_mesh(tmp_path_factory):
+    """Full elastic path: train on a (2,4) mesh, checkpoint, then restore
+    + reshard onto a (1,4) mesh (half the fleet) and keep training."""
+    ckpt = str(tmp_path_factory.mktemp("elastic"))
+    res = _run(f"""
+        import json, jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_reduced_config, TrainConfig
+        from repro.models import build_model
+        from repro.train.step import init_train_state, make_train_step
+        from repro.launch.mesh import make_mesh
+        from repro.sharding import param_partition_specs, activation_sharding_ctx
+        from repro.ckpt import save_checkpoint, restore_checkpoint
+
+        cfg = get_reduced_config("olmo-1b")
+        model = build_model(cfg)
+        tcfg = TrainConfig(total_steps=4, learning_rate=1e-3, warmup_steps=1)
+        rng = np.random.default_rng(0)
+        def batch(i):
+            r = np.random.default_rng(i)
+            return {{"tokens": jnp.asarray(r.integers(0, cfg.vocab_size, (8, 32)), jnp.int32)}}
+
+        mesh_big = make_mesh((2, 4), ("data", "model"))
+        losses = []
+        with mesh_big, activation_sharding_ctx(("data",), model_size=4):
+            state = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+            step = jax.jit(make_train_step(model, tcfg))
+            for i in range(2):
+                state, m = step(state, jax.device_put(
+                    batch(i), NamedSharding(mesh_big, P("data", None))))
+                losses.append(float(m["loss"]))
+            save_checkpoint({ckpt!r}, 1, state)
+
+        # fleet shrinks: restore onto a (1,4) mesh with resharding
+        mesh_small = make_mesh((1, 4), ("data", "model"))
+        with mesh_small, activation_sharding_ctx(("data",), model_size=4):
+            like = init_train_state(model, jax.random.PRNGKey(9), tcfg)
+            specs = param_partition_specs(like.params, cfg, mesh_small)
+            state2, at = restore_checkpoint({ckpt!r}, like, mesh=mesh_small,
+                                            specs=None)
+            step2 = jax.jit(make_train_step(model, tcfg))
+            for i in range(2, 4):
+                state2, m = step2(state2, jax.device_put(
+                    batch(i), NamedSharding(mesh_small, P("data", None))))
+                losses.append(float(m["loss"]))
+        print(json.dumps({{"losses": losses, "restored_at": at,
+                           "finite": all(np.isfinite(losses))}}))
+    """)
+    assert res["restored_at"] == 1
+    assert res["finite"]
+    assert res["losses"][-1] < res["losses"][0] + 0.5

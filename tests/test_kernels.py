@@ -1,0 +1,118 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.aopt_gains.ops import aopt_gains
+from repro.kernels.aopt_gains.ref import aopt_gains_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.logistic_gains.ops import logistic_gains
+from repro.kernels.logistic_gains.ref import logistic_gains_ref
+from repro.kernels.marginal_gains.ops import regression_gains
+from repro.kernels.marginal_gains.ref import regression_gains_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _ortho(d, k):
+    q, _ = np.linalg.qr(RNG.normal(size=(d, max(k, 1))))
+    return jnp.asarray(q[:, :k], jnp.float32)
+
+
+@pytest.mark.parametrize("d,n,k", [(32, 64, 0), (100, 300, 7), (128, 128, 16),
+                                   (257, 513, 5), (64, 1000, 32)])
+def test_marginal_gains_shapes(d, n, k):
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    Q = _ortho(d, k) if k else jnp.zeros((d, 1), jnp.float32)
+    r = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    csq = jnp.sum(X * X, axis=0)
+    got = regression_gains(X, Q, r, csq, interpret=True)
+    want = regression_gains_ref(X, Q, r, csq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_marginal_gains_in_span_clamped():
+    d = 16
+    Q = _ortho(d, 4)
+    X = jnp.concatenate([Q[:, :2], jnp.asarray(RNG.normal(size=(d, 6)),
+                                               jnp.float32)], axis=1)
+    r = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    csq = jnp.sum(X * X, axis=0)
+    got = regression_gains(X, Q, r, csq, interpret=True)
+    assert float(got[0]) == 0.0 and float(got[1]) == 0.0
+
+
+@pytest.mark.parametrize("d,n", [(16, 32), (100, 300), (130, 514)])
+@pytest.mark.parametrize("isig2", [0.5, 1.7])
+def test_aopt_gains_shapes(d, n, isig2):
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    M = jnp.eye(d) + isig2 * (X[:, :3] @ X[:, :3].T)
+    W = jnp.linalg.solve(M, X)
+    got = aopt_gains(X, W, isig2, interpret=True)
+    want = aopt_gains_ref(X, W, isig2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("d,n,steps", [(64, 100, 1), (100, 300, 3),
+                                       (257, 65, 4)])
+def test_logistic_gains_shapes(d, n, steps):
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    y = jnp.asarray((RNG.uniform(size=d) > 0.5).astype(np.float32))
+    eta = jnp.asarray(0.3 * RNG.normal(size=d), jnp.float32)
+    got = logistic_gains(X, y, eta, steps=steps, interpret=True)
+    want = logistic_gains_ref(X, y, eta, steps=steps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,skv,h,hkv,dh", [
+    (128, 128, 4, 4, 32), (130, 200, 4, 2, 32), (64, 256, 8, 1, 64),
+])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 48, 0.0), (False, 0, 0.0), (True, 0, 20.0),
+])
+def test_flash_attention_sweep(dtype, sq, skv, h, hkv, dh, causal, window,
+                               cap):
+    q = jnp.asarray(RNG.normal(size=(2, sq, h, dh)), dtype)
+    k = jnp.asarray(RNG.normal(size=(2, skv, hkv, dh)), dtype)
+    v = jnp.asarray(RNG.normal(size=(2, skv, hkv, dh)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          block_q=64, block_kv=64, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_q_offset_matches_decode_semantics():
+    q = jnp.asarray(RNG.normal(size=(1, 1, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 100, 2, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 100, 2, 32)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                          q_offset=99, block_q=64, block_kv=64,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True, window=0, softcap=0.0,
+                               q_offset=99)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernels_used_by_objectives(reg_obj):
+    """use_kernel=True path returns the same gains as ref path."""
+    from repro.core.objectives import RegressionObjective
+
+    obj, k = reg_obj
+    objk = RegressionObjective(obj.X, obj.y, kmax=obj.kmax, use_kernel=True)
+    st1 = obj.add_one(obj.init(), 3)
+    st2 = objk.add_one(objk.init(), 3)
+    np.testing.assert_allclose(np.asarray(obj.gains(st1)),
+                               np.asarray(objk.gains(st2)),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,155 @@
+"""Oracle correctness: incremental gains/set-gains vs brute-force refits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import greedy
+
+
+def _fd_gain(obj, base_idx, a):
+    base = jnp.asarray(base_idx, jnp.int32)
+    with_a = jnp.concatenate([base, jnp.asarray([a], jnp.int32)])
+    return float(obj.brute_value(with_a) - obj.brute_value(base))
+
+
+class TestRegression:
+    def test_singleton_gains_match_bruteforce(self, reg_obj):
+        obj, k = reg_obj
+        st = obj.init()
+        st = obj.add_one(st, 3)
+        st = obj.add_one(st, 17)
+        gains = obj.gains(st)
+        for a in (0, 7, 25, 41):
+            fd = _fd_gain(obj, [3, 17], a)
+            assert abs(float(gains[a]) - fd) < 1e-4, (a, float(gains[a]), fd)
+
+    def test_selected_gain_is_zero(self, reg_obj):
+        obj, _ = reg_obj
+        st = obj.add_one(obj.init(), 5)
+        assert float(obj.gains(st)[5]) == 0.0
+
+    def test_set_gain_matches_bruteforce(self, reg_obj):
+        obj, _ = reg_obj
+        st = obj.add_one(obj.init(), 3)
+        idx = jnp.asarray([5, 9, 11], jnp.int32)
+        sg = float(obj.set_gain(st, idx, jnp.ones(3, bool)))
+        fd = float(obj.brute_value(jnp.asarray([3, 5, 9, 11]))
+                   - obj.brute_value(jnp.asarray([3])))
+        assert abs(sg - fd) < 1e-4
+
+    def test_set_gain_respects_mask(self, reg_obj):
+        obj, _ = reg_obj
+        st = obj.init()
+        idx = jnp.asarray([5, 9, 11], jnp.int32)
+        sg_masked = float(obj.set_gain(st, idx, jnp.asarray([True, False, True])))
+        sg_two = float(obj.set_gain(st, jnp.asarray([5, 11], jnp.int32),
+                                    jnp.ones(2, bool)))
+        assert abs(sg_masked - sg_two) < 1e-5
+
+    def test_add_set_order_invariance(self, reg_obj):
+        obj, _ = reg_obj
+        idx1 = jnp.asarray([4, 9, 30], jnp.int32)
+        idx2 = jnp.asarray([30, 4, 9], jnp.int32)
+        v1 = float(obj.add_set(obj.init(), idx1, jnp.ones(3, bool)).value)
+        v2 = float(obj.add_set(obj.init(), idx2, jnp.ones(3, bool)).value)
+        assert abs(v1 - v2) < 1e-5
+
+    def test_duplicate_add_is_noop(self, reg_obj):
+        obj, _ = reg_obj
+        st = obj.add_one(obj.init(), 7)
+        st2 = obj.add_one(st, 7)
+        assert abs(float(st.value) - float(st2.value)) < 1e-6
+
+    def test_value_normalized(self, reg_obj):
+        obj, k = reg_obj
+        res = greedy(obj, k)
+        assert 0.0 <= float(res.value) <= 1.0 + 1e-6
+
+
+class TestClassification:
+    def test_greedy_close_to_bruteforce(self, cls_obj):
+        obj, k = cls_obj
+        res = greedy(obj, k)
+        brute = float(obj.brute_value(np.asarray(res.sel_idx)))
+        # incremental warm-start refits vs from-scratch 60-step refits
+        assert abs(float(res.value) - brute) / max(brute, 1.0) < 0.05
+
+    def test_gains_positive_and_selected_zero(self, cls_obj):
+        obj, _ = cls_obj
+        st = obj.add_one(obj.init(), 2)
+        g = obj.gains(st)
+        assert float(g[2]) == 0.0
+        assert bool(jnp.all(g >= 0.0))
+
+    def test_newton1d_gain_close_to_1d_refit(self, cls_problem):
+        # first Newton step == quadratic proxy; more steps should give
+        # a value >= proxy (closer to the 1-D optimum)
+        from repro.core.objectives import ClassificationObjective
+
+        X, y, k = cls_problem
+        obj1 = ClassificationObjective(X, y, kmax=k, gain_mode="quadratic")
+        obj3 = ClassificationObjective(X, y, kmax=k, newton_gain_steps=4)
+        g1 = obj1.gains(obj1.init())
+        g3 = obj3.gains(obj3.init())
+        # at the top candidate the refined gain is a true ll improvement
+        a = int(jnp.argmax(g3))
+        fd = float(obj3.brute_value(jnp.asarray([a])))
+        assert float(g3[a]) <= fd * 1.05 + 1e-3
+
+    def test_monotone_value(self, cls_obj):
+        obj, k = cls_obj
+        res = greedy(obj, k)
+        vals = np.asarray(res.values)
+        assert np.all(np.diff(vals) >= -1e-3)
+
+
+class TestAOptimality:
+    def test_singleton_gains_match_bruteforce(self, aopt_obj):
+        obj, _ = aopt_obj
+        st = obj.add_one(obj.init(), 0)
+        gains = obj.gains(st)
+        for a in (5, 12, 33):
+            fd = _fd_gain(obj, [0], a)
+            assert abs(float(gains[a]) - fd) < 1e-4
+
+    def test_set_gain_matches_woodbury_bruteforce(self, aopt_obj):
+        obj, _ = aopt_obj
+        st = obj.add_one(obj.init(), 0)
+        idx = jnp.asarray([5, 9], jnp.int32)
+        sg = float(obj.set_gain(st, idx, jnp.ones(2, bool)))
+        fd = float(obj.brute_value(jnp.asarray([0, 5, 9]))
+                   - obj.brute_value(jnp.asarray([0])))
+        assert abs(sg - fd) < 1e-4
+
+    def test_greedy_matches_bruteforce_value(self, aopt_obj):
+        obj, k = aopt_obj
+        res = greedy(obj, k)
+        sel = np.nonzero(np.asarray(res.sel_mask))[0]
+        brute = float(obj.brute_value(jnp.asarray(sel)))
+        assert abs(float(res.value) - brute) < 1e-3
+
+
+class TestDiversity:
+    def test_diversified_gains_additive(self, reg_obj):
+        from repro.core import ClusterDiversity, DiversifiedObjective
+
+        obj, _ = reg_obj
+        clusters = jnp.arange(obj.n) % 5
+        div = ClusterDiversity(clusters, 5, weight=0.1)
+        dobj = DiversifiedObjective(obj, div)
+        st = dobj.init()
+        g = dobj.gains(st)
+        gb = obj.gains(st)
+        gd = div.gains(st.sel_mask)
+        assert bool(jnp.allclose(g, gb + gd, atol=1e-6))
+
+    def test_diversity_submodular_marginals_decrease(self):
+        from repro.core import ClusterDiversity
+
+        clusters = jnp.zeros(10, jnp.int32)
+        div = ClusterDiversity(clusters, 1, weight=1.0)
+        m0 = jnp.zeros(10, bool)
+        m1 = m0.at[0].set(True)
+        assert float(div.gains(m1)[1]) < float(div.gains(m0)[1])
