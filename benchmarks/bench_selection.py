@@ -100,6 +100,30 @@ def _bench_objective(name, obj, k_grid, *, lasso_xy=None, task="linear",
     return rows
 
 
+def filter_engine_ab(name, X, y, k, kmax):
+    """DASH wall-clock with the sample-batched filter engine on vs off.
+
+    Same key, same config — the only difference is whether the filter
+    step evaluates its Monte-Carlo samples through the fused
+    ``filter_gains`` engine or the per-sample add_set + gains path.
+    """
+    cfg = DashConfig(k=k, eps=0.25, alpha=0.6, n_samples=8)
+    out = {}
+    for tag, flag in (("per_sample", False), ("engine", True)):
+        obj = RegressionObjective(jnp.asarray(X), jnp.asarray(y), kmax=kmax,
+                                  use_filter_engine=flag)
+        t, res = wall_time(
+            lambda: jax.block_until_ready(dash(obj, cfg, KEY, opt=0.9)),
+            warmup=1, iters=1)
+        out[tag] = (t, float(res.value))
+        emit(f"selection/{name}/k={k}/dash_filter_{tag}", t * 1e6,
+             f"value={float(res.value):.4f}")
+    t_ps, t_en = out["per_sample"][0], out["engine"][0]
+    emit(f"selection/{name}/k={k}/dash_filter_speedup", 0.0,
+         f"engine_over_per_sample={t_ps / max(t_en, 1e-12):.2f}x")
+    return out
+
+
 def accuracy_vs_rounds(name, obj, k):
     """Fig 2a-style trace: objective value per adaptive round."""
     g = greedy(obj, k)
@@ -125,6 +149,7 @@ def run(full: bool = False):
                      [25 // scale, 50 // scale, 100 // scale],
                      lasso_xy=(X, y))
     accuracy_vs_rounds("D1_regression", obj, 100 // scale)
+    filter_engine_ab("D1_regression", X, y, 50 // scale, 100 // scale)
 
     # D2 clinical surrogate
     X2, y2 = make_d2_clinical(n_samples=1200 // scale, n_features=385 // scale)

@@ -5,12 +5,17 @@ more recent parallel optimization techniques such as adaptive sequencing
 [4]" (Balkanski–Rubinstein–Singer, STOC 2019).  This module implements
 that beyond-paper variant: per adaptive round,
 
-  1. draw a uniformly random sequence (a_1, …, a_B) from the alive set,
-  2. evaluate the gain of every element at every *prefix* of the sequence
-     (B incremental states — one scan, gains batched at each step),
-  3. commit the longest prefix whose every element cleared the threshold
-     α·t/k at its insertion point,
-  4. filter the alive set by the gains at the committed state.
+  1. draw a uniformly random sequence (a_1, …, a_k) from the alive set,
+  2. evaluate the gain of every sequence element at its insertion prefix
+     (k incremental states — one scan, a single-element ``set_gain``
+     oracle call per step),
+  3. commit the elements that cleared the threshold α·t/k at their
+     insertion point,
+  4. filter the alive set by the gains at the committed state; when a
+     round commits nothing, geometrically decay the threshold and reset
+     the alive set instead (the BRS outer-loop ``t ← (1−ε)t`` step —
+     without it the scan stalls as soon as one random sequence misses
+     every above-threshold element).
 
 Compared to DASH it trades the Monte-Carlo expectation estimates for a
 single sequence scan (lower variance, the same O(log n) round count under
@@ -41,24 +46,24 @@ def adaptive_sequencing(
 ):
     n = obj.n
     r = rounds or max(1, min(k, int(jnp.ceil(jnp.log2(max(n, 2))))))
-    block = max(1, -(-k // r))
 
     if opt is None:
         opt = float(jnp.max(obj.gains(obj.init()))) * k  # modular upper bound
 
-    def round_body(rho, carry):
-        state, key, count = carry
+    def round_body(carry):
+        state, alive, key, count, scale, rho = carry
         key, k_seq = jax.random.split(key)
         t = jnp.maximum((1.0 - eps) * (opt - obj.value(state)), 0.0)
-        thr = alpha * t / k
-        seq_idx, seq_valid = sample_set_from_mask(k_seq, ~state.sel_mask, block)
+        thr = scale * alpha * t / k
+        seq_idx, seq_valid = sample_set_from_mask(k_seq, alive, k)
         allowed = jnp.maximum(k - count, 0)
-        seq_valid = seq_valid & (jnp.arange(block) < allowed)
+        seq_valid = seq_valid & (jnp.arange(k) < allowed)
 
         # Scan the sequence: at each prefix record whether the inserted
         # element cleared the threshold at insertion time.
         def scan_body(st, j):
-            g = obj.gains(st)[seq_idx[j]]
+            # single-element set_gain: O(d·k) vs the full (n,) gains sweep
+            g = obj.set_gain(st, seq_idx[j][None], jnp.ones((1,), bool))
             ok = (g >= thr) & seq_valid[j]
             st = obj.add_set(
                 st,
@@ -67,18 +72,31 @@ def adaptive_sequencing(
             )
             return st, ok
 
-        state_new, ok_flags = jax.lax.scan(scan_body, state, jnp.arange(block))
+        state_new, ok_flags = jax.lax.scan(scan_body, state, jnp.arange(k))
         added = jnp.sum(ok_flags.astype(jnp.int32))
-        return state_new, key, count + added
+        # Filter the survivors by the committed state's gains; an empty
+        # round means the threshold outran the pool — decay it and reset.
+        g_new = obj.gains(state_new)
+        alive = jnp.where(added > 0,
+                          alive & ~state_new.sel_mask & (g_new >= thr),
+                          ~state_new.sel_mask)
+        scale = jnp.where(added > 0, scale, scale * (1.0 - eps))
+        alive = jnp.where(jnp.sum(alive) > 0, alive, ~state_new.sel_mask)
+        return state_new, alive, key, count + added, scale, rho + 1
 
+    # while (not fori): once count hits k, every remaining round's k-step
+    # scan would be a dead pass of sequential oracle calls.
     state0 = obj.init()
-    state, key, count = jax.lax.fori_loop(
-        0, r, round_body, (state0, key, jnp.zeros((), jnp.int32))
+    state, _, key, count, _, rho = jax.lax.while_loop(
+        lambda c: (c[5] < r) & (c[3] < k),
+        round_body,
+        (state0, jnp.ones((n,), bool), key, jnp.zeros((), jnp.int32),
+         jnp.ones((), jnp.float32), jnp.zeros((), jnp.int32)),
     )
     return AdSeqResult(
         sel_mask=state.sel_mask,
         sel_count=count,
         value=obj.value(state),
-        rounds=jnp.asarray(r, jnp.int32),
+        rounds=rho,
         state=state,
     )

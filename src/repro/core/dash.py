@@ -34,7 +34,11 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.estimators import sample_set_from_mask, trimmed_mean
+from repro.core.estimators import (
+    sample_set_batch,
+    sample_set_from_mask,
+    trimmed_mean,
+)
 
 
 class DashTrace(NamedTuple):
@@ -89,19 +93,27 @@ def _estimate_set_gain(obj, state, alive, block, allowed, key, cfg):
 
 
 def _estimate_elem_gains(obj, state, alive, block, allowed, key, cfg):
-    """Ê_R[f_{S∪(R\\{a})}(a)] for every a — the filter statistic."""
-    keys = jax.random.split(key, cfg.n_samples)
+    """Ê_R[f_{S∪(R\\{a})}(a)] for every a — the filter statistic.
+
+    Objectives exposing ``filter_gains_batch`` (gated by their
+    ``use_filter_engine`` flag) evaluate all ``n_samples`` perturbed
+    states in one fused pass (repro.kernels.filter_gains); everything
+    else takes the per-sample add_set + gains path via vmap.
+    """
     n = alive.shape[0]
+    idx, valid = sample_set_batch(key, alive, block, cfg.n_samples)
+    valid = valid & (jnp.arange(block) < allowed)[None, :]  # (m, block)
 
-    def one(k):
-        idx, valid = sample_set_from_mask(k, alive, block)
-        valid = valid & (jnp.arange(block) < allowed)
-        st = obj.add_set(state, idx, valid)
-        g = obj.gains(st)                       # (n,) gains w.r.t. S∪R
-        w = jnp.ones((n,)).at[idx].add(jnp.where(valid, -1.0, 0.0))
-        return g, w                             # weight 0 where a ∈ R
+    if getattr(obj, "use_filter_engine", False):
+        gains = obj.filter_gains_batch(state, idx, valid)
+    else:
+        gains = jax.vmap(
+            lambda i, v: obj.gains(obj.add_set(state, i, v))
+        )(idx, valid)                           # (m, n) gains w.r.t. S∪R
 
-    gains, weights = jax.vmap(one)(keys)        # (m, n) each
+    weights = jax.vmap(                         # weight 0 where a ∈ R
+        lambda i, v: jnp.ones((n,)).at[i].add(jnp.where(v, -1.0, 0.0))
+    )(idx, valid)
     wsum = jnp.sum(weights, axis=0)
     est = jnp.sum(gains * weights, axis=0) / jnp.maximum(wsum, 1.0)
     # Fallback for elements present in every sample: current-state gain.

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dash import DashConfig, DashTrace
+from repro.core.objectives.base import write_accepted_column
 from repro.core.objectives.regression import RegressionObjective
 from repro.core.objectives.a_optimal import AOptimalityObjective
 
@@ -84,6 +85,34 @@ def _dist_gather_columns(X_local, idx_local, owned, axis):
     return jax.lax.psum(cols, axis)
 
 
+def _mgs_add_set(Q, count, resid, C, kmax: int, span_tol: float = 1e-6):
+    """Incremental MGS basis extension (replicated-state oracle update).
+
+    Mirrors ``RegressionObjective.add_set``: each accepted column of C is
+    orthonormalized against the padded basis Q and appended at slot
+    ``count``.  Rejected columns (zero/padded, in-span, or at capacity)
+    leave Q, count and resid untouched — in particular the write into the
+    last slot is guarded so an at-capacity call cannot clobber the basis
+    vector already stored there.
+    """
+    m = C.shape[1]
+
+    def body(j, carry):
+        Q, count, resid = carry
+        v = C[:, j]
+        nrm0 = jnp.sqrt(jnp.sum(v * v))
+        v = v - Q @ (Q.T @ v)
+        v = v - Q @ (Q.T @ v)
+        nrm = jnp.sqrt(jnp.sum(v * v))
+        accept = (nrm0 > 0) & (nrm > span_tol * jnp.maximum(nrm0, 1.0)) & (count < kmax)
+        q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
+        Q = write_accepted_column(Q, jnp.minimum(count, kmax - 1), accept, q)
+        resid = resid - q * jnp.dot(q, resid)
+        return Q, count + accept.astype(jnp.int32), resid
+
+    return jax.lax.fori_loop(0, m, body, (Q, count, resid))
+
+
 # ---------------------------------------------------------------------------
 # distributed regression oracle state (Q, resid replicated; sel_mask local)
 # ---------------------------------------------------------------------------
@@ -130,24 +159,7 @@ def dash_distributed_regression(
             return jnp.sum(z * z) / ysq
 
         def add_set(Q, count, resid, C):
-            m = C.shape[1]
-
-            def body(j, carry):
-                Q, count, resid = carry
-                v = C[:, j]
-                nrm0 = jnp.sqrt(jnp.sum(v * v))
-                v = v - Q @ (Q.T @ v)
-                v = v - Q @ (Q.T @ v)
-                nrm = jnp.sqrt(jnp.sum(v * v))
-                accept = (nrm0 > 0) & (nrm > 1e-6 * jnp.maximum(nrm0, 1.0)) & (count < cfg.k)
-                q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
-                Q = jax.lax.dynamic_update_slice(
-                    Q, q[:, None], (0, jnp.minimum(count, cfg.k - 1))
-                )
-                resid = resid - q * jnp.dot(q, resid)
-                return Q, count + accept.astype(jnp.int32), resid
-
-            return jax.lax.fori_loop(0, m, body, (Q, count, resid))
+            return _mgs_add_set(Q, count, resid, C, cfg.k)
 
         def estimate_set_gain(Q, resid, alive, allowed, key):
             # Each data-axis replica evaluates its own samples; pmean merges.
@@ -252,15 +264,22 @@ def dash_distributed_regression(
         value = (ysq - jnp.sum(resid * resid)) / ysq
         return sel_local, nsel, value, jnp.asarray(r, jnp.int32), values
 
-    # check_vma=False: the Monte-Carlo estimators vmap over sample keys with
-    # collectives (psum/all_gather) inside the vmapped body; the VMA
-    # invariant checker does not yet support that composition.
-    run_sharded = jax.jit(
-        jax.shard_map(
+    # Replication checking off: the Monte-Carlo estimators vmap over sample
+    # keys with collectives (psum/all_gather) inside the vmapped body; the
+    # VMA/rep invariant checker does not yet support that composition.
+    if hasattr(jax, "shard_map"):
+        mapped = jax.shard_map(
             run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )
-    )
+    else:  # jax < 0.6: experimental API, check_vma was called check_rep
+        from jax.experimental.shard_map import shard_map
+
+        mapped = shard_map(
+            run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+    run_sharded = jax.jit(mapped)
     sel, nsel, value, rounds, values = run_sharded(
         X, y, key, jnp.asarray(opt, jnp.float32)
     )

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 from typing import Any, Protocol
 
+import jax
 import jax.numpy as jnp
 
 Array = Any
@@ -75,3 +76,16 @@ def gather_columns(X: Array, idx: Array, mask: Array) -> Array:
     """(d, m) columns X[:, idx] with padded entries zeroed."""
     cols = jnp.take(X, idx, axis=1)
     return cols * mask.astype(X.dtype)[None, :]
+
+
+def write_accepted_column(Q: Array, slot, accept, q: Array) -> Array:
+    """Write basis column ``q`` into ``Q[:, slot]`` only when ``accept``.
+
+    The guarded read-modify-write all incremental-MGS loops share: a
+    rejected candidate (at capacity, in-span, or padded) must leave the
+    column already stored at ``slot`` untouched — an unguarded
+    ``dynamic_update_slice`` would clobber it with zeros.
+    """
+    prev = jax.lax.dynamic_slice(Q, (0, slot), (Q.shape[0], 1))
+    col = jnp.where(accept, q[:, None], prev)
+    return jax.lax.dynamic_update_slice(Q, col, (0, slot))

@@ -29,7 +29,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.objectives.base import gather_columns
+from repro.core.objectives.base import gather_columns, write_accepted_column
 
 
 class RegressionState(NamedTuple):
@@ -52,6 +52,7 @@ class RegressionObjective:
         span_tol: float = 1e-6,
         jitter: float = 1e-8,
         use_kernel: bool = False,
+        use_filter_engine: bool = True,
     ):
         self.X = jnp.asarray(X, jnp.float32)
         self.y = jnp.asarray(y, jnp.float32)
@@ -60,6 +61,9 @@ class RegressionObjective:
         self.span_tol = float(span_tol)
         self.jitter = float(jitter)
         self.use_kernel = bool(use_kernel)
+        # Sample-batched filter engine for DASH's Ê_R[f_{S∪R}(a)] estimate
+        # (repro.kernels.filter_gains); False forces the per-sample path.
+        self.use_filter_engine = bool(use_filter_engine)
         self.ysq = jnp.maximum(jnp.sum(self.y * self.y), 1e-12)
         self.col_sq = jnp.sum(self.X * self.X, axis=0)  # (n,)
 
@@ -116,7 +120,8 @@ class RegressionObjective:
             ref = jnp.sqrt(jnp.maximum(self.col_sq[idx[j]], 1e-12))
             accept = mask[j] & (nrm > self.span_tol * jnp.maximum(ref, 1.0)) & (count < self.kmax)
             q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
-            Q = jax.lax.dynamic_update_slice(Q, q[:, None], (0, jnp.minimum(count, self.kmax - 1)))
+            Q = write_accepted_column(Q, jnp.minimum(count, self.kmax - 1),
+                                      accept, q)
             resid = resid - q * jnp.dot(q, resid)
             count = count + accept.astype(jnp.int32)
             return Q, count, resid
@@ -129,6 +134,67 @@ class RegressionObjective:
     def add_one(self, state: RegressionState, a) -> RegressionState:
         idx = jnp.full((1,), a, jnp.int32)
         return self.add_set(state, idx, jnp.ones((1,), bool))
+
+    # -- sample-batched filter engine (DASH inner loop) -------------------
+    def expand_basis(self, state: RegressionState, idx, mask):
+        """MGS deltas for S ∪ R without rewriting the shared basis.
+
+        Runs the same accept rule as ``add_set`` but writes the new
+        orthonormal columns into a fresh (d, m) buffer D (⊥ span(Q)), so
+        the filter engine can reuse Q across all samples.  Returns
+        (D, resid) — the delta basis and the updated residual.
+        """
+        C = gather_columns(self.X, idx, mask)                  # (d, m)
+        m = idx.shape[0]
+        Q = state.Q
+
+        def body(j, carry):
+            D, dcount, resid = carry
+            v = C[:, j]
+            # Two rounds of MGS against the shared basis + earlier deltas.
+            v = v - Q @ (Q.T @ v)
+            v = v - D @ (D.T @ v)
+            v = v - Q @ (Q.T @ v)
+            v = v - D @ (D.T @ v)
+            nrm = jnp.sqrt(jnp.sum(v * v))
+            ref = jnp.sqrt(jnp.maximum(self.col_sq[idx[j]], 1e-12))
+            accept = (
+                mask[j]
+                & (nrm > self.span_tol * jnp.maximum(ref, 1.0))
+                & (state.count + dcount < self.kmax)
+            )
+            q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
+            D = write_accepted_column(D, jnp.minimum(dcount, m - 1), accept, q)
+            resid = resid - q * jnp.dot(q, resid)
+            return D, dcount + accept.astype(jnp.int32), resid
+
+        D0 = jnp.zeros((self.d, m), jnp.float32)
+        D, _, resid = jax.lax.fori_loop(
+            0, m, body, (D0, jnp.zeros((), jnp.int32), state.resid)
+        )
+        return D, resid
+
+    def filter_gains_batch(self, state: RegressionState, idx, mask):
+        """Gains w.r.t. S ∪ R_i for every sample i in one fused pass.
+
+        idx/mask: (n_samples, m) padded Monte-Carlo sets.  Returns the
+        (n_samples, n) matrix ``jax.vmap(lambda R: gains(add_set(S, R)))``
+        would produce, without re-projecting the shared basis per sample.
+        """
+        D, R = jax.vmap(lambda i, v: self.expand_basis(state, i, v))(idx, mask)
+        if self.use_kernel:
+            from repro.kernels.filter_gains.ops import filter_gains
+
+            g = filter_gains(self.X, state.Q, D, R, self.col_sq)
+        else:
+            from repro.kernels.filter_gains.ref import filter_gains_ref
+
+            g = filter_gains_ref(self.X, state.Q, D, R, self.col_sq)
+        g = g / self.ysq
+        sel = jax.vmap(
+            lambda i, v: state.sel_mask.at[i].set(state.sel_mask[i] | v)
+        )(idx, mask)
+        return jnp.where(sel, 0.0, g)
 
     # -- exact reference (tests) ------------------------------------------
     def brute_value(self, sel_idx) -> jnp.ndarray:

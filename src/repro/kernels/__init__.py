@@ -3,13 +3,22 @@
 Each kernel package has three modules:
   kernel.py — the ``pl.pallas_call`` with explicit BlockSpec VMEM tiling
               (TPU is the target; validated with ``interpret=True`` on CPU)
-  ops.py    — the jit'd public wrapper (shape padding, dtype policy)
+  ops.py    — the jit'd public wrapper (shape padding, dtype policy,
+              backend routing: Pallas on TPU, ref.py elsewhere)
   ref.py    — pure-jnp oracle used by the objectives on non-TPU backends
               and by the allclose test sweeps
+
+The padding / block-size / VMEM-budget heuristics shared by every ops.py
+live in ``repro.kernels.common``.
 
 Kernels:
   marginal_gains  — fused batched regression singleton-gain oracle
                     (the per-round hot-spot of DASH, paper §4)
+  filter_gains    — sample-batched filter-step engine: gains for all
+                    n_samples Monte-Carlo perturbed bases in one launch
+                    (the DASH inner-loop hot-spot; shared-base +
+                    per-sample-delta decomposition)
   aopt_gains      — fused Sherman–Morrison A-optimality gain oracle
+  logistic_gains  — fused 1-D-Newton logistic marginal-gain oracle
   flash_attention — online-softmax attention for the LM serving substrate
 """

@@ -1,39 +1,35 @@
-"""Public jit'd wrapper for the A-optimality gains kernel."""
+"""Public jit'd wrapper for the A-optimality gains kernel.
+
+Padding / block-size / backend routing via ``repro.kernels.common``:
+non-TPU backends run the jnp reference; interpret mode only when
+requested explicitly.
+"""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.kernels.aopt_gains.kernel import aopt_gains_pallas
 from repro.kernels.aopt_gains.ref import aopt_gains_ref
-
-_VMEM_BUDGET = 12 * 1024 * 1024
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def _pick_block_n(d: int) -> int:
-    for bn in (512, 256, 128):
-        if 4 * (2 * d * bn + bn) <= _VMEM_BUDGET:
-            return bn
-    return 128
+from repro.kernels.common import (
+    HUGE_ELEMS,
+    SUBLANE,
+    pad2d,
+    pick_block_n,
+    resolve_path,
+    round_up,
+)
 
 
 def aopt_gains(X, W, isig2, *, interpret: bool | None = None):
-    """Batched Sherman–Morrison gains; Pallas path with padding."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    """Batched Sherman–Morrison gains; Pallas on TPU, reference elsewhere."""
+    use_ref, interpret = resolve_path(interpret)
     d, n = X.shape
-    dp = _round_up(d, 8)
-    bn = _pick_block_n(dp)
-    np_ = _round_up(n, bn)
-    if dp * np_ > 64 * 1024 * 1024:
+    dp = round_up(d, SUBLANE)
+    bn = pick_block_n(lambda bn: 4 * (2 * dp * bn + bn))
+    np_ = round_up(n, bn)
+    if use_ref or dp * np_ > HUGE_ELEMS:
         return aopt_gains_ref(X, W, isig2)
-    Xp = jnp.zeros((dp, np_), jnp.float32).at[:d, :n].set(X)
-    Wp = jnp.zeros((dp, np_), jnp.float32).at[:d, :n].set(W)
+    Xp = pad2d(X, dp, np_)
+    Wp = pad2d(W, dp, np_)
     out = aopt_gains_pallas(Xp, Wp, isig2=float(isig2), block_n=bn,
                             interpret=interpret)
     return out[:n]

@@ -1,0 +1,82 @@
+"""Shared infrastructure for the Pallas kernel wrappers (the ops.py layer).
+
+Every kernel package does the same three things before dispatching:
+
+  1. decide between the compiled Pallas kernel, Pallas interpret mode,
+     and the pure-jnp reference (``resolve_path``),
+  2. pad operands to TPU-aligned shapes — sublane multiples on the
+     feature/basis axes, a candidate-block multiple on the ground-set
+     axis (``round_up`` / ``pad2d``),
+  3. pick the largest candidate block whose working set fits the VMEM
+     budget (``pick_block_n``).
+
+These heuristics used to be copy-pasted across ``marginal_gains``,
+``aopt_gains`` and ``logistic_gains``; they live here so a tiling or
+routing fix lands in every kernel at once.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# Leave headroom of the 16 MB v5e per-core VMEM for double buffering.
+VMEM_BUDGET = 12 * 1024 * 1024
+# Padded problems larger than this (f32 elements across the streamed
+# operands) stay on the jnp reference: the padding itself would dominate.
+HUGE_ELEMS = 64 * 1024 * 1024
+# f32 tiling constraints: (sublane, lane) = (8, 128).
+SUBLANE = 8
+LANE = 128
+BLOCK_N_CANDIDATES = (512, 256, 128)
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is ≥ ``x``."""
+    return ((x + m - 1) // m) * m
+
+
+def pick_block_n(
+    vmem_bytes: Callable[[int], int],
+    *,
+    budget: int = VMEM_BUDGET,
+    candidates: tuple[int, ...] = BLOCK_N_CANDIDATES,
+) -> int:
+    """Largest candidate block size whose VMEM working set fits.
+
+    ``vmem_bytes`` maps a candidate ``block_n`` to the number of bytes the
+    kernel holds resident per grid step (inputs + outputs + scratch).
+    Falls back to the smallest candidate when nothing fits — the kernel
+    then relies on the caller's ``HUGE_ELEMS`` guard.
+    """
+    for bn in candidates:
+        if vmem_bytes(bn) <= budget:
+            return bn
+    return candidates[-1]
+
+
+def resolve_path(interpret: bool | None) -> tuple[bool, bool]:
+    """Map the ops-level ``interpret`` argument to (use_ref, interpret).
+
+    * ``None``  — compiled Pallas on TPU, jnp reference everywhere else.
+      Interpret mode is orders of magnitude slower than the reference on
+      CPU, so it is never an implicit fallback — only an explicit choice.
+    * ``True``  — Pallas interpret mode (kernel validation on any host).
+    * ``False`` — compiled Pallas unconditionally.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu", False
+    return False, bool(interpret)
+
+
+def pad2d(x, rows: int, cols: int):
+    """Zero-pad a 2-D f32 array up to (rows, cols)."""
+    r, c = x.shape
+    return jnp.zeros((rows, cols), jnp.float32).at[:r, :c].set(x)
+
+
+def pad1d(x, size: int, fill: float = 0.0):
+    """Pad a 1-D f32 array up to ``size`` with ``fill``."""
+    return jnp.full((size,), fill, jnp.float32).at[: x.shape[0]].set(x)

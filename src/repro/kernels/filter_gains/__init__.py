@@ -1,0 +1,1 @@
+"""Sample-batched fused gain engine for the DASH filter step."""

@@ -1,0 +1,57 @@
+"""Public jit'd wrapper for the sample-batched filter-gain engine.
+
+Padding / block-size / backend routing via ``repro.kernels.common``:
+non-TPU backends run the (also sample-batched) jnp reference; Pallas
+interpret mode only when requested explicitly.  Padded delta columns and
+residual rows are zero, so they contribute nothing to the projections.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import (
+    HUGE_ELEMS,
+    SUBLANE,
+    pad1d,
+    pad2d,
+    pick_block_n,
+    resolve_path,
+    round_up,
+)
+from repro.kernels.filter_gains.kernel import filter_gains_pallas
+from repro.kernels.filter_gains.ref import SPAN_TOL, filter_gains_ref
+
+
+def filter_gains(X, Q, D, R, col_sq, *, interpret: bool | None = None):
+    """Sample-batched filter gains for DASH.
+
+    X: (d, n) candidates; Q: (d, k) shared basis; D: (m, d, b) per-sample
+    orthonormal deltas (⊥ Q); R: (m, d) per-sample residuals; col_sq:
+    (n,).  Returns (m, n) unnormalized gains, one row per sample.
+    """
+    use_ref, interpret = resolve_path(interpret)
+    d, n = X.shape
+    k = Q.shape[1]
+    m, _, b = D.shape
+    dp = round_up(d, SUBLANE)
+    kp = round_up(max(k, 1), SUBLANE)
+    bp = round_up(max(b, 1), SUBLANE)
+    # f32 bytes resident per grid step: X block, Q, D_i, r_i, col_sq,
+    # base scratch + out block.
+    bn = pick_block_n(lambda bn: 4 * (dp * (bn + kp + bp + 1) + 3 * bn))
+    np_ = round_up(n, bn)
+    if use_ref or dp * (np_ + kp + m * bp) > HUGE_ELEMS:
+        return filter_gains_ref(X, Q, D, R, col_sq)
+
+    Xp = pad2d(X, dp, np_)
+    Qp = pad2d(Q, dp, kp)
+    Dp = jnp.zeros((m, dp, bp), jnp.float32).at[:, :d, :b].set(D)
+    Rp = jnp.zeros((m, dp), jnp.float32).at[:, :d].set(R)
+    # Padded candidates: col_sq = 1 so the span guard clamps them to 0.
+    cp = pad1d(col_sq, np_, fill=1.0)
+    out = filter_gains_pallas(
+        Xp, Qp, Dp, Rp, cp, block_n=bn, span_tol=SPAN_TOL,
+        interpret=interpret,
+    )
+    return out[:, :n]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the sample-batched DASH filter-gain computation.
+
+The filter step of DASH estimates Ê_R[f_{S∪R}(a)] for every candidate a
+over ``n_samples`` Monte-Carlo sets R_1..R_m.  Each perturbed state
+S ∪ R_i shares the current orthonormal basis Q of span(X_S) and appends
+a small per-sample delta D_i (the ≤ block new orthonormal columns MGS
+produced for R_i).  With per-sample residual r_i the gain of candidate a
+under sample i is:
+
+    gain_i(a) = (x_aᵀ r_i)² / (‖x_a‖² − ‖Qᵀ x_a‖² − ‖D_iᵀ x_a‖²)
+
+because D_i ⊥ span(Q) implies ‖[Q D_i]ᵀ x‖² = ‖Qᵀx‖² + ‖D_iᵀx‖².  The
+shared-base term is computed ONCE for all samples — that is the whole
+point of the engine: the per-sample path pays an (n_samples · kcap · d
+· n) GEMM, this formulation pays (kcap + n_samples · block) · d · n.
+
+In-span candidates (denominator ≤ tol·‖x_a‖²) are clamped to 0, matching
+``marginal_gains.ref``.  Unnormalized — the objective divides by ‖y‖².
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SPAN_TOL = 1e-6
+
+
+def filter_gains_ref(X, Q, D, R, col_sq, *, span_tol: float = SPAN_TOL):
+    """X: (d, n); Q: (d, k) shared zero-padded orthonormal basis;
+    D: (m, d, b) per-sample delta bases (zero-padded, ⊥ Q);
+    R: (m, d) per-sample residuals; col_sq: (n,) column squared norms.
+    Returns (m, n) f32 gains."""
+    c = R @ X                                          # (m, n)
+    B = Q.T @ X                                        # (k, n)
+    base = jnp.sum(B * B, axis=0)                      # (n,) — shared
+    BD = jnp.einsum("mdb,dn->mbn", D, X)               # (m, b, n)
+    sd = jnp.sum(BD * BD, axis=1)                      # (m, n)
+    denom = (col_sq - base)[None, :] - sd
+    floor = span_tol * jnp.maximum(col_sq, 1.0)
+    gains = (c * c) / jnp.maximum(denom, 1e-30)
+    return jnp.where(denom > floor[None, :], gains, 0.0)

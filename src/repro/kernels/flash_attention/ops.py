@@ -2,7 +2,8 @@
 
 Accepts the model's (B, S, H, D) layout with GQA (Hkv ≤ H), repeats KV
 heads, pads sequence dims to block multiples, and dispatches to the
-Pallas kernel (interpret mode off-TPU for validation).
+Pallas kernel on TPU.  Non-TPU backends run the jnp reference; interpret
+mode only when requested explicitly (``interpret=True``).
 
 Note on block-sparsity: for causal/windowed masks, real-TPU deployments
 prune fully-masked (iq, ik) grid cells with a block-sparse grid
@@ -12,15 +13,11 @@ exp(−inf)=0 no-ops so interpret-mode validation covers the same code.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_path, round_up as _round_up
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
@@ -28,8 +25,10 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     block_q: int = 128, block_kv: int = 128,
                     interpret: bool | None = None):
     """q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D) → (B, Sq, H, D)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    use_ref, interpret = resolve_path(interpret)
+    if use_ref:
+        return flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, q_offset=q_offset)
     b, sq, h, d = q.shape
     skv, hkv = k.shape[1], k.shape[2]
 

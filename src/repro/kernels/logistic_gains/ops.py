@@ -1,40 +1,37 @@
-"""Public jit'd wrapper for the logistic-gains kernel."""
+"""Public jit'd wrapper for the logistic-gains kernel.
+
+Padding / block-size / backend routing via ``repro.kernels.common``:
+non-TPU backends run the jnp reference; interpret mode only when
+requested explicitly.
+"""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
+from repro.kernels.common import (
+    HUGE_ELEMS,
+    SUBLANE,
+    pad1d,
+    pad2d,
+    pick_block_n,
+    resolve_path,
+    round_up,
+)
 from repro.kernels.logistic_gains.kernel import logistic_gains_pallas
 from repro.kernels.logistic_gains.ref import logistic_gains_ref
-
-_VMEM_BUDGET = 12 * 1024 * 1024
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def _pick_block_n(d: int) -> int:
-    for bn in (512, 256, 128):
-        if 4 * (d * bn + 2 * d + 4 * bn) <= _VMEM_BUDGET:
-            return bn
-    return 128
 
 
 def logistic_gains(X, y, eta, *, steps: int = 3,
                    interpret: bool | None = None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    use_ref, interpret = resolve_path(interpret)
     d, n = X.shape
-    dp = _round_up(d, 8)
-    bn = _pick_block_n(dp)
-    np_ = _round_up(n, bn)
-    if dp * np_ > 64 * 1024 * 1024:
+    dp = round_up(d, SUBLANE)
+    bn = pick_block_n(lambda bn: 4 * (dp * bn + 2 * dp + 4 * bn))
+    np_ = round_up(n, bn)
+    if use_ref or dp * np_ > HUGE_ELEMS:
         return logistic_gains_ref(X, y, eta, steps=steps)
-    Xp = jnp.zeros((dp, np_), jnp.float32).at[:d, :n].set(X)
-    yp = jnp.zeros((dp,), jnp.float32).at[:d].set(y)
-    ep = jnp.zeros((dp,), jnp.float32).at[:d].set(eta)
+    Xp = pad2d(X, dp, np_)
+    yp = pad1d(y, dp)
+    ep = pad1d(eta, dp)
     out = logistic_gains_pallas(Xp, yp, ep, steps=steps, block_n=bn,
                                 interpret=interpret)
     return out[:n]

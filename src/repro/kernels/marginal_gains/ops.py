@@ -1,52 +1,47 @@
 """Public jit'd wrapper for the marginal-gains kernel.
 
-Pads shapes to TPU-friendly multiples, picks a block size that fits VMEM,
-and falls back to the jnp reference on hosts without a TPU (interpret mode
-is used for validation, not production CPU serving).
+Pads shapes to TPU-friendly multiples, picks a block size that fits VMEM
+(heuristics shared via ``repro.kernels.common``), and routes non-TPU
+backends to the jnp reference.  Pallas interpret mode is reachable only
+by passing ``interpret=True`` explicitly — it validates the kernel on
+CPU but is orders of magnitude slower than the reference, so it is never
+an implicit fallback.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
+from repro.kernels.common import (
+    HUGE_ELEMS,
+    SUBLANE,
+    pad1d,
+    pad2d,
+    pick_block_n,
+    resolve_path,
+    round_up,
+)
 from repro.kernels.marginal_gains.kernel import regression_gains_pallas
 from repro.kernels.marginal_gains.ref import SPAN_TOL, regression_gains_ref
 
-_VMEM_BUDGET = 12 * 1024 * 1024  # leave headroom of the 16MB v5e VMEM
-
-
-def _round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def _pick_block_n(d: int, k: int) -> int:
-    # f32 bytes: d*(bn + k + 1)*4 + 2*bn*4  ≤ budget
-    for bn in (512, 256, 128):
-        if 4 * (d * (bn + k + 1) + 2 * bn) <= _VMEM_BUDGET:
-            return bn
-    return 128
-
 
 def regression_gains(X, Q, resid, col_sq, *, interpret: bool | None = None):
-    """Batched regression gains; Pallas path with padding, ref fallback."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    """Batched regression gains; Pallas on TPU, jnp reference elsewhere."""
+    use_ref, interpret = resolve_path(interpret)
     d, n = X.shape
     k = Q.shape[1]
-    dp = _round_up(d, 8)
-    kp = _round_up(max(k, 1), 8)
-    bn = _pick_block_n(dp, kp)
-    np_ = _round_up(n, bn)
-    if dp * (np_ + kp) > 64 * 1024 * 1024:  # huge problems: stay on ref
+    dp = round_up(d, SUBLANE)
+    kp = round_up(max(k, 1), SUBLANE)
+    # f32 bytes resident per grid step: X block, Q, resid, col_sq + out.
+    bn = pick_block_n(lambda bn: 4 * (dp * (bn + kp + 1) + 2 * bn))
+    np_ = round_up(n, bn)
+    if use_ref or dp * (np_ + kp) > HUGE_ELEMS:
         return regression_gains_ref(X, Q, resid, col_sq)
 
-    Xp = jnp.zeros((dp, np_), jnp.float32).at[:d, :n].set(X)
-    Qp = jnp.zeros((dp, kp), jnp.float32).at[:d, :k].set(Q)
-    rp = jnp.zeros((dp,), jnp.float32).at[:d].set(resid)
+    Xp = pad2d(X, dp, np_)
+    Qp = pad2d(Q, dp, kp)
+    rp = pad1d(resid, dp)
     # Padded columns are all-zero: give them col_sq = 1 so the span guard
     # clamps their gain to 0 instead of dividing 0/0.
-    cp = jnp.ones((np_,), jnp.float32).at[:n].set(col_sq)
+    cp = pad1d(col_sq, np_, fill=1.0)
     out = regression_gains_pallas(
         Xp, Qp, rp, cp, block_n=bn, span_tol=SPAN_TOL, interpret=interpret
     )

@@ -150,6 +150,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax < 0.6 returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     parsed = module_costs(hlo)   # trip-count-folded (utils/hlo.py)
     n_chips = 512 if multi_pod else 256

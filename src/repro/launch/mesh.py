@@ -25,17 +25,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod mesh, or 2×16×16 multi-pod mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = (POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod else (DATA_AXIS, MODEL_AXIS)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    """Arbitrary mesh (tests, elastic resizes, selection meshes)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    """Arbitrary mesh (tests, elastic resizes, selection meshes).
+
+    ``axis_types`` only exists on newer jax (explicit-sharding work);
+    every axis here is Auto, which is also the old default — so omit the
+    argument on versions that predate ``jax.sharding.AxisType``.
+    """
+    shape, axes = tuple(shape), tuple(axes)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_host_mesh(max_devices: int | None = None, axes=("data", "model")):

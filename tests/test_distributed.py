@@ -131,6 +131,34 @@ def test_dryrun_single_cell_both_meshes():
     assert res["chips"] == [256, 512]
 
 
+def test_dist_mgs_add_set_at_capacity_leaves_basis_intact():
+    """Regression test for the distributed oracle mirror: at capacity a
+    rejected column must not clobber the last basis vector (the unguarded
+    dynamic_update_slice used to zero it)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.distributed import _mgs_add_set
+
+    rng = np.random.default_rng(0)
+    d, kmax = 40, 4
+    C_fill = jnp.asarray(rng.normal(size=(d, kmax)), jnp.float32)
+    Q0 = jnp.zeros((d, kmax), jnp.float32)
+    r0 = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    Q, count, resid = _mgs_add_set(Q0, jnp.zeros((), jnp.int32), r0,
+                                   C_fill, kmax)
+    assert int(count) == kmax
+    # basis is orthonormal and full
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(kmax),
+                               rtol=0, atol=1e-4)
+    # at-capacity extension attempts are exact no-ops
+    C_more = jnp.asarray(rng.normal(size=(d, 3)), jnp.float32)
+    Q2, count2, resid2 = _mgs_add_set(Q, count, resid, C_more, kmax)
+    np.testing.assert_array_equal(np.asarray(Q2), np.asarray(Q))
+    np.testing.assert_array_equal(np.asarray(resid2), np.asarray(resid))
+    assert int(count2) == kmax
+
+
 def test_straggler_robust_estimate():
     import jax.numpy as jnp
 

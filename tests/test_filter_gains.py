@@ -1,0 +1,144 @@
+"""Sample-batched filter-gain engine: kernel vs ref vs per-sample path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dash import DashConfig, _estimate_elem_gains
+from repro.core.objectives import RegressionObjective, normalize_columns
+from repro.kernels.filter_gains.ops import filter_gains
+from repro.kernels.filter_gains.ref import filter_gains_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _shared_and_deltas(d, k, m, b):
+    """Random shared basis Q (d, k) and per-sample deltas D (m, d, b) ⊥ Q."""
+    if k:
+        Q, _ = np.linalg.qr(RNG.normal(size=(d, k)))
+    else:
+        Q = np.zeros((d, 1))
+    D = []
+    for _ in range(m):
+        Di = RNG.normal(size=(d, max(b, 1)))
+        Di = Di - Q @ (Q.T @ Di)
+        Di, _ = np.linalg.qr(Di)
+        D.append(Di[:, : max(b, 1)])
+    return jnp.asarray(Q, jnp.float32), jnp.asarray(np.stack(D), jnp.float32)
+
+
+@pytest.mark.parametrize("d,n,k,b,m", [
+    (32, 64, 0, 1, 2),        # empty shared basis
+    (100, 300, 7, 4, 5),      # n % block_n != 0 → padding
+    (128, 128, 16, 8, 3),
+    (257, 513, 5, 3, 8),      # everything misaligned
+    (64, 1000, 32, 2, 4),
+])
+def test_filter_gains_kernel_matches_ref(d, n, k, b, m):
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    Q, D = _shared_and_deltas(d, k, m, b)
+    R = jnp.asarray(RNG.normal(size=(m, d)), jnp.float32)
+    csq = jnp.sum(X * X, axis=0)
+    got = filter_gains(X, Q, D, R, csq, interpret=True)
+    want = filter_gains_ref(X, Q, D, R, csq)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_filter_gains_zero_delta_matches_marginal_gains():
+    """With all-zero deltas every sample row reduces to the plain
+    per-state marginal-gain oracle."""
+    from repro.kernels.marginal_gains.ref import regression_gains_ref
+
+    d, n, k, m = 48, 96, 6, 3
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    Q, _ = _shared_and_deltas(d, k, 1, 1)
+    D = jnp.zeros((m, d, 4), jnp.float32)
+    r = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    R = jnp.broadcast_to(r, (m, d))
+    csq = jnp.sum(X * X, axis=0)
+    got = filter_gains_ref(X, Q, D, R, csq)
+    want = regression_gains_ref(X, Q, r, csq)
+    for i in range(m):
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def _problem(d=80, n=50, kmax=10, **kw):
+    rng = np.random.default_rng(7)
+    X = normalize_columns(jnp.asarray(rng.normal(size=(d, n)), jnp.float32))
+    y = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    return RegressionObjective(X, y, kmax=kmax, **kw)
+
+
+@pytest.mark.parametrize("n_sel", [0, 3, 7])
+def test_engine_estimate_matches_per_sample_path(n_sel):
+    """_estimate_elem_gains via the engine == the per-sample vmap path."""
+    obj_ps = _problem(use_filter_engine=False)
+    obj_en = _problem(use_filter_engine=True)
+    st = obj_ps.init()
+    if n_sel:
+        idx = jnp.arange(n_sel, dtype=jnp.int32) * 3
+        st = obj_ps.add_set(st, idx, jnp.ones(n_sel, bool))
+    cfg = DashConfig(k=obj_ps.kmax, n_samples=6).resolve(obj_ps.n)
+    alive = jnp.ones((obj_ps.n,), bool) & ~st.sel_mask
+    key = jax.random.PRNGKey(11)
+    allowed = jnp.asarray(obj_ps.kmax - n_sel)
+    est_ps = _estimate_elem_gains(obj_ps, st, alive, 4, allowed, key, cfg)
+    est_en = _estimate_elem_gains(obj_en, st, alive, 4, allowed, key, cfg)
+    np.testing.assert_allclose(np.asarray(est_en), np.asarray(est_ps),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_engine_estimate_at_capacity_basis():
+    """With |S| = kmax nothing can be accepted: both paths must agree and
+    the engine must not disturb the shared basis."""
+    obj_ps = _problem(kmax=5, use_filter_engine=False)
+    obj_en = _problem(kmax=5, use_filter_engine=True)
+    idx = jnp.asarray([0, 4, 8, 12, 16], jnp.int32)
+    st = obj_ps.add_set(obj_ps.init(), idx, jnp.ones(5, bool))
+    assert int(st.count) == 5
+    cfg = DashConfig(k=5, n_samples=4).resolve(obj_ps.n)
+    alive = jnp.ones((obj_ps.n,), bool) & ~st.sel_mask
+    key = jax.random.PRNGKey(2)
+    allowed = jnp.asarray(0)
+    est_ps = _estimate_elem_gains(obj_ps, st, alive, 3, allowed, key, cfg)
+    est_en = _estimate_elem_gains(obj_en, st, alive, 3, allowed, key, cfg)
+    np.testing.assert_allclose(np.asarray(est_en), np.asarray(est_ps),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_expand_basis_matches_add_set():
+    """[Q | D] from expand_basis spans the same space as add_set's Q and
+    yields the same residual."""
+    obj = _problem()
+    st = obj.add_set(obj.init(), jnp.asarray([1, 5], jnp.int32),
+                     jnp.ones(2, bool))
+    idx = jnp.asarray([9, 20, 33], jnp.int32)
+    mask = jnp.asarray([True, True, False])
+    D, resid = obj.expand_basis(st, idx, mask)
+    st2 = obj.add_set(st, idx, mask)
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(st2.resid),
+                               rtol=1e-4, atol=1e-5)
+    # D columns are orthonormal and ⊥ the shared basis
+    accepted = np.asarray(jnp.sum(D * D, axis=0)) > 0.5
+    Dn = np.asarray(D)[:, accepted]
+    np.testing.assert_allclose(Dn.T @ Dn, np.eye(Dn.shape[1]),
+                               rtol=0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st.Q).T @ Dn, 0, rtol=0, atol=1e-4)
+
+
+def test_dash_end_to_end_with_engine():
+    """DASH runs with the engine enabled and stays within cardinality,
+    deterministic given the key."""
+    from repro.core import dash
+
+    obj = _problem(use_filter_engine=True)
+    cfg = DashConfig(k=obj.kmax, eps=0.25, alpha=0.6, n_samples=4)
+    r1 = dash(obj, cfg, jax.random.PRNGKey(0), opt=0.9)
+    r2 = dash(obj, cfg, jax.random.PRNGKey(0), opt=0.9)
+    assert int(r1.sel_count) <= obj.kmax
+    assert float(r1.value) == float(r2.value)
+    assert bool(jnp.all(r1.sel_mask == r2.sel_mask))

@@ -67,6 +67,35 @@ class TestRegression:
         res = greedy(obj, k)
         assert 0.0 <= float(res.value) <= 1.0 + 1e-6
 
+    def test_at_capacity_add_set_leaves_basis_intact(self, reg_obj):
+        """Regression test: a rejected candidate (count == kmax) used to
+        clobber the last basis vector with an all-zero column via the
+        unguarded dynamic_update_slice."""
+        obj, _ = reg_obj
+        st = obj.init()
+        # fill the basis to capacity
+        idx = jnp.arange(obj.kmax, dtype=jnp.int32)
+        st = obj.add_set(st, idx, jnp.ones(obj.kmax, bool))
+        assert int(st.count) == obj.kmax
+        Q0, r0, v0 = np.asarray(st.Q), np.asarray(st.resid), float(st.value)
+        # further add_set calls must be exact no-ops on the basis
+        for a in (obj.kmax + 1, obj.kmax + 5):
+            st2 = obj.add_set(st, jnp.asarray([a], jnp.int32),
+                              jnp.ones(1, bool))
+            np.testing.assert_array_equal(np.asarray(st2.Q), Q0)
+            np.testing.assert_array_equal(np.asarray(st2.resid), r0)
+            assert int(st2.count) == obj.kmax
+            assert float(st2.value) == v0
+        # and gains / set_gain for already-selected elements must stay ~0
+        # (with a clobbered basis the last accepted element would leave
+        # span(Q) and report a spurious positive gain)
+        st3 = obj.add_set(st, jnp.asarray([obj.kmax + 1], jnp.int32),
+                          jnp.ones(1, bool))
+        g = obj.gains(st3)
+        assert bool(jnp.all(g[np.asarray(idx)] == 0.0))
+        sg = float(obj.set_gain(st3, idx[-1:], jnp.ones(1, bool)))
+        assert sg < 1e-4
+
 
 class TestClassification:
     def test_greedy_close_to_bruteforce(self, cls_obj):
