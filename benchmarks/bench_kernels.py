@@ -17,36 +17,26 @@ from repro.kernels.marginal_gains.ref import regression_gains_ref
 RNG = np.random.default_rng(0)
 
 
-def bench_filter_engine(m: int = 8, d: int = 1024, n: int = 4096,
-                        kcap: int = 64, block: int = 8):
-    """Sample-batched filter engine vs the per-sample vmap path.
-
-    Times ``_estimate_elem_gains`` — the DASH filter statistic — both
-    ways on identical state and keys.  The per-sample path pays an
-    (m · kcap · d · n) projection GEMM plus a full-width MGS per sample;
-    the engine computes the shared-base projection once and only the
-    (m · block · d · n) delta projections per sample.
+def _bench_filter_pair(tag: str, obj_ps, obj_en, fill: int, m: int,
+                       block: int, derived: str):
+    """Time ``_estimate_elem_gains`` — the DASH filter statistic — through
+    the engine (``obj_en``) and the per-sample vmap path (``obj_ps``) on
+    identical state and keys, and emit per_sample/engine/speedup rows.
     """
-    import jax.numpy as jnp
-
     from repro.core.dash import DashConfig, _estimate_elem_gains
-    from repro.core.objectives import RegressionObjective, normalize_columns
 
-    X = normalize_columns(jnp.asarray(RNG.normal(size=(d, n)), jnp.float32))
-    y = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
-    obj_ps = RegressionObjective(X, y, kmax=kcap, use_filter_engine=False)
-    obj_en = RegressionObjective(X, y, kmax=kcap, use_filter_engine=True)
-    # half-full basis: the engine's win is reusing these kcap/2 columns
-    fill = jnp.arange(kcap // 2, dtype=jnp.int32)
-    state = obj_ps.add_set(obj_ps.init(), fill, jnp.ones(kcap // 2, bool))
+    n = obj_ps.n
+    # part-filled solution: the engine's win is reusing the shared state
+    idx = jnp.arange(fill, dtype=jnp.int32)
+    state = obj_ps.add_set(obj_ps.init(), idx, jnp.ones(fill, bool))
     alive = jnp.ones((n,), bool) & ~state.sel_mask
-    cfg = DashConfig(k=kcap, n_samples=m).resolve(n)
+    cfg = DashConfig(k=obj_ps.kmax, n_samples=m).resolve(n)
     key = jax.random.PRNGKey(0)
     allowed = jnp.asarray(block)
 
     def run_with(obj):
         # state passed as an argument so XLA cannot constant-fold the
-        # basis projections into the compiled executable
+        # shared-state projections into the compiled executable
         f = jax.jit(lambda st, k: _estimate_elem_gains(
             obj, st, alive, block, allowed, k, cfg))
         return wall_time(lambda: jax.block_until_ready(f(state, key)),
@@ -56,13 +46,66 @@ def bench_filter_engine(m: int = 8, d: int = 1024, n: int = 4096,
     t_en, est_en = run_with(obj_en)
     err = float(jnp.max(jnp.abs(est_en - est_ps))
                 / jnp.maximum(jnp.max(jnp.abs(est_ps)), 1e-12))
-    emit("kernel/filter_gains_per_sample", t_ps * 1e6,
-         f"m={m};d={d};n={n};kcap={kcap}")
-    emit("kernel/filter_gains_engine", t_en * 1e6,
-         f"m={m};d={d};n={n};kcap={kcap};block={block}")
-    emit("kernel/filter_gains_speedup", 0.0,
+    emit(f"kernel/{tag}_per_sample", t_ps * 1e6, derived)
+    emit(f"kernel/{tag}_engine", t_en * 1e6, f"{derived};block={block}")
+    emit(f"kernel/{tag}_speedup", 0.0,
          f"engine_over_per_sample={t_ps / t_en:.2f}x;max_rel_err={err:.2e}")
     return t_ps, t_en, err
+
+
+def bench_filter_engine(m: int = 8, d: int = 1024, n: int = 4096,
+                        kcap: int = 64, block: int = 8):
+    """Regression filter statistic.  The per-sample path pays an
+    (m · kcap · d · n) projection GEMM plus a full-width MGS per sample;
+    the engine computes the shared-base projection once and only the
+    (m · block · d · n) delta projections per sample."""
+    from repro.core.objectives import RegressionObjective, normalize_columns
+
+    X = normalize_columns(jnp.asarray(RNG.normal(size=(d, n)), jnp.float32))
+    y = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    return _bench_filter_pair(
+        "filter_gains",
+        RegressionObjective(X, y, kmax=kcap, use_filter_engine=False),
+        RegressionObjective(X, y, kmax=kcap, use_filter_engine=True),
+        kcap // 2, m, block, f"m={m};d={d};n={n};kcap={kcap}")
+
+
+def bench_aopt_filter_engine(m: int = 8, d: int = 256, n: int = 2048,
+                             block: int = 8):
+    """A-optimality filter statistic.  The per-sample path re-factorizes
+    M_i and pays two (d, d, n) triangular solves per sample; the engine
+    reads the state-cached shared solve plus (m · block · d · n) delta
+    GEMMs."""
+    from repro.core.objectives import AOptimalityObjective
+
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    X = X / jnp.linalg.norm(X, axis=0, keepdims=True)
+    kw = dict(kmax=n, beta2=1.0, sigma2=1.0)
+    return _bench_filter_pair(
+        "aopt_filter",
+        AOptimalityObjective(X, use_filter_engine=False, **kw),
+        AOptimalityObjective(X, use_filter_engine=True, **kw),
+        32, m, block, f"m={m};d={d};n={n}")
+
+
+def bench_logistic_filter_engine(m: int = 8, d: int = 512, n: int = 2048,
+                                 kcap: int = 32, block: int = 4):
+    """Logistic filter statistic.  Unlike the regression/A-opt epilogues
+    there is no shared GEMM, so on CPU (jnp reference both ways) this is
+    a parity check at ~1× — the engine's win is the fused Pallas launch
+    streaming X from HBM once for all samples, which only shows on TPU.
+    """
+    from repro.core.objectives import ClassificationObjective, \
+        normalize_columns
+
+    X0 = RNG.normal(size=(d, n))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32)) * np.sqrt(d)
+    y = jnp.asarray((RNG.uniform(size=d) > 0.5).astype(np.float32))
+    return _bench_filter_pair(
+        "logistic_filter",
+        ClassificationObjective(X, y, kmax=kcap, use_filter_engine=False),
+        ClassificationObjective(X, y, kmax=kcap, use_filter_engine=True),
+        kcap // 2, m, block, f"m={m};d={d};n={n};kcap={kcap}")
 
 
 def run():
@@ -91,8 +134,11 @@ def run():
     t, _ = wall_time(f)
     emit("kernel/logistic_gains_ref", t * 1e6, f"d={d};n={n};steps=3")
 
-    # sample-batched filter engine — the DASH inner-loop hot-spot
+    # sample-batched filter engine — the DASH inner-loop hot-spot,
+    # one epilogue per objective
     bench_filter_engine()
+    bench_aopt_filter_engine()
+    bench_logistic_filter_engine()
 
     # flash attention
     b, s, h, hkv, dh = 1, 1024, 8, 2, 64
@@ -106,5 +152,28 @@ def run():
          f"s={s};h={h};gflops={aflops / t / 1e9:.1f}")
 
 
-if __name__ == "__main__":
+def main() -> None:
+    import argparse
+    import json
+
+    from benchmarks.common import rows
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--json", nargs="?", const="BENCH_kernels.json", default=None,
+        metavar="PATH",
+        help="also write the emitted rows as a JSON trajectory artifact "
+             "(default path: BENCH_kernels.json)",
+    )
+    args = ap.parse_args()
     run()
+    if args.json:
+        payload = {"suite": "bench_kernels",
+                   "backend": jax.default_backend(), "rows": rows()}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,5 +27,15 @@ def wall_time(fn, *args, warmup=1, iters=3, **kw):
     return (time.perf_counter() - t0) / iters, out
 
 
+_ROWS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def rows() -> list[dict]:
+    """All rows emitted so far (for --json trajectory artifacts)."""
+    return list(_ROWS)

@@ -1,4 +1,11 @@
-"""DASH — Differentially-Adaptive-Sampling (paper Algorithm 1).
+"""DASH — Differentially-Adaptive-Sampling (paper Algorithm 1, Thm 10).
+
+For α-differentially-submodular objectives (Definition 1 — the sandwich
+α²·g(S ∪ T) − α²·g(S) ≤ f_S(T) ≤ g(S ∪ T) − g(S) for a submodular g;
+Corollaries 7/8/9 prove α for regression, classification and A-optimal
+design), DASH achieves f(S) ≥ (1 − 1/e^{α²} − ε)·OPT in O(log n)
+adaptive rounds — the exponential speedup over greedy's k sequential
+rounds that is the point of the paper.
 
 Per outer round (r rounds total, each adding a block of ⌈k/r⌉ elements):
 
@@ -6,6 +13,12 @@ Per outer round (r rounds total, each adding a block of ⌈k/r⌉ elements):
   while  Ê_{R~U(X)}[f_S(R)]  <  α²·t/r:
       X ← X \\ { a : Ê_R[f_{S∪R}(a)] < α(1+ε/2)·t/k }      (filter)
   S ← S ∪ R,  R ~ U(X)
+
+The filter statistic Ê_R[f_{S∪R}(a)] — a fresh batched gain oracle at
+every Monte-Carlo perturbed state S ∪ R_i — dominates the cost of each
+inner iteration; ``_estimate_elem_gains`` routes it through the
+sample-batched filter engine (``repro.kernels.filter_gains``) whenever
+the objective opts in via its ``use_filter_engine`` flag.
 
 Differences from the idealized listing (all from the paper's App. G):
   * expectations are Monte-Carlo estimates over ``n_samples`` sets
@@ -95,10 +108,18 @@ def _estimate_set_gain(obj, state, alive, block, allowed, key, cfg):
 def _estimate_elem_gains(obj, state, alive, block, allowed, key, cfg):
     """Ê_R[f_{S∪(R\\{a})}(a)] for every a — the filter statistic.
 
+    Estimator: draw ``cfg.n_samples`` i.i.d. sets R_i ~ U(X), evaluate
+    the batched gain vector at each perturbed state S ∪ R_i, and average
+    per candidate over only the samples with a ∉ R_i (weight matrix
+    below) — exact leave-one-out semantics for the samples that matter,
+    with the current-state gain as fallback when every sample contains
+    a.  This is the Alg. 1 filter expectation of App. G.
+
     Objectives exposing ``filter_gains_batch`` (gated by their
-    ``use_filter_engine`` flag) evaluate all ``n_samples`` perturbed
-    states in one fused pass (repro.kernels.filter_gains); everything
-    else takes the per-sample add_set + gains path via vmap.
+    ``use_filter_engine`` flag — regression, A-optimality and logistic
+    all do) evaluate all ``n_samples`` perturbed states in one fused
+    pass (repro.kernels.filter_gains); everything else takes the
+    per-sample add_set + gains path via vmap.
     """
     n = alive.shape[0]
     idx, valid = sample_set_batch(key, alive, block, cfg.n_samples)

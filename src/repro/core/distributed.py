@@ -1,5 +1,10 @@
 """Distributed DASH — the paper's parallelism mapped onto a device mesh.
 
+This is the shard_map realization of paper Algorithm 1 (Thm 10): the
+O(log n)-adaptivity guarantee only buys wall-clock time if every round's
+oracle sweep really runs as one parallel pass, which is what the layout
+below provides.
+
 Layout (DESIGN.md §2/§5):
   * ground-set columns of X sharded over the ``model`` axis — each shard
     evaluates the batched gain oracle for its own candidate block
@@ -19,6 +24,19 @@ Everything else is shard-local dense linear algebra.  This is why DASH
 parallelizes: per round the communication volume is O(d·b + n/P), while
 greedy must synchronize after every single pick (k rounds of latency).
 
+Filter loop (the inner while of Alg. 1): the statistic Ê_R[f_{S∪R}(a)]
+is estimated exactly as in ``core.dash._estimate_elem_gains`` — gains at
+every Monte-Carlo perturbed state S ∪ R_i, leave-one-out-averaged over
+the samples with a ∉ R_i, pmean'd over the data axis.  With
+``use_filter_engine=True`` (the default) the per-shard evaluation goes
+through the sample-batched filter engine: the shared basis Q stays
+replicated, each sample contributes only its delta columns D_i ⊥ Q and
+residual r_i (``_mgs_expand_basis``), and one fused
+``repro.kernels.filter_gains`` call sweeps the local candidate shard for
+ALL samples — sharding the engine's candidate axis over ``model`` is
+exactly shard_map-compatible because the call is shard-local dense math
+with no collectives inside.
+
 The implementation is a faithful mirror of ``core/dash.py``; it is tested
 against it for solution quality and for exact cross-shard state agreement.
 """
@@ -35,8 +53,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.dash import DashConfig, DashTrace
 from repro.core.objectives.base import write_accepted_column
-from repro.core.objectives.regression import RegressionObjective
-from repro.core.objectives.a_optimal import AOptimalityObjective
 
 
 class DistDashResult(NamedTuple):
@@ -113,6 +129,43 @@ def _mgs_add_set(Q, count, resid, C, kmax: int, span_tol: float = 1e-6):
     return jax.lax.fori_loop(0, m, body, (Q, count, resid))
 
 
+def _mgs_expand_basis(Q, count, resid, C, kmax: int, span_tol: float = 1e-6):
+    """MGS deltas for S ∪ R without rewriting the shared basis.
+
+    The filter-engine analogue of ``_mgs_add_set``: the same accept rule,
+    but accepted columns land in a fresh (d, m) buffer D ⊥ span(Q) so the
+    engine can reuse the replicated Q across every Monte-Carlo sample.
+    Returns (D, resid) — the per-sample delta basis and residual.
+    """
+    m = C.shape[1]
+
+    def body(j, carry):
+        D, dcount, r = carry
+        v = C[:, j]
+        nrm0 = jnp.sqrt(jnp.sum(v * v))
+        # Two rounds of MGS against the shared basis + earlier deltas.
+        v = v - Q @ (Q.T @ v)
+        v = v - D @ (D.T @ v)
+        v = v - Q @ (Q.T @ v)
+        v = v - D @ (D.T @ v)
+        nrm = jnp.sqrt(jnp.sum(v * v))
+        accept = (
+            (nrm0 > 0)
+            & (nrm > span_tol * jnp.maximum(nrm0, 1.0))
+            & (count + dcount < kmax)
+        )
+        q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
+        D = write_accepted_column(D, jnp.minimum(dcount, m - 1), accept, q)
+        r = r - q * jnp.dot(q, r)
+        return D, dcount + accept.astype(jnp.int32), r
+
+    D0 = jnp.zeros((Q.shape[0], m), jnp.float32)
+    D, _, r = jax.lax.fori_loop(
+        0, m, body, (D0, jnp.zeros((), jnp.int32), resid)
+    )
+    return D, r
+
+
 # ---------------------------------------------------------------------------
 # distributed regression oracle state (Q, resid replicated; sel_mask local)
 # ---------------------------------------------------------------------------
@@ -120,10 +173,18 @@ def _mgs_add_set(Q, count, resid, C, kmax: int, span_tol: float = 1e-6):
 def dash_distributed_regression(
     X, y, cfg: DashConfig, key, opt, mesh,
     *, model_axis: str = "model", data_axis: str | None = "data",
+    use_filter_engine: bool = True,
 ):
     """Run DASH with candidates sharded over ``model_axis`` and Monte-Carlo
     replicas over ``data_axis``.  X: (d, n) with n divisible by the model
-    axis size (pad first — see ``pad_ground_set``)."""
+    axis size (pad first — see ``pad_ground_set``).
+
+    ``use_filter_engine`` routes the filter statistic through the
+    sample-batched engine (one fused sweep of the local candidate shard
+    for all ``cfg.n_samples`` perturbed states); False forces the
+    per-sample add_set + gains path, which re-projects the full shard
+    against the basis once per sample.
+    """
     d, n = X.shape
     cfg = cfg.resolve(n)
     Pm = mesh.shape[model_axis]
@@ -183,20 +244,39 @@ def dash_distributed_regression(
         def estimate_elem_gains(Q, count, resid, sel_local, alive, allowed, key):
             didx = jax.lax.axis_index(data_axis) if data_axis else 0
             kd = jax.random.fold_in(key, didx)
+            keys = jax.random.split(kd, cfg.n_samples)
 
-            def one(kk):
+            def draw(kk):
+                # Collectives (all_gather / psum over the model axis) stay
+                # in this per-sample stage; the gain sweep below is
+                # shard-local.
                 idx_l, owned, validg = _dist_sample(kk, alive, block, n_local, model_axis)
                 slot_ok = validg & (jnp.arange(block) < allowed)
                 C = _dist_gather_columns(X_local, idx_l, owned & slot_ok, model_axis)
-                Q2, _, r2 = add_set(Q, count, resid, C)
-                g = gains(Q2, r2, sel_local)
                 w = jnp.ones((n_local,)).at[idx_l].add(
                     jnp.where(owned & slot_ok, -1.0, 0.0)
                 )
-                return g * w, w
+                return C, w
 
-            gs, ws = jax.vmap(one)(jax.random.split(kd, cfg.n_samples))
-            gsum, wsum = jnp.sum(gs, axis=0), jnp.sum(ws, axis=0)
+            Cs, ws = jax.vmap(draw)(keys)
+            if use_filter_engine:
+                # Shared basis Q + per-sample deltas: one fused engine
+                # sweep of the local candidate shard for all samples.
+                from repro.kernels.filter_gains.ops import filter_gains
+
+                D, R = jax.vmap(
+                    lambda C: _mgs_expand_basis(Q, count, resid, C, cfg.k)
+                )(Cs)
+                gs = filter_gains(X_local, Q, D, R, col_sq) / ysq
+                gs = jnp.where(sel_local[None, :], 0.0, gs)
+            else:
+                def one(C):
+                    Q2, _, r2 = add_set(Q, count, resid, C)
+                    return gains(Q2, r2, sel_local)
+
+                gs = jax.vmap(one)(Cs)
+
+            gsum, wsum = jnp.sum(gs * ws, axis=0), jnp.sum(ws, axis=0)
             if data_axis:
                 gsum = jax.lax.psum(gsum, data_axis)
                 wsum = jax.lax.psum(wsum, data_axis)

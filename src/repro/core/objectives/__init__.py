@@ -1,4 +1,8 @@
-from repro.core.objectives.base import Objective, normalize_columns
+from repro.core.objectives.base import (
+    Objective,
+    SupportsFilterEngine,
+    normalize_columns,
+)
 from repro.core.objectives.regression import RegressionObjective
 from repro.core.objectives.classification import ClassificationObjective
 from repro.core.objectives.a_optimal import AOptimalityObjective
@@ -7,6 +11,7 @@ from repro.core.objectives.r2 import R2Objective
 
 __all__ = [
     "Objective",
+    "SupportsFilterEngine",
     "normalize_columns",
     "RegressionObjective",
     "ClassificationObjective",

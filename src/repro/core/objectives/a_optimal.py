@@ -4,7 +4,10 @@
 
 Oracles
 -------
-State carries M = Λ + σ⁻² X_S X_Sᵀ and its Cholesky factor L.
+State carries M = Λ + σ⁻² X_S X_Sᵀ, its Cholesky factor L, and the
+cached shared solve W = M⁻¹X (refreshed once per ``add_set`` so the
+singleton-gain and filter-engine oracles never re-pay the (d, d, n)
+triangular solves).
 
 * Singleton gains (Sherman–Morrison):
       f_S(a) = σ⁻² ‖M⁻¹ x_a‖² / (1 + σ⁻² x_aᵀ M⁻¹ x_a)
@@ -12,6 +15,12 @@ State carries M = Λ + σ⁻² X_S X_Sᵀ and its Cholesky factor L.
   fused column-norm/ratio math is ``repro.kernels.aopt_gains``.
 * Set gains (Woodbury):
       f_S(R) = σ⁻² Tr( (I + σ⁻² CᵀM⁻¹C)⁻¹ · (M⁻¹C)ᵀ(M⁻¹C) ),  C = X_R.
+* Filter engine (DASH's Ê_R[f_{S∪R}(a)] statistic): the perturbed
+  precision M_i = M + σ⁻² C_i C_iᵀ splits as M_i⁻¹ = M⁻¹ − E_i E_iᵀ
+  (``expand_factors``), so ``filter_gains_batch`` evaluates all
+  ``n_samples`` perturbed states against the SHARED solve W = M⁻¹X in
+  one fused pass (``repro.kernels.filter_gains``) instead of paying two
+  (d, d, n) triangular solves per sample.
 """
 
 from __future__ import annotations
@@ -27,6 +36,7 @@ from repro.core.objectives.base import gather_columns
 class AOptState(NamedTuple):
     M: jnp.ndarray          # (d, d) posterior precision
     L: jnp.ndarray          # (d, d) chol(M)
+    W: jnp.ndarray          # (d, n) cached shared solve M⁻¹X
     sel_mask: jnp.ndarray   # (n,) bool
     value: jnp.ndarray      # () f32
 
@@ -42,6 +52,7 @@ class AOptimalityObjective:
         beta2: float = 1.0,
         sigma2: float = 1.0,
         use_kernel: bool = False,
+        use_filter_engine: bool = True,
     ):
         self.X = jnp.asarray(X, jnp.float32)
         self.d, self.n = self.X.shape
@@ -49,6 +60,9 @@ class AOptimalityObjective:
         self.beta2 = float(beta2)
         self.isig2 = 1.0 / float(sigma2)
         self.use_kernel = bool(use_kernel)
+        # Sample-batched filter engine for DASH's Ê_R[f_{S∪R}(a)] estimate
+        # (repro.kernels.filter_gains); False forces the per-sample path.
+        self.use_filter_engine = bool(use_filter_engine)
         self.tr_prior = self.d / self.beta2  # Tr(Λ⁻¹)
 
     def _chol(self, M):
@@ -65,6 +79,7 @@ class AOptimalityObjective:
         return AOptState(
             M=M,
             L=L,
+            W=self.X / self.beta2,
             sel_mask=jnp.zeros((self.n,), bool),
             value=jnp.zeros((), jnp.float32),
         )
@@ -78,7 +93,7 @@ class AOptimalityObjective:
         return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
 
     def gains(self, state: AOptState):
-        W = self._minv(state.L, self.X)            # (d, n) = M⁻¹X
+        W = state.W                                # (d, n) = M⁻¹X, cached
         if self.use_kernel:
             from repro.kernels.aopt_gains.ops import aopt_gains
 
@@ -108,11 +123,69 @@ class AOptimalityObjective:
         L = self._chol(M)
         sel = state.sel_mask.at[idx].set(state.sel_mask[idx] | mask)
         value = self.tr_prior - self._trace_inv(L)
-        return AOptState(M=M, L=L, sel_mask=sel, value=value)
+        # The shared solve is refreshed once per state update, so gains()
+        # and the filter engine read it for free.
+        return AOptState(M=M, L=L, W=self._minv(L, self.X), sel_mask=sel,
+                         value=value)
 
     def add_one(self, state: AOptState, a) -> AOptState:
         idx = jnp.full((1,), a, jnp.int32)
         return self.add_set(state, idx, jnp.ones((1,), bool))
+
+    # -- sample-batched filter engine (DASH inner loop) -------------------
+    def expand_factors(self, state: AOptState, idx, mask, W=None):
+        """Woodbury factors of the perturbed precision for S ∪ R.
+
+        With C = X_R (duplicates of S masked out, matching ``add_set``
+        semantics) and K = I + σ⁻² CᵀM⁻¹C = L_K L_Kᵀ:
+
+            M_{S∪R}⁻¹ = M⁻¹ − E Eᵀ,   E = σ⁻¹ (M⁻¹C) L_K⁻ᵀ   (d, m)
+
+        so the filter engine can evaluate every perturbed state against
+        the shared solve W = M⁻¹X.  When that shared solve is already
+        available (``filter_gains_batch`` computes it once for all
+        samples) pass it as ``W``: M⁻¹C is then just a column gather of
+        W instead of a fresh pair of (d, d) triangular solves per
+        sample.  Returns (E, F) with F = EᵀE — padded/duplicate slots
+        produce zero columns of E and contribute nothing.
+        """
+        m = idx.shape[0]
+        new_mask = mask & ~state.sel_mask[idx]
+        C = gather_columns(self.X, idx, new_mask)      # (d, m)
+        if W is None:
+            P = self._minv(state.L, C)                 # (d, m) = M⁻¹C
+        else:
+            P = gather_columns(W, idx, new_mask)
+        K = jnp.eye(m) + self.isig2 * (C.T @ P)
+        Lk = jnp.linalg.cholesky(K)
+        Et = jnp.sqrt(self.isig2) * jax.scipy.linalg.solve_triangular(
+            Lk, P.T, lower=True
+        )                                              # (m, d) = Eᵀ
+        return Et.T, Et @ Et.T
+
+    def filter_gains_batch(self, state: AOptState, idx, mask):
+        """Gains w.r.t. S ∪ R_i for every sample i in one fused pass.
+
+        idx/mask: (n_samples, m) padded Monte-Carlo sets.  Returns the
+        (n_samples, n) matrix ``jax.vmap(lambda R: gains(add_set(S, R)))``
+        would produce, without re-factorizing M per sample.
+        """
+        W = state.W                                    # (d, n) — shared
+        E, F = jax.vmap(lambda i, v: self.expand_factors(state, i, v, W))(
+            idx, mask
+        )
+        if self.use_kernel:
+            from repro.kernels.filter_gains.ops import aopt_filter_gains
+
+            g = aopt_filter_gains(self.X, W, E, F, self.isig2)
+        else:
+            from repro.kernels.filter_gains.ref import aopt_filter_gains_ref
+
+            g = aopt_filter_gains_ref(self.X, W, E, F, self.isig2)
+        sel = jax.vmap(
+            lambda i, v: state.sel_mask.at[i].set(state.sel_mask[i] | v)
+        )(idx, mask)
+        return jnp.where(sel, 0.0, g)
 
     # -- exact reference (tests) ------------------------------------------
     def brute_value(self, sel_idx):

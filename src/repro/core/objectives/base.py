@@ -18,6 +18,23 @@ State conventions
 Set arguments are passed as ``(idx, mask)`` where ``idx`` is an int32
 vector of column indices (padded arbitrarily) and ``mask`` a bool vector
 marking the real entries.
+
+Filter engine
+-------------
+Objectives may additionally implement the *sample-batched filter engine*
+contract (``SupportsFilterEngine``) used by DASH's filter statistic
+Ê_R[f_{S∪R}(a)]: a ``use_filter_engine`` flag plus
+
+    filter_gains_batch(state, idx, mask) -> (n_samples, n)
+
+where idx/mask are (n_samples, m) padded Monte-Carlo sets.  The method
+must return exactly what ``jax.vmap(lambda R: gains(add_set(state, R)))``
+would — same accept rules, same capacity semantics, same masking of
+selected elements — but is free to decompose the perturbed states into
+shared + per-sample parts so all samples ride one fused kernel launch
+(``repro.kernels.filter_gains``).  ``core.dash._estimate_elem_gains``
+dispatches on ``use_filter_engine`` and falls back to the per-sample
+vmap path for objectives without the contract.
 """
 
 from __future__ import annotations
@@ -50,6 +67,21 @@ class Objective(Protocol):
 
     def add_set(self, state, idx, mask):
         """State for S ∪ R."""
+
+
+class SupportsFilterEngine(Objective, Protocol):
+    """Objectives that batch DASH's filter statistic over samples.
+
+    ``RegressionObjective``, ``AOptimalityObjective`` and
+    ``ClassificationObjective`` all implement this; the shared kernels
+    live in ``repro.kernels.filter_gains``.
+    """
+
+    use_filter_engine: bool
+
+    def filter_gains_batch(self, state, idx, mask) -> Array:
+        """(n_samples, n) gains w.r.t. S ∪ R_i for each sampled R_i —
+        semantically ``vmap(lambda R: gains(add_set(state, R)))``."""
 
 
 def normalize_columns(X: Array, eps: float = 1e-12) -> Array:

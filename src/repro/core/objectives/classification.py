@@ -18,6 +18,13 @@ Oracles
   f_S(a) while staying inside the differential-submodularity sandwich.
 * Set gains / solution updates do a *true refit*: ``newton_steps`` damped
   IRLS iterations on the restricted support (batched Cholesky solves).
+* Filter engine (DASH's Ê_R[f_{S∪R}(a)] statistic): each perturbed state
+  S ∪ R_i is fully described by its refit logits η_i, produced by a
+  small per-sample IRLS refit (``expand_logits`` — identical accept rule
+  and step count to ``add_set``); ``filter_gains_batch`` then runs the
+  candidate Newton sweep for ALL samples in one fused launch
+  (``repro.kernels.filter_gains``) instead of streaming X once per
+  sample.
 """
 
 from __future__ import annotations
@@ -63,6 +70,7 @@ class ClassificationObjective:
         ridge: float = 1e-4,
         gain_eps: float = 1e-9,
         use_kernel: bool = False,
+        use_filter_engine: bool = True,
     ):
         self.X = jnp.asarray(X, jnp.float32)
         self.y = jnp.asarray(y, jnp.float32)
@@ -75,6 +83,9 @@ class ClassificationObjective:
         self.ridge = float(ridge)
         self.gain_eps = float(gain_eps)
         self.use_kernel = bool(use_kernel)
+        # Sample-batched filter engine for DASH's Ê_R[f_{S∪R}(a)] estimate
+        # (repro.kernels.filter_gains); False forces the per-sample path.
+        self.use_filter_engine = bool(use_filter_engine)
         self.ll0 = _loglik(jnp.zeros((self.d,)), self.y)
 
     def init(self) -> ClassificationState:
@@ -184,6 +195,63 @@ class ClassificationObjective:
     def add_one(self, state: ClassificationState, a) -> ClassificationState:
         idx = jnp.full((1,), a, jnp.int32)
         return self.add_set(state, idx, jnp.ones((1,), bool))
+
+    # -- sample-batched filter engine (DASH inner loop) -------------------
+    def expand_logits(self, state: ClassificationState, idx, mask):
+        """Refit logits η for S ∪ R without committing the state.
+
+        Applies ``add_set``'s exact accept rule (dedup against S, then
+        capacity in slot order: element j is taken iff the count after
+        the earlier accepted elements is still < kmax) on the
+        concatenated padded support, warm-starts from the current
+        weights, and runs the same ``newton_steps + 2`` IRLS iterations.
+        Returns the (d,) logits the committed state would carry.
+        """
+        m = idx.shape[0]
+        new_mask = mask & ~state.sel_mask[idx]
+        cnt0 = jnp.sum(state.sel_k.astype(jnp.int32))
+        order = jnp.cumsum(new_mask.astype(jnp.int32))
+        take = new_mask & (cnt0 + order <= self.kmax)
+        sup_idx = jnp.concatenate([state.sel_idx, idx.astype(jnp.int32)])
+        sup_mask = jnp.concatenate([state.sel_k, take])
+        cols = gather_columns(self.X, sup_idx, sup_mask)
+        w0 = jnp.concatenate(
+            [state.w * state.sel_k, jnp.zeros((m,), jnp.float32)]
+        )
+        _, eta, _ = self._refit(cols, sup_mask, w0, self.newton_steps + 2)
+        return eta
+
+    def filter_gains_batch(self, state: ClassificationState, idx, mask):
+        """Gains w.r.t. S ∪ R_i for every sample i in one fused pass.
+
+        idx/mask: (n_samples, m) padded Monte-Carlo sets.  Returns the
+        (n_samples, n) matrix ``jax.vmap(lambda R: gains(add_set(S, R)))``
+        would produce; the per-sample work is only the small support
+        refit — the candidate sweep streams X once for all samples.
+        """
+        etas = jax.vmap(lambda i, v: self.expand_logits(state, i, v))(
+            idx, mask
+        )
+        if self.gain_mode == "quadratic":
+            g = jax.vmap(self._quadratic_gains)(etas)
+        elif self.use_kernel:
+            from repro.kernels.filter_gains.ops import logistic_filter_gains
+
+            g = logistic_filter_gains(
+                self.X, self.y, etas, steps=self.newton_gain_steps
+            )
+        else:
+            from repro.kernels.filter_gains.ref import (
+                logistic_filter_gains_ref,
+            )
+
+            g = logistic_filter_gains_ref(
+                self.X, self.y, etas, steps=self.newton_gain_steps
+            )
+        sel = jax.vmap(
+            lambda i, v: state.sel_mask.at[i].set(state.sel_mask[i] | v)
+        )(idx, mask)
+        return jnp.where(sel, 0.0, g)
 
     # -- exact reference (tests) ------------------------------------------
     def brute_value(self, sel_idx, steps: int = 60):

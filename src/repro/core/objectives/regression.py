@@ -19,7 +19,12 @@ Gram–Schmidt).  With residual r = y − QQᵀy:
 
 The batched singleton-gain evaluation — one (k×d)·(d×n) GEMM plus
 elementwise math — is the per-round hot-spot that
-``repro.kernels.marginal_gains`` fuses on TPU.
+``repro.kernels.marginal_gains`` fuses on TPU.  DASH's filter statistic
+additionally batches over Monte-Carlo samples through the shared filter
+engine (``repro.kernels.filter_gains``, regression epilogue): the basis
+is split into the shared Q plus per-sample deltas by ``expand_basis``
+and all samples ride one fused launch via ``filter_gains_batch``
+(the ``SupportsFilterEngine`` contract, gated by ``use_filter_engine``).
 """
 
 from __future__ import annotations

@@ -15,10 +15,15 @@ Kernels:
   marginal_gains  — fused batched regression singleton-gain oracle
                     (the per-round hot-spot of DASH, paper §4)
   filter_gains    — sample-batched filter-step engine: gains for all
-                    n_samples Monte-Carlo perturbed bases in one launch
-                    (the DASH inner-loop hot-spot; shared-base +
-                    per-sample-delta decomposition)
+                    n_samples Monte-Carlo perturbed states in one launch
+                    (the DASH inner-loop hot-spot; shared-state +
+                    per-sample-delta decomposition).  A common
+                    tiling/launch core (core.py) with per-objective
+                    epilogues: regression (kernel.py), A-optimality
+                    (kernel_aopt.py), logistic (kernel_logistic.py).
   aopt_gains      — fused Sherman–Morrison A-optimality gain oracle
   logistic_gains  — fused 1-D-Newton logistic marginal-gain oracle
   flash_attention — online-softmax attention for the LM serving substrate
+
+See docs/kernels.md for the kernel-authoring contract.
 """

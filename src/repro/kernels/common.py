@@ -1,18 +1,42 @@
 """Shared infrastructure for the Pallas kernel wrappers (the ops.py layer).
 
-Every kernel package does the same three things before dispatching:
+This module IS the kernel-authoring contract (long form: docs/kernels.md).
+Every kernel package splits into ``kernel.py`` (the ``pl.pallas_call``
+with explicit BlockSpecs, assuming pre-padded shapes), ``ops.py`` (the
+public wrapper) and ``ref.py`` (the pure-jnp oracle), and every ops.py
+does the same three things before dispatching:
 
-  1. decide between the compiled Pallas kernel, Pallas interpret mode,
-     and the pure-jnp reference (``resolve_path``),
-  2. pad operands to TPU-aligned shapes — sublane multiples on the
-     feature/basis axes, a candidate-block multiple on the ground-set
-     axis (``round_up`` / ``pad2d``),
-  3. pick the largest candidate block whose working set fits the VMEM
-     budget (``pick_block_n``).
+  1. **Backend routing** (``resolve_path``).  The ops-level ``interpret``
+     argument is tri-state:
+       * ``None`` (the default) — compiled Pallas kernel on TPU, the jnp
+         reference everywhere else.  Pallas interpret mode is orders of
+         magnitude slower than the reference on CPU, so it is never an
+         implicit fallback — only an explicit choice.
+       * ``True``  — Pallas interpret mode (kernel validation anywhere).
+       * ``False`` — compiled Pallas unconditionally.
+     Callers (objectives, distributed loops) always pass ``None`` and let
+     the wrapper route; tests pass ``True`` to validate kernel logic on
+     CPU.
+  2. **Padding** to TPU-aligned shapes (``round_up`` / ``pad1d`` /
+     ``pad2d``): ``SUBLANE`` (8) multiples on the feature/basis axes,
+     a ``block_n`` multiple on the candidate axis.  The wrapper must
+     choose fills so padded entries cannot contribute — zero columns for
+     streamed operands, and for guard vectors a fill that trips the
+     guard (e.g. ``filter_gains`` pads ``col_sq`` with 1.0 so the span
+     tolerance clamps padded candidates to 0).  If the padded problem
+     exceeds ``HUGE_ELEMS`` f32 elements the wrapper returns the
+     reference instead — padding would dominate the launch.
+  3. **VMEM budgeting** (``pick_block_n``).  The wrapper states its
+     per-grid-step working set as bytes(block_n) — inputs + outputs +
+     scratch + large temporaries — and gets the largest candidate block
+     from ``BLOCK_N_CANDIDATES`` that fits ``VMEM_BUDGET`` (12 MB,
+     leaving v5e headroom for double buffering).
 
 These heuristics used to be copy-pasted across ``marginal_gains``,
 ``aopt_gains`` and ``logistic_gains``; they live here so a tiling or
-routing fix lands in every kernel at once.
+routing fix lands in every kernel at once.  New kernels must build on
+this module instead of re-deriving tiling; sample-batched filter kernels
+additionally build their grid via ``repro.kernels.filter_gains.core``.
 """
 
 from __future__ import annotations

@@ -1,1 +1,7 @@
-"""Sample-batched fused gain engine for the DASH filter step."""
+"""Sample-batched fused gain engine for the DASH filter step.
+
+A common tiling/launch core (``core.py``) with per-objective gain
+epilogues: ``kernel.py`` (regression), ``kernel_aopt.py``
+(A-optimality), ``kernel_logistic.py`` (logistic classification).
+Public entry points live in ``ops.py``; pure-jnp oracles in ``ref.py``.
+"""

@@ -1,0 +1,111 @@
+"""Shared tiling/launch core for the sample-batched filter engine.
+
+Every filter-engine kernel evaluates, for all ``n_samples`` Monte-Carlo
+perturbed states S ∪ R_i at once, a per-candidate statistic over the
+ground-set matrix X.  The launch geometry is always the same:
+
+    grid = (n // block_n, n_samples)      # sample axis MINOR
+
+so for a fixed candidate block the sample index varies fastest and the
+streamed (d, block_n) operands stay resident in VMEM across all samples
+— each X block is fetched from HBM once per launch instead of once per
+sample.  What differs between objectives is only the *epilogue*: the
+per-block math that turns the shared operands and the current sample's
+operands into gains (see ``kernel.py`` / ``kernel_aopt.py`` /
+``kernel_logistic.py``).
+
+This module owns the geometry so an epilogue author only declares what
+each operand *is*; the four operand kinds are:
+
+  ``stream``  (d, n)      candidate-blocked, constant over samples — the
+                          big matrices whose HBM traffic the engine
+                          amortizes (X, and W = M⁻¹X for A-optimality).
+  ``const``   any shape   fetched once (constant index map): shared-state
+                          operands such as the basis Q or the labels y.
+  ``sample``  (m, *rest)  blocked over the sample grid axis: one slice
+                          per perturbed state (delta bases, residuals,
+                          per-sample logits).
+  ``cand``    (n,)        per-candidate vectors, reshaped to (1, n) and
+                          blocked with the candidate axis (‖x_a‖², …).
+
+The output is always (m, n) f32 with block (1, block_n) at (s, i).
+Grid dimensions are sequential ("arbitrary") by default on TPU, which is
+what lets an epilogue cache sample-independent work in VMEM scratch at
+``pl.program_id(1) == 0`` and reuse it for the remaining samples (the
+regression epilogue does this for its shared-base projection).
+
+Block sizes and padding are the *callers'* job (ops.py via
+``repro.kernels.common``): operands arriving here must already be padded
+so that n % block_n == 0 and the feature/basis axes meet f32 sublane
+tiling.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+class Operand(NamedTuple):
+    """One engine operand: the array plus its blocking kind."""
+
+    array: Any
+    kind: str  # "stream" | "const" | "sample" | "cand"
+
+
+def _spec_for(arr, kind: str, block_n: int) -> pl.BlockSpec:
+    if kind == "stream":
+        d = arr.shape[0]
+        return pl.BlockSpec((d, block_n), lambda i, s: (0, i))
+    if kind == "const":
+        nd = arr.ndim
+        return pl.BlockSpec(arr.shape, lambda i, s, _nd=nd: (0,) * _nd)
+    if kind == "sample":
+        rest = arr.shape[1:]
+        nr = len(rest)
+        return pl.BlockSpec(
+            (1, *rest), lambda i, s, _nr=nr: (s,) + (0,) * _nr
+        )
+    if kind == "cand":
+        return pl.BlockSpec((1, block_n), lambda i, s: (0, i))
+    raise ValueError(f"unknown operand kind: {kind!r}")
+
+
+def launch_filter_engine(
+    body,
+    operands: Sequence[Operand],
+    *,
+    n: int,
+    n_samples: int,
+    block_n: int,
+    scratch_shapes: Sequence[Any] = (),
+    interpret: bool = False,
+):
+    """Launch a filter-engine epilogue over the (candidate, sample) grid.
+
+    ``body(*in_refs, o_ref, *scratch_refs)`` receives one ref per operand
+    (in order), the (1, block_n) output ref, then the scratch refs.  The
+    current sample is ``pl.program_id(1)``; candidate block is axis 0.
+    ``cand`` operands must be passed 1-D; they are reshaped to (1, n)
+    here so the epilogue always sees (1, block_n) refs.
+    """
+    assert n % block_n == 0, (n, block_n)
+    arrays = []
+    in_specs = []
+    for arr, kind in operands:
+        if kind == "cand":
+            arr = arr[None, :]
+        arrays.append(arr)
+        in_specs.append(_spec_for(arr, kind, block_n))
+    return pl.pallas_call(
+        body,
+        grid=(n // block_n, n_samples),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, block_n), lambda i, s: (s, i)),
+        out_shape=jax.ShapeDtypeStruct((n_samples, n), jnp.float32),
+        scratch_shapes=list(scratch_shapes),
+        interpret=interpret,
+    )(*arrays)

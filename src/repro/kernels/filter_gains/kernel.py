@@ -1,33 +1,29 @@
-"""Pallas TPU kernel: sample-batched fused DASH filter gains.
+"""Regression epilogue of the sample-batched filter engine.
 
-One launch evaluates the filter statistic for ALL ``n_samples`` perturbed
-states S ∪ R_i — the per-sample path launches ``n_samples`` independent
-``gains`` passes, re-streaming the full (d, n) matrix X from HBM each
-time.  Per candidate a and sample i:
+One launch evaluates the DASH filter statistic for ALL ``n_samples``
+perturbed states S ∪ R_i — the per-sample path launches ``n_samples``
+independent ``gains`` passes, re-streaming the full (d, n) matrix X from
+HBM each time.  Per candidate a and sample i:
 
     c_ia    = x_aᵀ r_i                    (GEMV against sample residual)
     s_a     = ‖Qᵀ x_a‖²                   (shared-base projection)
     t_ia    = ‖D_iᵀ x_a‖²                 (per-sample delta projection)
     gain_ia = c_ia² / (‖x_a‖² − s_a − t_ia)   (span-tolerance guarded)
 
-Tiling
-------
-grid = (n // block_n, n_samples): the sample axis is the *minor* grid
-dimension, so for a fixed candidate block the kernel holds one X block
-resident in VMEM and reuses it against every sample's (D_i, r_i) — each
-X block is streamed from HBM once per launch instead of once per sample.
-The shared-base projection ‖Qᵀx‖² is computed at sample 0 of each block
-and cached in a VMEM scratch accumulator for the remaining samples
-(grid dimensions are sequential/"arbitrary" by default, which this
-relies on).
+Tiling (``core.launch_filter_engine``): grid = (n // block_n, n_samples)
+with the sample axis minor, so one X block stays resident in VMEM and is
+reused against every sample's (D_i, r_i).  The shared-base projection
+‖Qᵀx‖² is computed at sample 0 of each block and cached in a VMEM
+scratch accumulator for the remaining samples (grid dimensions are
+sequential/"arbitrary" by default, which this relies on).
 
 Per grid step the kernel holds in VMEM (f32):
-    X block   (d, block_n)
-    Q         (d, kcap)        — fetched once (constant index map)
-    D_i       (d, bcap)
-    r_i       (1, d)
-    col_sq    (1, block_n)
-    base      (1, block_n)     — scratch
+    X block   (d, block_n)     stream
+    Q         (d, kcap)        const — fetched once
+    D_i       (d, bcap)        sample
+    r_i       (1, d)           sample
+    col_sq    (1, block_n)     cand
+    base      (1, block_n)     scratch
     out       (1, block_n)
 4·(d·(block_n + kcap + bcap + 1) + 3·block_n) bytes; e.g. d=1024,
 block_n=512, kcap=64, bcap=8: ~2.4 MB ≪ 16 MB v5e VMEM.  ops.py shrinks
@@ -43,10 +39,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.filter_gains.core import Operand, launch_filter_engine
 from repro.kernels.filter_gains.ref import SPAN_TOL
 
 
-def _filter_gains_kernel(x_ref, q_ref, d_ref, r_ref, csq_ref, o_ref,
+def _regression_epilogue(x_ref, q_ref, d_ref, r_ref, csq_ref, o_ref,
                          base_ref, *, span_tol: float):
     s = pl.program_id(1)
     x = x_ref[...]                          # (d, bn)
@@ -87,25 +84,20 @@ def filter_gains_pallas(
 ):
     """X: (d, n), Q: (d, k), D: (m, d, b), R: (m, d), col_sq: (n,) — all
     pre-padded so that n % block_n == 0.  Returns (m, n) f32 gains."""
-    d, n = X.shape
-    k = Q.shape[1]
-    m, _, b = D.shape
-    assert n % block_n == 0, (n, block_n)
-
-    grid = (n // block_n, m)
-    out = pl.pallas_call(
-        functools.partial(_filter_gains_kernel, span_tol=span_tol),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((d, block_n), lambda i, s: (0, i)),
-            pl.BlockSpec((d, k), lambda i, s: (0, 0)),
-            pl.BlockSpec((1, d, b), lambda i, s: (s, 0, 0)),
-            pl.BlockSpec((1, d), lambda i, s: (s, 0)),
-            pl.BlockSpec((1, block_n), lambda i, s: (0, i)),
+    n = X.shape[1]
+    m = D.shape[0]
+    return launch_filter_engine(
+        functools.partial(_regression_epilogue, span_tol=span_tol),
+        [
+            Operand(X, "stream"),
+            Operand(Q, "const"),
+            Operand(D, "sample"),
+            Operand(R, "sample"),
+            Operand(col_sq, "cand"),
         ],
-        out_specs=pl.BlockSpec((1, block_n), lambda i, s: (s, i)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        n=n,
+        n_samples=m,
+        block_n=block_n,
         scratch_shapes=[pltpu.VMEM((1, block_n), jnp.float32)],
         interpret=interpret,
-    )(X, Q, D, R, col_sq[None, :])
-    return out
+    )

@@ -1,9 +1,13 @@
-"""Public jit'd wrapper for the sample-batched filter-gain engine.
+"""Public jit'd wrappers for the sample-batched filter-gain engine.
 
-Padding / block-size / backend routing via ``repro.kernels.common``:
-non-TPU backends run the (also sample-batched) jnp reference; Pallas
-interpret mode only when requested explicitly.  Padded delta columns and
-residual rows are zero, so they contribute nothing to the projections.
+One wrapper per objective epilogue — ``filter_gains`` (regression),
+``aopt_filter_gains`` (A-optimality), ``logistic_filter_gains``
+(classification) — all sharing the same contract: padding / block-size /
+backend routing via ``repro.kernels.common`` (non-TPU backends run the
+also-sample-batched jnp reference; Pallas interpret mode only when
+requested explicitly), grid geometry via
+``repro.kernels.filter_gains.core``.  Padded delta columns, residual
+rows and logits are zero, so they contribute nothing to the projections.
 """
 
 from __future__ import annotations
@@ -20,11 +24,20 @@ from repro.kernels.common import (
     round_up,
 )
 from repro.kernels.filter_gains.kernel import filter_gains_pallas
-from repro.kernels.filter_gains.ref import SPAN_TOL, filter_gains_ref
+from repro.kernels.filter_gains.kernel_aopt import aopt_filter_gains_pallas
+from repro.kernels.filter_gains.kernel_logistic import (
+    logistic_filter_gains_pallas,
+)
+from repro.kernels.filter_gains.ref import (
+    SPAN_TOL,
+    aopt_filter_gains_ref,
+    filter_gains_ref,
+    logistic_filter_gains_ref,
+)
 
 
 def filter_gains(X, Q, D, R, col_sq, *, interpret: bool | None = None):
-    """Sample-batched filter gains for DASH.
+    """Sample-batched regression filter gains for DASH.
 
     X: (d, n) candidates; Q: (d, k) shared basis; D: (m, d, b) per-sample
     orthonormal deltas (⊥ Q); R: (m, d) per-sample residuals; col_sq:
@@ -53,5 +66,71 @@ def filter_gains(X, Q, D, R, col_sq, *, interpret: bool | None = None):
     out = filter_gains_pallas(
         Xp, Qp, Dp, Rp, cp, block_n=bn, span_tol=SPAN_TOL,
         interpret=interpret,
+    )
+    return out[:, :n]
+
+
+def aopt_filter_gains(X, W, E, F, isig2, *, interpret: bool | None = None):
+    """Sample-batched A-optimality (Woodbury) filter gains for DASH.
+
+    X: (d, n) stimuli; W = M⁻¹X (d, n) shared solve; E: (m, d, b)
+    per-sample Woodbury factors; F: (m, b, b) Grams E_iᵀE_i; isig2 =
+    1/σ².  Returns (m, n) gains, one row per perturbed state S ∪ R_i.
+    """
+    use_ref, interpret = resolve_path(interpret)
+    d, n = X.shape
+    m, _, b = E.shape
+    dp = round_up(d, SUBLANE)
+    bp = round_up(max(b, 1), SUBLANE)
+    # f32 bytes resident per grid step: X + W blocks, E_i, F_i, wsq, xw,
+    # out, and the t/u/ft (bp, bn) temporaries.
+    bn = pick_block_n(
+        lambda bn: 4 * (2 * dp * bn + dp * bp + bp * bp + 3 * bn
+                        + 3 * bp * bn)
+    )
+    np_ = round_up(n, bn)
+    if use_ref or dp * (2 * np_ + m * bp) > HUGE_ELEMS:
+        return aopt_filter_gains_ref(X, W, E, F, isig2)
+
+    Xp = pad2d(X, dp, np_)
+    Wp = pad2d(W, dp, np_)
+    Ep = jnp.zeros((m, dp, bp), jnp.float32).at[:, :d, :b].set(E)
+    Fp = jnp.zeros((m, bp, bp), jnp.float32).at[:, :b, :b].set(F)
+    # Padded candidates have x = w = 0 → num = 0, den = 1 → gain 0.
+    wsq = pad1d(jnp.sum(W * W, axis=0), np_)
+    xw = pad1d(jnp.sum(X * W, axis=0), np_)
+    out = aopt_filter_gains_pallas(
+        Xp, Wp, Ep, Fp, wsq, xw, isig2=float(isig2), block_n=bn,
+        interpret=interpret,
+    )
+    return out[:, :n]
+
+
+def logistic_filter_gains(X, y, etas, *, steps: int = 3,
+                          interpret: bool | None = None):
+    """Sample-batched logistic filter gains for DASH.
+
+    X: (d, n) features; y: (d,) labels; etas: (m, d) per-sample refit
+    logits.  Returns (m, n) gains — row i is the ``steps``-step-Newton
+    log-likelihood improvement of each candidate at state S ∪ R_i.
+    """
+    use_ref, interpret = resolve_path(interpret)
+    d, n = X.shape
+    m = etas.shape[0]
+    dp = round_up(d, SUBLANE)
+    # f32 bytes resident per grid step: X block + the (d, bn) Newton
+    # logits temporary, y and η_i columns, ~4 (1, bn) rows.
+    bn = pick_block_n(lambda bn: 4 * (2 * dp * bn + 2 * dp + 4 * bn))
+    np_ = round_up(n, bn)
+    if use_ref or dp * np_ > HUGE_ELEMS:
+        return logistic_filter_gains_ref(X, y, etas, steps=steps)
+
+    # Padded rows have x = y = η = 0: zero g/h contributions, and their
+    # −log 2 softplus terms cancel exactly in ll_new − ll_old.
+    Xp = pad2d(X, dp, np_)
+    yp = pad1d(y, dp)
+    ep = jnp.zeros((m, dp), jnp.float32).at[:, :d].set(etas)
+    out = logistic_filter_gains_pallas(
+        Xp, yp, ep, steps=steps, block_n=bn, interpret=interpret,
     )
     return out[:, :n]

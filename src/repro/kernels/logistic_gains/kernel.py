@@ -20,11 +20,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _logistic_kernel(x_ref, y_ref, eta_ref, o_ref, *, steps: int, eps: float):
-    x = x_ref[...]                      # (d, bn)
-    y = y_ref[...]                      # (d, 1)
-    eta = eta_ref[...]                  # (d, 1)
-
+def newton_gain_sweep(x, y, eta, *, steps: int, eps: float):
+    """``steps`` scalar-Newton iterations per candidate column of ``x``
+    (d, bn) at logits ``eta`` (d, 1), labels ``y`` (d, 1); returns the
+    (1, bn) log-likelihood improvements.  Shared by this kernel and the
+    sample-batched filter epilogue
+    (``repro.kernels.filter_gains.kernel_logistic``).
+    """
     bn = x.shape[1]
     w = jnp.zeros((1, bn), jnp.float32)
 
@@ -39,7 +41,13 @@ def _logistic_kernel(x_ref, y_ref, eta_ref, o_ref, *, steps: int, eps: float):
     z = eta + x * w
     ll_new = jnp.sum(y * z - jax.nn.softplus(z), axis=0, keepdims=True)
     ll_old = jnp.sum(y * eta - jax.nn.softplus(eta))
-    o_ref[...] = jnp.maximum(ll_new - ll_old, 0.0)
+    return jnp.maximum(ll_new - ll_old, 0.0)
+
+
+def _logistic_kernel(x_ref, y_ref, eta_ref, o_ref, *, steps: int, eps: float):
+    o_ref[...] = newton_gain_sweep(
+        x_ref[...], y_ref[...], eta_ref[...], steps=steps, eps=eps
+    )
 
 
 @functools.partial(

@@ -55,6 +55,84 @@ def test_distributed_dash_parity_and_determinism():
 
 
 @pytest.mark.slow
+def test_distributed_filter_engine_matches_per_sample_path():
+    """The engine-routed filter loop (use_filter_engine=True) must agree
+    with the per-sample path on solution quality and stay deterministic;
+    on well-separated problems the filter decisions coincide exactly."""
+    res = _run("""
+        import json, jax, numpy as np, jax.numpy as jnp
+        from repro.core import RegressionObjective, normalize_columns, greedy, DashConfig
+        from repro.core.distributed import dash_distributed_regression
+        from repro.launch.mesh import make_mesh
+        rng = np.random.default_rng(0)
+        d, n, k = 120, 64, 12
+        X0 = rng.normal(size=(d, n)) + 0.4*rng.normal(size=(d, 1))
+        X = normalize_columns(jnp.asarray(X0, jnp.float32))
+        w = np.zeros(n); w[:k] = rng.uniform(-2, 2, k)
+        y = jnp.asarray(X0 @ w + 0.1*rng.normal(size=d), jnp.float32)
+        obj = RegressionObjective(X, y, kmax=k)
+        g = greedy(obj, k)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        cfg = DashConfig(k=k, eps=0.25, alpha=0.6, n_samples=4)
+        opt = float(g.value) * 1.05
+        r_en = dash_distributed_regression(X, y, cfg, jax.random.PRNGKey(0), opt, mesh,
+                                           use_filter_engine=True)
+        r_ps = dash_distributed_regression(X, y, cfg, jax.random.PRNGKey(0), opt, mesh,
+                                           use_filter_engine=False)
+        r_en2 = dash_distributed_regression(X, y, cfg, jax.random.PRNGKey(0), opt, mesh,
+                                            use_filter_engine=True)
+        print(json.dumps({
+            "greedy": float(g.value),
+            "engine": float(r_en.value), "per_sample": float(r_ps.value),
+            "count": int(r_en.sel_count),
+            "deterministic": float(r_en.value) == float(r_en2.value),
+        }))
+    """)
+    assert res["deterministic"]
+    assert res["count"] <= 12
+    assert res["engine"] >= 0.6 * res["greedy"]
+    assert abs(res["engine"] - res["per_sample"]) < 1e-3
+
+
+def test_dist_mgs_expand_basis_matches_add_set():
+    """[Q | D] from _mgs_expand_basis spans the same space as
+    _mgs_add_set's extended basis and yields the same residual; at
+    capacity it accepts nothing and leaves the residual untouched."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.distributed import _mgs_add_set, _mgs_expand_basis
+
+    rng = np.random.default_rng(0)
+    d, kmax = 40, 8
+    C0 = jnp.asarray(rng.normal(size=(d, 3)), jnp.float32)
+    Q0 = jnp.zeros((d, kmax), jnp.float32)
+    r0 = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    Q, count, resid = _mgs_add_set(Q0, jnp.zeros((), jnp.int32), r0, C0, kmax)
+
+    C = jnp.asarray(rng.normal(size=(d, 4)), jnp.float32)
+    D, r_exp = _mgs_expand_basis(Q, count, resid, C, kmax)
+    Q2, _, r_add = _mgs_add_set(Q, count, resid, C, kmax)
+    np.testing.assert_allclose(np.asarray(r_exp), np.asarray(r_add),
+                               rtol=1e-4, atol=1e-5)
+    # D columns are orthonormal and ⊥ the shared basis
+    accepted = np.asarray(jnp.sum(D * D, axis=0)) > 0.5
+    Dn = np.asarray(D)[:, accepted]
+    np.testing.assert_allclose(Dn.T @ Dn, np.eye(Dn.shape[1]),
+                               rtol=0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Q).T @ Dn, 0, rtol=0, atol=1e-4)
+
+    # at capacity: no deltas, residual untouched
+    Cfill = jnp.asarray(rng.normal(size=(d, kmax)), jnp.float32)
+    Qf, cf, rf = _mgs_add_set(Q, count, resid, Cfill, kmax)
+    assert int(cf) == kmax
+    Dcap, rcap = _mgs_expand_basis(Qf, cf, rf, C, kmax)
+    np.testing.assert_array_equal(np.asarray(Dcap),
+                                  np.zeros_like(np.asarray(Dcap)))
+    np.testing.assert_array_equal(np.asarray(rcap), np.asarray(rf))
+
+
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     res = _run("""
         import json, jax, numpy as np, jax.numpy as jnp

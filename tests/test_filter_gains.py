@@ -1,4 +1,5 @@
-"""Sample-batched filter-gain engine: kernel vs ref vs per-sample path."""
+"""Sample-batched filter-gain engine: kernel vs ref vs per-sample path,
+for all three objective epilogues (regression / A-optimality / logistic)."""
 
 import jax
 import jax.numpy as jnp
@@ -6,9 +7,22 @@ import numpy as np
 import pytest
 
 from repro.core.dash import DashConfig, _estimate_elem_gains
-from repro.core.objectives import RegressionObjective, normalize_columns
-from repro.kernels.filter_gains.ops import filter_gains
-from repro.kernels.filter_gains.ref import filter_gains_ref
+from repro.core.objectives import (
+    AOptimalityObjective,
+    ClassificationObjective,
+    RegressionObjective,
+    normalize_columns,
+)
+from repro.kernels.filter_gains.ops import (
+    aopt_filter_gains,
+    filter_gains,
+    logistic_filter_gains,
+)
+from repro.kernels.filter_gains.ref import (
+    aopt_filter_gains_ref,
+    filter_gains_ref,
+    logistic_filter_gains_ref,
+)
 
 RNG = np.random.default_rng(0)
 
@@ -142,3 +156,202 @@ def test_dash_end_to_end_with_engine():
     assert int(r1.sel_count) <= obj.kmax
     assert float(r1.value) == float(r2.value)
     assert bool(jnp.all(r1.sel_mask == r2.sel_mask))
+
+
+# ---------------------------------------------------------------------------
+# A-optimality epilogue
+# ---------------------------------------------------------------------------
+
+def _aopt_factors(d, m, b, scale=0.3):
+    """Random Woodbury factors E (m, d, b) + their Grams F = EᵀE."""
+    E = jnp.asarray(RNG.normal(size=(d, max(b, 1), m)) * scale, jnp.float32)
+    E = jnp.moveaxis(E, -1, 0)
+    F = jnp.einsum("mdb,mdc->mbc", E, E)
+    return E, F
+
+
+@pytest.mark.parametrize("d,n,b,m", [
+    (32, 64, 1, 2),
+    (100, 300, 4, 5),         # n % block_n != 0 → padding
+    (257, 513, 3, 8),         # everything misaligned
+    (64, 1000, 2, 1),         # n_samples = 1
+])
+def test_aopt_filter_kernel_matches_ref(d, n, b, m):
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    W = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    E, F = _aopt_factors(d, m, b)
+    got = aopt_filter_gains(X, W, E, F, 0.7, interpret=True)
+    want = aopt_filter_gains_ref(X, W, E, F, 0.7)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_aopt_expand_factors_is_woodbury_inverse():
+    """M_{S∪R}⁻¹ == M⁻¹ − E Eᵀ for the factors expand_factors returns."""
+    obj, st = _aopt_state(n_sel=3)
+    idx = jnp.asarray([7, 20, 33, 0], jnp.int32)
+    mask = jnp.asarray([True, True, False, True])
+    E, F = obj.expand_factors(st, idx, mask)
+    st2 = obj.add_set(st, idx, mask)
+    Minv = np.linalg.inv(np.asarray(st.M))
+    Minv2 = np.linalg.inv(np.asarray(st2.M))
+    np.testing.assert_allclose(Minv - np.asarray(E) @ np.asarray(E).T,
+                               Minv2, rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(F), np.asarray(E).T @ np.asarray(E),
+                               rtol=0, atol=1e-6)
+
+
+def _aopt_state(n_sel=0, n=50, d=24, kmax=16):
+    X = RNG.normal(size=(d, n))
+    X = X / np.linalg.norm(X, axis=0, keepdims=True)
+    obj = AOptimalityObjective(jnp.asarray(X, jnp.float32), kmax=kmax,
+                               beta2=1.0, sigma2=1.0)
+    st = obj.init()
+    if n_sel:
+        idx = jnp.arange(n_sel, dtype=jnp.int32) * 3
+        st = obj.add_set(st, idx, jnp.ones(n_sel, bool))
+    return obj, st
+
+
+@pytest.mark.parametrize("n_sel,m,b", [(0, 5, 4), (3, 5, 4), (3, 1, 3)])
+def test_aopt_filter_batch_matches_per_sample(n_sel, m, b):
+    """filter_gains_batch == vmap(gains ∘ add_set) per sample, including
+    samples that duplicate already-selected stimuli."""
+    obj, st = _aopt_state(n_sel)
+    idx = jnp.asarray(RNG.integers(0, obj.n, size=(m, b)), jnp.int32)
+    if n_sel:
+        idx = idx.at[0, 0].set(0)          # duplicate of S in the sample
+    mask = jnp.asarray(RNG.uniform(size=(m, b)) > 0.2)
+    got = obj.filter_gains_batch(st, idx, mask)
+    want = jax.vmap(lambda i, v: obj.gains(obj.add_set(st, i, v)))(idx, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_aopt_estimate_matches_per_sample_path():
+    """_estimate_elem_gains via the engine == the per-sample vmap path."""
+    obj, st = _aopt_state(n_sel=3)
+    obj_ps = AOptimalityObjective(obj.X, kmax=obj.kmax,
+                                  use_filter_engine=False)
+    cfg = DashConfig(k=obj.kmax, n_samples=6).resolve(obj.n)
+    alive = jnp.ones((obj.n,), bool) & ~st.sel_mask
+    key = jax.random.PRNGKey(11)
+    allowed = jnp.asarray(obj.kmax - 3)
+    est_en = _estimate_elem_gains(obj, st, alive, 4, allowed, key, cfg)
+    est_ps = _estimate_elem_gains(obj_ps, st, alive, 4, allowed, key, cfg)
+    np.testing.assert_allclose(np.asarray(est_en), np.asarray(est_ps),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_dash_end_to_end_aopt_engine():
+    from repro.core import dash, greedy
+
+    obj, _ = _aopt_state(kmax=8)
+    assert obj.use_filter_engine
+    g = greedy(obj, 8)
+    cfg = DashConfig(k=8, eps=0.25, alpha=0.5, n_samples=6)
+    res = dash(obj, cfg, jax.random.PRNGKey(0), opt=float(g.value) * 1.05)
+    assert float(res.value) >= 0.6 * float(g.value)
+
+
+# ---------------------------------------------------------------------------
+# logistic epilogue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,n,m", [
+    (32, 64, 2),
+    (100, 300, 5),            # n % block_n != 0 → padding
+    (257, 513, 3),            # everything misaligned
+    (64, 1000, 1),            # n_samples = 1
+])
+def test_logistic_filter_kernel_matches_ref(d, n, m):
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    y = jnp.asarray((RNG.uniform(size=d) > 0.5), jnp.float32)
+    etas = jnp.asarray(RNG.normal(size=(m, d)) * 0.4, jnp.float32)
+    got = logistic_filter_gains(X, y, etas, steps=3, interpret=True)
+    want = logistic_filter_gains_ref(X, y, etas, steps=3)
+    assert got.shape == (m, n)
+    # atol covers f32 cancellation of the O(d) log-likelihood sums on
+    # near-zero gains (the padded-d summation order differs from the ref).
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def _cls_state(n_sel=0, d=60, n=30, kmax=6, **kw):
+    rng = np.random.default_rng(3)
+    X0 = rng.normal(size=(d, n))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32)) * np.sqrt(d)
+    w = np.zeros(n)
+    w[:4] = rng.uniform(-2, 2, 4)
+    y = jnp.asarray((1 / (1 + np.exp(-X0 @ w)) > 0.5).astype(np.float32))
+    obj = ClassificationObjective(X, y, kmax=kmax, **kw)
+    st = obj.init()
+    if n_sel:
+        idx = jnp.arange(n_sel, dtype=jnp.int32) * 2
+        st = obj.add_set(st, idx, jnp.ones(n_sel, bool))
+    return obj, st
+
+
+@pytest.mark.parametrize("n_sel,m,b", [(0, 4, 3), (2, 4, 3), (2, 1, 3)])
+def test_cls_filter_batch_matches_per_sample(n_sel, m, b):
+    """filter_gains_batch == vmap(gains ∘ add_set): same dedup, same
+    warm start, same IRLS step count."""
+    obj, st = _cls_state(n_sel)
+    idx = jnp.asarray(RNG.integers(0, obj.n, size=(m, b)), jnp.int32)
+    if n_sel:
+        idx = idx.at[0, 0].set(0)          # duplicate of S in the sample
+    mask = jnp.asarray(RNG.uniform(size=(m, b)) > 0.2)
+    got = obj.filter_gains_batch(st, idx, mask)
+    want = jax.vmap(lambda i, v: obj.gains(obj.add_set(st, i, v)))(idx, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_cls_filter_batch_at_capacity_edge():
+    """|S| = kmax − 1: each sample may accept exactly one element, in slot
+    order — the engine must reproduce add_set's capacity rule."""
+    obj, st = _cls_state(n_sel=5, kmax=6)
+    assert int(jnp.sum(st.sel_k)) == 5
+    idx = jnp.asarray(RNG.integers(0, obj.n, size=(3, 3)), jnp.int32)
+    mask = jnp.ones((3, 3), bool)
+    got = obj.filter_gains_batch(st, idx, mask)
+    want = jax.vmap(lambda i, v: obj.gains(obj.add_set(st, i, v)))(idx, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_cls_filter_batch_quadratic_mode():
+    """gain_mode="quadratic" rides the same engine contract."""
+    obj, st = _cls_state(n_sel=2, gain_mode="quadratic")
+    idx = jnp.asarray(RNG.integers(0, obj.n, size=(3, 3)), jnp.int32)
+    mask = jnp.ones((3, 3), bool)
+    got = obj.filter_gains_batch(st, idx, mask)
+    want = jax.vmap(lambda i, v: obj.gains(obj.add_set(st, i, v)))(idx, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_cls_estimate_matches_per_sample_path():
+    obj, st = _cls_state(n_sel=2)
+    obj_ps = ClassificationObjective(obj.X, obj.y, kmax=obj.kmax,
+                                     use_filter_engine=False)
+    cfg = DashConfig(k=obj.kmax, n_samples=4).resolve(obj.n)
+    alive = jnp.ones((obj.n,), bool) & ~st.sel_mask
+    key = jax.random.PRNGKey(5)
+    allowed = jnp.asarray(obj.kmax - 2)
+    est_en = _estimate_elem_gains(obj, st, alive, 3, allowed, key, cfg)
+    est_ps = _estimate_elem_gains(obj_ps, st, alive, 3, allowed, key, cfg)
+    np.testing.assert_allclose(np.asarray(est_en), np.asarray(est_ps),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_dash_end_to_end_cls_engine():
+    from repro.core import dash_auto, greedy
+
+    obj, _ = _cls_state()
+    assert obj.use_filter_engine
+    g = greedy(obj, obj.kmax)
+    res = dash_auto(obj, obj.kmax, jax.random.PRNGKey(0), eps=0.3,
+                    alpha=0.4, n_samples=4, n_guesses=4)
+    assert float(res.value) >= 0.4 * float(g.value)
