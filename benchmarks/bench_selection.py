@@ -1,4 +1,4 @@
-"""Paper experiment analogues (Figures 2, 3, 4).
+"""Paper experiment analogues (Figures 2, 3, 4) + distributed A/B benches.
 
 Three table families, matching the paper's experimental setup (§5):
   * accuracy-vs-rounds   (Figs 2a/2d, 3a/3d, 4a/4d)
@@ -8,8 +8,16 @@ Three table families, matching the paper's experimental setup (§5):
 Algorithms: DASH, SDS_MA (parallel-oracle greedy), TOP-K, RANDOM, LASSO.
 Datasets: D1 (synthetic regression), D2 (clinical surrogate), D3
 (synthetic classification), D4 (gene surrogate), D1-design (A-opt).
-Sizes default to a CPU-friendly scale; pass ``full=True`` for the paper's
+Sizes default to a CPU-friendly scale; pass ``--full`` for the paper's
 n (the algorithms are identical — only wall time changes).
+
+``--suite distributed`` runs the generic ``dash_distributed`` runner
+against single-device ``dash`` for all three objectives on whatever mesh
+the host devices allow (force a pod-in-miniature with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``), recording
+values and wall times per runtime.  ``--json`` writes every emitted row
+as ``BENCH_selection.json`` — the CI artifact that accumulates the
+selection-benchmark trajectory alongside ``BENCH_kernels.json``.
 
 Sequential-SDS_MA timing is *derived* (n−i single-gain oracle calls per
 round) rather than simulated call-by-call, matching the paper's
@@ -34,6 +42,7 @@ from repro.core import (
     dash_auto,
     greedy,
     lasso_path_select,
+    normalize_columns,
     random_select,
     top_k_select,
 )
@@ -136,6 +145,86 @@ def accuracy_vs_rounds(name, obj, k):
     return np.asarray(res.trace.values), np.asarray(g.values)
 
 
+def distributed_vs_single(name, make_obj, X, k, *, alpha=0.6, eps=0.25,
+                          n_samples=4):
+    """Generic-runner A/B: dash_distributed(obj) vs single-device dash.
+
+    ``make_obj(Xp)`` builds the objective on the (d, n) candidate matrix
+    AFTER it is zero-padded to the mesh's model-axis size, so the suite
+    runs on any host device count.  Same objective instance, same
+    config; the distributed run shards the candidate axis over ``model``
+    and the Monte-Carlo replicas over ``data``.  On a 1-core CPU host
+    the wall-clock ratio mostly measures collective overhead — the depth
+    (adaptive rounds) is identical by construction since both bind the
+    SAME shared selection loop.
+    """
+    from repro.core.distributed import dash_distributed, pad_ground_set
+    from repro.launch.mesh import make_host_mesh
+
+    # data-major factorization: (4, 2) on the 8-device CI host, so the
+    # data-axis pmean/psum cost is part of the recorded timings.
+    mesh = make_host_mesh()
+    Xp, _ = pad_ground_set(jnp.asarray(X, jnp.float32),
+                           mesh.shape["model"])
+    obj = make_obj(Xp)
+    cfg = DashConfig(k=k, eps=eps, alpha=alpha, n_samples=n_samples)
+    g = greedy(obj, k)
+    opt = float(g.value) * 1.05
+
+    t_s, r_s = wall_time(
+        lambda: jax.block_until_ready(dash(obj, cfg, KEY, opt)),
+        warmup=1, iters=1)
+    t_d, r_d = wall_time(
+        lambda: jax.block_until_ready(dash_distributed(obj, cfg, KEY, opt,
+                                                       mesh)),
+        warmup=1, iters=1)
+    shape = "x".join(str(s) for s in mesh.devices.shape)
+    emit(f"distributed/{name}/k={k}/single", t_s * 1e6,
+         f"value={float(r_s.value):.4f};rounds={int(r_s.rounds)}")
+    emit(f"distributed/{name}/k={k}/sharded", t_d * 1e6,
+         f"value={float(r_d.value):.4f};rounds={int(r_d.rounds)};"
+         f"mesh={shape}")
+    emit(f"distributed/{name}/k={k}/parity", 0.0,
+         f"sharded_over_single_value={float(r_d.value) / max(float(r_s.value), 1e-9):.3f};"
+         f"greedy={float(g.value):.4f}")
+    return r_s, r_d
+
+
+def run_distributed(full: bool = False):
+    """Distributed-vs-single benches for ALL THREE paper objectives."""
+    scale = 1 if full else 2
+    rng = np.random.default_rng(0)
+
+    d, n, k = 192 // scale, 128 // scale, 16 // scale
+    X0 = rng.normal(size=(d, n)) + 0.4 * rng.normal(size=(d, 1))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32))
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, k)
+    y = jnp.asarray(X0 @ w + 0.1 * rng.normal(size=d), jnp.float32)
+    distributed_vs_single(
+        "regression", lambda Xp: RegressionObjective(Xp, y, kmax=k), X, k)
+
+    da, na, ka = 48 // scale, 128 // scale, 16 // scale
+    Xa = rng.normal(size=(da, na))
+    Xa = jnp.asarray(Xa / np.linalg.norm(Xa, axis=0, keepdims=True),
+                     jnp.float32)
+    distributed_vs_single(
+        "aopt", lambda Xp: AOptimalityObjective(Xp, kmax=ka), Xa, ka,
+        alpha=0.5)
+
+    dc, nc, kc = 160 // scale, 64 // scale, 8 // scale
+    Xc0 = rng.normal(size=(dc, nc))
+    Xc = normalize_columns(jnp.asarray(Xc0, jnp.float32)) * np.sqrt(dc)
+    wc = np.zeros(nc)
+    wc[:kc] = rng.uniform(-2, 2, kc)
+    yc = jnp.asarray((1 / (1 + np.exp(-Xc0 @ wc)) > 0.5).astype(np.float32))
+    distributed_vs_single(
+        "logistic",
+        lambda Xp: ClassificationObjective(Xp, yc, kmax=kc, newton_steps=4,
+                                           newton_gain_steps=2),
+        Xc, kc, alpha=0.4, eps=0.3, n_samples=3)
+
+
 def run(full: bool = False):
     scale = 1 if full else 4
 
@@ -184,5 +273,40 @@ def run(full: bool = False):
     accuracy_vs_rounds("D1_design_aopt", objd, 100 // scale)
 
 
+def main() -> None:
+    import argparse
+    import json
+
+    from benchmarks.common import rows
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--json", nargs="?", const="BENCH_selection.json", default=None,
+        metavar="PATH",
+        help="also write the emitted rows as a JSON trajectory artifact "
+             "(default path: BENCH_selection.json)",
+    )
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale problem sizes")
+    ap.add_argument(
+        "--suite", choices=("paper", "distributed", "all"), default="all",
+        help="'paper' = Fig 2/3/4 analogues; 'distributed' = "
+             "dash_distributed vs dash for all three objectives (fast — "
+             "what CI runs with 8 forced host devices)",
+    )
+    args = ap.parse_args()
+    if args.suite in ("paper", "all"):
+        run(full=args.full)
+    if args.suite in ("distributed", "all"):
+        run_distributed(full=args.full)
+    if args.json:
+        payload = {"suite": f"bench_selection/{args.suite}",
+                   "backend": jax.default_backend(),
+                   "n_devices": len(jax.devices()), "rows": rows()}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -7,12 +7,12 @@ design), DASH achieves f(S) ≥ (1 − 1/e^{α²} − ε)·OPT in O(log n)
 adaptive rounds — the exponential speedup over greedy's k sequential
 rounds that is the point of the paper.
 
-Per outer round (r rounds total, each adding a block of ⌈k/r⌉ elements):
-
-  t = (1−ε)(OPT − f(S))
-  while  Ê_{R~U(X)}[f_S(R)]  <  α²·t/r:
-      X ← X \\ { a : Ê_R[f_{S∪R}(a)] < α(1+ε/2)·t/k }      (filter)
-  S ← S ∪ R,  R ~ U(X)
+The round/filter control flow itself (outer rounds, the thresholded
+inner while loop with the Lemma-21 iteration cap, trace bookkeeping)
+lives in ``core.selection_loop`` and is SHARED with the distributed
+runtime (``core.distributed``): this module only binds the loop to a
+single-device objective — Monte-Carlo estimators over ``obj``'s batched
+oracles and a Gumbel-top-k sampler over the ground set.
 
 The filter statistic Ê_R[f_{S∪R}(a)] — a fresh batched gain oracle at
 every Monte-Carlo perturbed state S ∪ R_i — dominates the cost of each
@@ -40,8 +40,6 @@ Everything is fixed-shape and jit/vmap/shard_map-compatible.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
 from typing import Any, NamedTuple
 
 import jax
@@ -52,13 +50,12 @@ from repro.core.estimators import (
     sample_set_from_mask,
     trimmed_mean,
 )
-
-
-class DashTrace(NamedTuple):
-    values: jnp.ndarray        # (r,) f(S) after each round
-    alive: jnp.ndarray         # (r,) surviving |X| after each round
-    filter_iters: jnp.ndarray  # (r,) inner-loop iterations used
-    est_set_gain: jnp.ndarray  # (r,) final Ê[f_S(R)] per round
+from repro.core.selection_loop import (  # noqa: F401  (re-exported API)
+    DashConfig,
+    DashTrace,
+    SelectionHooks,
+    run_selection_rounds,
+)
 
 
 class DashResult(NamedTuple):
@@ -68,28 +65,6 @@ class DashResult(NamedTuple):
     rounds: jnp.ndarray        # () int32 — adaptive rounds consumed
     trace: DashTrace
     state: Any
-
-
-@dataclass(frozen=True)
-class DashConfig:
-    k: int                     # cardinality constraint
-    r: int = 0                 # outer rounds (0 → ⌈log2 n⌉, clipped to k)
-    eps: float = 0.2
-    alpha: float = 0.5         # differential-submodularity parameter guess
-    n_samples: int = 8         # Monte-Carlo sets per estimate (paper used 5)
-    trim_frac: float = 0.0     # straggler/outlier trimming per side
-    max_filter_iters: int = 0  # 0 → ⌈log_{1+ε/2} n⌉ (Lemma 21 cap)
-
-    def resolve(self, n: int) -> "DashConfig":
-        r = self.r or max(1, min(self.k, int(math.ceil(math.log2(max(n, 2))))))
-        cap = self.max_filter_iters or (
-            int(math.ceil(math.log(max(n, 2)) / math.log1p(self.eps / 2.0))) + 1
-        )
-        return DashConfig(
-            k=self.k, r=r, eps=self.eps, alpha=self.alpha,
-            n_samples=self.n_samples, trim_frac=self.trim_frac,
-            max_filter_iters=cap,
-        )
 
 
 def _estimate_set_gain(obj, state, alive, block, allowed, key, cfg):
@@ -141,73 +116,39 @@ def _estimate_elem_gains(obj, state, alive, block, allowed, key, cfg):
     return jnp.where(wsum > 0, est, obj.gains(state))
 
 
+def _single_device_hooks(obj, cfg: DashConfig) -> SelectionHooks:
+    """Bind the shared selection loop to a single-device objective."""
+    block = cfg.block
+
+    def pick_and_add(state, alive, allowed, key):
+        idx, valid = sample_set_from_mask(key, alive, block)
+        valid = valid & (jnp.arange(block) < allowed)
+        state = obj.add_set(state, idx, valid)
+        return state, jnp.sum(valid.astype(jnp.int32))
+
+    return SelectionHooks(
+        value=obj.value,
+        sel_mask=lambda state: state.sel_mask,
+        estimate_set_gain=lambda state, alive, allowed, key:
+            _estimate_set_gain(obj, state, alive, block, allowed, key, cfg),
+        estimate_elem_gains=lambda state, alive, allowed, key:
+            _estimate_elem_gains(obj, state, alive, block, allowed, key, cfg),
+        pick_and_add=pick_and_add,
+    )
+
+
 def dash(obj, cfg: DashConfig, key, opt: float | jnp.ndarray) -> DashResult:
     """Run DASH for a single (OPT, α) guess.  jit/vmap-compatible."""
     cfg = cfg.resolve(obj.n)
-    n, k, r = obj.n, cfg.k, cfg.r
-    block = max(1, -(-k // r))  # ⌈k/r⌉
-    alpha2 = cfg.alpha * cfg.alpha
-    opt = jnp.asarray(opt, jnp.float32)
-
-    state0 = obj.init()
-    alive0 = jnp.ones((n,), bool)
-    trace0 = DashTrace(
-        values=jnp.zeros((r,)), alive=jnp.zeros((r,), jnp.int32),
-        filter_iters=jnp.zeros((r,), jnp.int32), est_set_gain=jnp.zeros((r,)),
-    )
-
-    def round_body(rho, carry):
-        state, alive, count, key, trace = carry
-        key, k_est, k_pick = jax.random.split(key, 3)
-        value = obj.value(state)
-        t = jnp.maximum((1.0 - cfg.eps) * (opt - value), 0.0)
-        thr_set = alpha2 * t / r
-        thr_elem = cfg.alpha * (1.0 + cfg.eps / 2.0) * t / k
-        allowed = jnp.maximum(k - count, 0)
-
-        est0 = _estimate_set_gain(obj, state, alive, block, allowed, k_est, cfg)
-
-        def cond(w):
-            alive_w, key_w, est_w, it = w
-            return (
-                (est_w < thr_set)
-                & (it < cfg.max_filter_iters)
-                & (jnp.sum(alive_w) > 0)
-            )
-
-        def body(w):
-            alive_w, key_w, est_w, it = w
-            key_w, k_f, k_e = jax.random.split(key_w, 3)
-            eg = _estimate_elem_gains(obj, state, alive_w, block, allowed, k_f, cfg)
-            alive_w = alive_w & (eg >= thr_elem) & ~state.sel_mask
-            est_w = _estimate_set_gain(obj, state, alive_w, block, allowed, k_e, cfg)
-            return alive_w, key_w, est_w, it + 1
-
-        alive, key, est, iters = jax.lax.while_loop(
-            cond, body, (alive, key, est0, jnp.zeros((), jnp.int32))
-        )
-
-        idx, valid = sample_set_from_mask(k_pick, alive, block)
-        valid = valid & (jnp.arange(block) < allowed)
-        state = obj.add_set(state, idx, valid)
-        added = jnp.sum(valid.astype(jnp.int32))
-        alive = alive & ~state.sel_mask
-        trace = DashTrace(
-            values=trace.values.at[rho].set(obj.value(state)),
-            alive=trace.alive.at[rho].set(jnp.sum(alive.astype(jnp.int32))),
-            filter_iters=trace.filter_iters.at[rho].set(iters),
-            est_set_gain=trace.est_set_gain.at[rho].set(est),
-        )
-        return state, alive, count + added, key, trace
-
-    state, alive, count, key, trace = jax.lax.fori_loop(
-        0, r, round_body, (state0, alive0, jnp.zeros((), jnp.int32), key, trace0)
+    hooks = _single_device_hooks(obj, cfg)
+    state, alive, count, key, trace = run_selection_rounds(
+        hooks, cfg, opt, key, obj.init(), jnp.ones((obj.n,), bool)
     )
     return DashResult(
         sel_mask=state.sel_mask,
         sel_count=count,
         value=obj.value(state),
-        rounds=jnp.sum(trace.filter_iters) + r,
+        rounds=jnp.sum(trace.filter_iters) + cfg.r,
         trace=trace,
         state=state,
     )

@@ -3,9 +3,18 @@
 This is the shard_map realization of paper Algorithm 1 (Thm 10): the
 O(log n)-adaptivity guarantee only buys wall-clock time if every round's
 oracle sweep really runs as one parallel pass, which is what the layout
-below provides.
+below provides — for ALL THREE of the paper's objectives (regression,
+A-optimal design, logistic feature selection; Cor. 7/8/9), not just one.
 
-Layout (DESIGN.md §2/§5):
+The round/filter control flow is NOT re-implemented here: this module
+binds ``core.selection_loop.run_selection_rounds`` — the exact loop the
+single-device ``core.dash`` runs — to distributed Monte-Carlo estimators
+built from an objective's column-based ``DistributedObjective`` contract
+(``objectives/base.py``).  ``dash_distributed(obj, ...)`` therefore works
+for any objective implementing that contract; adding a fourth objective
+requires no change in this file (see docs/distributed.md).
+
+Layout:
   * ground-set columns of X sharded over the ``model`` axis — each shard
     evaluates the batched gain oracle for its own candidate block
     (the paper's "one oracle query per core", scaled to a pod),
@@ -20,7 +29,8 @@ b = block size ⌈k/r⌉, d = feature dim):
   sampling     all_gather  (P·b scores)             — O(P·b)
   column fetch psum        (d × b one-hot GEMM)     — O(d·b)
   estimates    pmean       (scalar / (n/P,) gains)  — O(n/P)
-Everything else is shard-local dense linear algebra.  This is why DASH
+Everything else is shard-local dense linear algebra (the objective's
+``dist_*`` oracles are collective-free by contract).  This is why DASH
 parallelizes: per round the communication volume is O(d·b + n/P), while
 greedy must synchronize after every single pick (k rounds of latency).
 
@@ -28,39 +38,39 @@ Filter loop (the inner while of Alg. 1): the statistic Ê_R[f_{S∪R}(a)]
 is estimated exactly as in ``core.dash._estimate_elem_gains`` — gains at
 every Monte-Carlo perturbed state S ∪ R_i, leave-one-out-averaged over
 the samples with a ∉ R_i, pmean'd over the data axis.  With
-``use_filter_engine=True`` (the default) the per-shard evaluation goes
-through the sample-batched filter engine: the shared basis Q stays
-replicated, each sample contributes only its delta columns D_i ⊥ Q and
-residual r_i (``_mgs_expand_basis``), and one fused
-``repro.kernels.filter_gains`` call sweeps the local candidate shard for
-ALL samples — sharding the engine's candidate axis over ``model`` is
-exactly shard_map-compatible because the call is shard-local dense math
-with no collectives inside.
-
-The implementation is a faithful mirror of ``core/dash.py``; it is tested
-against it for solution quality and for exact cross-shard state agreement.
+``use_filter_engine=True`` (the default wherever the objective opts in)
+the per-shard evaluation goes through the objective's
+``dist_filter_gains_batch``: shared state stays replicated, each sample
+contributes only its small delta (MGS delta columns / Woodbury factors /
+refit logits), and one fused ``repro.kernels.filter_gains`` launch
+sweeps the local candidate shard for ALL samples — sharding the engine's
+candidate axis over ``model`` is exactly shard_map-compatible because
+the call is shard-local dense math with no collectives inside.
 """
 
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.dash import DashConfig, DashTrace
-from repro.core.objectives.base import write_accepted_column
+from repro.core.selection_loop import (
+    DashConfig,
+    DashTrace,
+    SelectionHooks,
+    run_selection_rounds,
+)
 
 
 class DistDashResult(NamedTuple):
     sel_mask: jnp.ndarray      # (n,) bool — global (gathered)
     sel_count: jnp.ndarray
     value: jnp.ndarray
-    rounds: jnp.ndarray
+    rounds: jnp.ndarray        # adaptive rounds consumed (filter iters + r)
     values_trace: jnp.ndarray  # (r,)
+    trace: DashTrace | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -84,7 +94,6 @@ def _dist_sample(key, alive_local, m, n_local, axis):
 
     all_vals = jax.lax.all_gather(loc_vals, axis)          # (P, m)
     all_idx = jax.lax.all_gather(loc_idx, axis)            # (P, m)
-    nshards = all_vals.shape[0]
     flat_vals = all_vals.reshape(-1)
     top_vals, top_flat = jax.lax.top_k(flat_vals, m)       # global top-m
     top_shard = top_flat // m
@@ -101,248 +110,160 @@ def _dist_gather_columns(X_local, idx_local, owned, axis):
     return jax.lax.psum(cols, axis)
 
 
-def _mgs_add_set(Q, count, resid, C, kmax: int, span_tol: float = 1e-6):
-    """Incremental MGS basis extension (replicated-state oracle update).
-
-    Mirrors ``RegressionObjective.add_set``: each accepted column of C is
-    orthonormalized against the padded basis Q and appended at slot
-    ``count``.  Rejected columns (zero/padded, in-span, or at capacity)
-    leave Q, count and resid untouched — in particular the write into the
-    last slot is guarded so an at-capacity call cannot clobber the basis
-    vector already stored there.
-    """
-    m = C.shape[1]
-
-    def body(j, carry):
-        Q, count, resid = carry
-        v = C[:, j]
-        nrm0 = jnp.sqrt(jnp.sum(v * v))
-        v = v - Q @ (Q.T @ v)
-        v = v - Q @ (Q.T @ v)
-        nrm = jnp.sqrt(jnp.sum(v * v))
-        accept = (nrm0 > 0) & (nrm > span_tol * jnp.maximum(nrm0, 1.0)) & (count < kmax)
-        q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
-        Q = write_accepted_column(Q, jnp.minimum(count, kmax - 1), accept, q)
-        resid = resid - q * jnp.dot(q, resid)
-        return Q, count + accept.astype(jnp.int32), resid
-
-    return jax.lax.fori_loop(0, m, body, (Q, count, resid))
-
-
-def _mgs_expand_basis(Q, count, resid, C, kmax: int, span_tol: float = 1e-6):
-    """MGS deltas for S ∪ R without rewriting the shared basis.
-
-    The filter-engine analogue of ``_mgs_add_set``: the same accept rule,
-    but accepted columns land in a fresh (d, m) buffer D ⊥ span(Q) so the
-    engine can reuse the replicated Q across every Monte-Carlo sample.
-    Returns (D, resid) — the per-sample delta basis and residual.
-    """
-    m = C.shape[1]
-
-    def body(j, carry):
-        D, dcount, r = carry
-        v = C[:, j]
-        nrm0 = jnp.sqrt(jnp.sum(v * v))
-        # Two rounds of MGS against the shared basis + earlier deltas.
-        v = v - Q @ (Q.T @ v)
-        v = v - D @ (D.T @ v)
-        v = v - Q @ (Q.T @ v)
-        v = v - D @ (D.T @ v)
-        nrm = jnp.sqrt(jnp.sum(v * v))
-        accept = (
-            (nrm0 > 0)
-            & (nrm > span_tol * jnp.maximum(nrm0, 1.0))
-            & (count + dcount < kmax)
-        )
-        q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
-        D = write_accepted_column(D, jnp.minimum(dcount, m - 1), accept, q)
-        r = r - q * jnp.dot(q, r)
-        return D, dcount + accept.astype(jnp.int32), r
-
-    D0 = jnp.zeros((Q.shape[0], m), jnp.float32)
-    D, _, r = jax.lax.fori_loop(
-        0, m, body, (D0, jnp.zeros((), jnp.int32), resid)
-    )
-    return D, r
-
-
 # ---------------------------------------------------------------------------
-# distributed regression oracle state (Q, resid replicated; sel_mask local)
+# the generic sharded runner
 # ---------------------------------------------------------------------------
 
-def dash_distributed_regression(
-    X, y, cfg: DashConfig, key, opt, mesh,
+def dash_distributed(
+    obj, cfg: DashConfig, key, opt, mesh,
     *, model_axis: str = "model", data_axis: str | None = "data",
-    use_filter_engine: bool = True,
+    use_filter_engine: bool | None = None,
 ):
-    """Run DASH with candidates sharded over ``model_axis`` and Monte-Carlo
-    replicas over ``data_axis``.  X: (d, n) with n divisible by the model
-    axis size (pad first — see ``pad_ground_set``).
+    """Run DASH for any ``DistributedObjective`` on a device mesh.
 
-    ``use_filter_engine`` routes the filter statistic through the
-    sample-batched engine (one fused sweep of the local candidate shard
-    for all ``cfg.n_samples`` perturbed states); False forces the
-    per-sample add_set + gains path, which re-projects the full shard
-    against the basis once per sample.
+    ``obj.X`` (d, n) is sharded over ``model_axis`` (n must be divisible
+    by the axis size — pad first, see ``pad_ground_set``); Monte-Carlo
+    estimate replicas ride ``data_axis`` (pass ``None`` for a pure
+    model-parallel mesh).  The selection loop, thresholds and trace are
+    the shared ``core.selection_loop`` implementation, so solutions are
+    statistically exchangeable with single-device ``dash(obj, ...)``.
+
+    ``use_filter_engine=None`` defers to ``obj.use_filter_engine``;
+    ``False`` forces the per-sample ``dist_add_set`` + ``dist_gains``
+    path, which re-evaluates the full local shard once per sample.
     """
+    X = obj.X
     d, n = X.shape
     cfg = cfg.resolve(n)
     Pm = mesh.shape[model_axis]
-    Dm = mesh.shape[data_axis] if data_axis else 1
     assert n % Pm == 0, f"pad ground set: n={n} % model={Pm}"
     n_local = n // Pm
-    k, r = cfg.k, cfg.r
-    block = max(1, -(-k // r))
-    alpha2 = cfg.alpha * cfg.alpha
-    ysq = jnp.maximum(jnp.sum(y * y), 1e-12)
+    block = cfg.block
+    if use_filter_engine is None:
+        use_filter_engine = bool(getattr(obj, "use_filter_engine", False))
+    use_filter_engine = use_filter_engine and hasattr(
+        obj, "dist_filter_gains_batch"
+    )
 
-    in_specs = (P(None, model_axis), P(), P(), P())
-    out_specs = (P(model_axis), P(), P(), P(), P())
+    in_specs = (P(None, model_axis), P(), P())
+    out_specs = (
+        P(model_axis), P(), P(), P(),
+        DashTrace(values=P(), alive=P(), filter_iters=P(), est_set_gain=P()),
+    )
 
-    def run(X_local, y_rep, key_rep, opt_rep):
-        col_sq = jnp.sum(X_local * X_local, axis=0)
+    def run(X_local, key_rep, opt_rep):
+        def draw(kk, alive, allowed):
+            """One global sample: local indices/ownership + gathered cols.
 
-        from repro.kernels.marginal_gains.ref import regression_gains_ref
-
-        def gains(Q, resid, sel_local):
-            g = regression_gains_ref(X_local, Q, resid, col_sq) / ysq
-            return jnp.where(sel_local, 0.0, g)
-
-        def set_gain(Q, resid, C):
-            Ct = C - Q @ (Q.T @ C)
-            csq = jnp.sum(C * C, axis=0)
-            G = Ct.T @ Ct + jnp.diag(
-                jnp.where(csq > 0, 1e-8 * jnp.maximum(csq, 1.0), 1.0)
+            Collectives (all_gather / psum over the model axis) stay in
+            this stage; every oracle call on the result is shard-local.
+            """
+            idx_l, owned, validg = _dist_sample(
+                kk, alive, block, n_local, model_axis
             )
-            b = Ct.T @ resid
-            L = jnp.linalg.cholesky(G)
-            z = jax.scipy.linalg.solve_triangular(L, b, lower=True)
-            return jnp.sum(z * z) / ysq
+            slot_ok = validg & (jnp.arange(block) < allowed)
+            C = _dist_gather_columns(X_local, idx_l, owned & slot_ok,
+                                     model_axis)
+            return idx_l, owned, slot_ok, C
 
-        def add_set(Q, count, resid, C):
-            return _mgs_add_set(Q, count, resid, C, cfg.k)
-
-        def estimate_set_gain(Q, resid, alive, allowed, key):
-            # Each data-axis replica evaluates its own samples; pmean merges.
+        def fold_data(key):
+            # Each data-axis replica evaluates its own samples; the
+            # estimators pmean/psum the results back together.
             didx = jax.lax.axis_index(data_axis) if data_axis else 0
-            kd = jax.random.fold_in(key, didx)
+            return jax.random.fold_in(key, didx)
+
+        def gains_local(ds, sel_local):
+            return jnp.where(sel_local, 0.0, obj.dist_gains(ds, X_local))
+
+        def estimate_set_gain(state, alive, allowed, key):
+            ds, _ = state
 
             def one(kk):
-                idx_l, owned, validg = _dist_sample(kk, alive, block, n_local, model_axis)
-                validg = validg & (jnp.arange(block) < allowed)
-                C = _dist_gather_columns(
-                    X_local, idx_l, owned & (jnp.arange(block) < allowed), model_axis
-                )
-                return set_gain(Q, resid, C)
+                _, _, slot_ok, C = draw(kk, alive, allowed)
+                return obj.dist_set_gain(ds, C, slot_ok)
 
-            vals = jax.vmap(one)(jax.random.split(kd, cfg.n_samples))
+            vals = jax.vmap(one)(
+                jax.random.split(fold_data(key), cfg.n_samples)
+            )
             est = jnp.mean(vals)
             if data_axis:
                 est = jax.lax.pmean(est, data_axis)
             return est
 
-        def estimate_elem_gains(Q, count, resid, sel_local, alive, allowed, key):
-            didx = jax.lax.axis_index(data_axis) if data_axis else 0
-            kd = jax.random.fold_in(key, didx)
-            keys = jax.random.split(kd, cfg.n_samples)
+        def estimate_elem_gains(state, alive, allowed, key):
+            ds, sel_local = state
+            keys = jax.random.split(fold_data(key), cfg.n_samples)
 
-            def draw(kk):
-                # Collectives (all_gather / psum over the model axis) stay
-                # in this per-sample stage; the gain sweep below is
-                # shard-local.
-                idx_l, owned, validg = _dist_sample(kk, alive, block, n_local, model_axis)
-                slot_ok = validg & (jnp.arange(block) < allowed)
-                C = _dist_gather_columns(X_local, idx_l, owned & slot_ok, model_axis)
+            def one_draw(kk):
+                idx_l, owned, slot_ok, C = draw(kk, alive, allowed)
                 w = jnp.ones((n_local,)).at[idx_l].add(
                     jnp.where(owned & slot_ok, -1.0, 0.0)
                 )
-                return C, w
+                return C, slot_ok, w
 
-            Cs, ws = jax.vmap(draw)(keys)
+            Cs, slot_oks, ws = jax.vmap(one_draw)(keys)
             if use_filter_engine:
-                # Shared basis Q + per-sample deltas: one fused engine
+                # Shared state + per-sample deltas: one fused engine
                 # sweep of the local candidate shard for all samples.
-                from repro.kernels.filter_gains.ops import filter_gains
-
-                D, R = jax.vmap(
-                    lambda C: _mgs_expand_basis(Q, count, resid, C, cfg.k)
-                )(Cs)
-                gs = filter_gains(X_local, Q, D, R, col_sq) / ysq
-                gs = jnp.where(sel_local[None, :], 0.0, gs)
+                gs = obj.dist_filter_gains_batch(ds, Cs, slot_oks, X_local)
             else:
-                def one(C):
-                    Q2, _, r2 = add_set(Q, count, resid, C)
-                    return gains(Q2, r2, sel_local)
-
-                gs = jax.vmap(one)(Cs)
+                gs = jax.vmap(
+                    lambda C, v: obj.dist_gains(
+                        obj.dist_add_set(ds, C, v, X_local), X_local
+                    )
+                )(Cs, slot_oks)
+            gs = jnp.where(sel_local[None, :], 0.0, gs)
 
             gsum, wsum = jnp.sum(gs * ws, axis=0), jnp.sum(ws, axis=0)
             if data_axis:
                 gsum = jax.lax.psum(gsum, data_axis)
                 wsum = jax.lax.psum(wsum, data_axis)
             est = gsum / jnp.maximum(wsum, 1.0)
-            return jnp.where(wsum > 0, est, gains(Q, resid, sel_local))
+            return jnp.where(wsum > 0, est, gains_local(ds, sel_local))
 
-        # ---- DASH rounds ------------------------------------------------
-        Q0 = jnp.zeros((d, cfg.k), jnp.float32)
-        maxit = cfg.max_filter_iters
-
-        def round_body(rho, carry):
-            Q, count, resid, sel_local, alive, key, nsel, values = carry
-            key, k_est, k_pick = jax.random.split(key, 3)
-            value = (ysq - jnp.sum(resid * resid)) / ysq
-            t = jnp.maximum((1.0 - cfg.eps) * (opt_rep - value), 0.0)
-            thr_set = alpha2 * t / r
-            thr_elem = cfg.alpha * (1.0 + cfg.eps / 2.0) * t / k
-            allowed = jnp.maximum(k - nsel, 0)
-
-            est0 = estimate_set_gain(Q, resid, alive, allowed, k_est)
-
-            def cond(w):
-                alive_w, key_w, est_w, it = w
-                n_alive = jax.lax.psum(jnp.sum(alive_w.astype(jnp.int32)), model_axis)
-                return (est_w < thr_set) & (it < maxit) & (n_alive > 0)
-
-            def body(w):
-                alive_w, key_w, est_w, it = w
-                key_w, k_f, k_e = jax.random.split(key_w, 3)
-                eg = estimate_elem_gains(Q, count, resid, sel_local, alive_w, allowed, k_f)
-                alive_w = alive_w & (eg >= thr_elem) & ~sel_local
-                est_w = estimate_set_gain(Q, resid, alive_w, allowed, k_e)
-                return alive_w, key_w, est_w, it + 1
-
-            alive, key, est, iters = jax.lax.while_loop(
-                cond, body, (alive, key, est0, jnp.zeros((), jnp.int32))
-            )
-
-            idx_l, owned, validg = _dist_sample(k_pick, alive, block, n_local, model_axis)
-            slot_ok = validg & (jnp.arange(block) < allowed)
-            C = _dist_gather_columns(X_local, idx_l, owned & slot_ok, model_axis)
-            Q, count, resid = add_set(Q, count, resid, C)
-            sel_local = sel_local.at[idx_l].set(sel_local[idx_l] | (owned & slot_ok))
-            alive = alive & ~sel_local
+        def pick_and_add(state, alive, allowed, key):
+            ds, sel_local = state
+            idx_l, owned, slot_ok, C = draw(key, alive, allowed)
+            ds = obj.dist_add_set(ds, C, slot_ok, X_local)
+            # Scatter ONLY the owned slots: idx_l entries for slots owned
+            # by other shards are foreign local indices that can collide
+            # with an owned slot's index, and a duplicate-index .set()
+            # could then drop the True write.  Routing non-owned slots to
+            # an out-of-bounds index (mode="drop") makes the scatter
+            # collision-free.
+            idx_safe = jnp.where(owned & slot_ok, idx_l, n_local)
+            sel_local = sel_local.at[idx_safe].set(True, mode="drop")
             added = jax.lax.psum(
                 jnp.sum((owned & slot_ok).astype(jnp.int32)), model_axis
             )
-            value = (ysq - jnp.sum(resid * resid)) / ysq
-            values = values.at[rho].set(value)
-            return Q, count, resid, sel_local, alive, key, nsel + added, values
+            return (ds, sel_local), added
 
-        init = (
-            Q0,
-            jnp.zeros((), jnp.int32),
-            y_rep,
-            jnp.zeros((n_local,), bool),
-            jnp.ones((n_local,), bool),
-            key_rep,
-            jnp.zeros((), jnp.int32),
-            jnp.zeros((r,), jnp.float32),
+        hooks = SelectionHooks(
+            value=lambda state: obj.dist_value(state[0]),
+            sel_mask=lambda state: state[1],
+            estimate_set_gain=estimate_set_gain,
+            estimate_elem_gains=estimate_elem_gains,
+            pick_and_add=pick_and_add,
+            count_alive=lambda alive: jax.lax.psum(
+                jnp.sum(alive.astype(jnp.int32)), model_axis
+            ),
         )
-        Q, count, resid, sel_local, alive, key_f, nsel, values = jax.lax.fori_loop(
-            0, r, round_body, init
+
+        state0 = (
+            obj.dist_init(X_local),
+            jnp.zeros((n_local,), bool),     # shard-local sel mask
         )
-        value = (ysq - jnp.sum(resid * resid)) / ysq
-        return sel_local, nsel, value, jnp.asarray(r, jnp.int32), values
+        # Zero columns (pad_ground_set padding, or genuinely empty
+        # candidates) start dead: they can contribute nothing, and the
+        # commit step samples uniformly from `alive`, so leaving them in
+        # would let padding burn capacity and pollute sel_mask whenever a
+        # round commits without filtering.
+        alive0 = jnp.sum(X_local * X_local, axis=0) > 0
+        (ds, sel_local), _, count, _, trace = run_selection_rounds(
+            hooks, cfg, opt_rep, key_rep, state0, alive0
+        )
+        rounds = jnp.sum(trace.filter_iters) + jnp.asarray(cfg.r, jnp.int32)
+        return sel_local, count, obj.dist_value(ds), rounds, trace
 
     # Replication checking off: the Monte-Carlo estimators vmap over sample
     # keys with collectives (psum/all_gather) inside the vmapped body; the
@@ -360,18 +281,41 @@ def dash_distributed_regression(
             check_rep=False,
         )
     run_sharded = jax.jit(mapped)
-    sel, nsel, value, rounds, values = run_sharded(
-        X, y, key, jnp.asarray(opt, jnp.float32)
+    sel, nsel, value, rounds, trace = run_sharded(
+        X, key, jnp.asarray(opt, jnp.float32)
     )
     return DistDashResult(
         sel_mask=sel, sel_count=nsel, value=value, rounds=rounds,
-        values_trace=values,
+        values_trace=trace.values, trace=trace,
+    )
+
+
+def dash_distributed_regression(
+    X, y, cfg: DashConfig, key, opt, mesh,
+    *, model_axis: str = "model", data_axis: str | None = "data",
+    use_filter_engine: bool = True,
+):
+    """Back-compat wrapper: regression DASH on the generic runner.
+
+    Prefer constructing a ``RegressionObjective`` (with the ``kmax`` you
+    want) and calling ``dash_distributed`` directly — this wrapper pins
+    ``kmax = cfg.k`` to match the historical behaviour.
+    """
+    from repro.core.objectives.regression import RegressionObjective
+
+    obj = RegressionObjective(X, y, kmax=cfg.k,
+                              use_filter_engine=use_filter_engine)
+    return dash_distributed(
+        obj, cfg, key, opt, mesh, model_axis=model_axis,
+        data_axis=data_axis, use_filter_engine=use_filter_engine,
     )
 
 
 def pad_ground_set(X, multiple: int):
     """Pad candidate columns with zeros to a multiple (zero columns can
-    never be selected: their gains are 0)."""
+    never be selected: the runner starts them outside the alive set, so
+    they are never sampled, and every objective's ``dist_add_set``
+    accept rule rejects zero columns as a second line of defence)."""
     d, n = X.shape
     n_pad = (-n) % multiple
     if n_pad == 0:

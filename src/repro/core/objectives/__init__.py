@@ -1,4 +1,5 @@
 from repro.core.objectives.base import (
+    DistributedObjective,
     Objective,
     SupportsFilterEngine,
     normalize_columns,
@@ -10,6 +11,7 @@ from repro.core.objectives.diversity import ClusterDiversity, DiversifiedObjecti
 from repro.core.objectives.r2 import R2Objective
 
 __all__ = [
+    "DistributedObjective",
     "Objective",
     "SupportsFilterEngine",
     "normalize_columns",

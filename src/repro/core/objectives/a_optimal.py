@@ -41,6 +41,16 @@ class AOptState(NamedTuple):
     value: jnp.ndarray      # () f32
 
 
+class AOptDistState(NamedTuple):
+    """Replicated precision/factor state for the distributed runtime.
+    ``W`` is the shard-LOCAL shared solve M⁻¹X_local — the only (n,)-
+    shaped member, refreshed once per ``dist_add_set`` like the
+    single-device cache."""
+    M: jnp.ndarray          # (d, d) — replicated
+    L: jnp.ndarray          # (d, d) — replicated
+    W: jnp.ndarray          # (d, n_local) — shard-local
+
+
 class AOptimalityObjective:
     """Bayesian A-optimality oracle.  X: (d, n) stimuli columns."""
 
@@ -104,15 +114,20 @@ class AOptimalityObjective:
             g = aopt_gains_ref(self.X, W, self.isig2)
         return jnp.where(state.sel_mask, 0.0, g)
 
-    def set_gain(self, state: AOptState, idx, mask):
-        C = gather_columns(self.X, idx, mask)      # (d, m)
-        m = idx.shape[0]
-        W = self._minv(state.L, C)                 # (d, m)
+    def _set_gain_cols(self, L, C, mask):
+        """Woodbury set gain from gathered columns — the ONE
+        implementation behind both ``set_gain`` and ``dist_set_gain``."""
+        m = C.shape[1]
+        W = self._minv(L, C)                       # (d, m)
         K = jnp.eye(m) + self.isig2 * (C.T @ W)
         K = K + jnp.diag(jnp.where(mask, 0.0, 1.0))  # pin padded slots
         Lk = jnp.linalg.cholesky(K)
         Z = jax.scipy.linalg.solve_triangular(Lk, W.T, lower=True)  # (m, d)
         return self.isig2 * jnp.sum(Z * Z)
+
+    def set_gain(self, state: AOptState, idx, mask):
+        C = gather_columns(self.X, idx, mask)      # (d, m)
+        return self._set_gain_cols(state.L, C, mask)
 
     def add_set(self, state: AOptState, idx, mask) -> AOptState:
         # Re-adding an already-selected stimulus must be a no-op for set
@@ -149,19 +164,13 @@ class AOptimalityObjective:
         sample.  Returns (E, F) with F = EᵀE — padded/duplicate slots
         produce zero columns of E and contribute nothing.
         """
-        m = idx.shape[0]
         new_mask = mask & ~state.sel_mask[idx]
         C = gather_columns(self.X, idx, new_mask)      # (d, m)
         if W is None:
             P = self._minv(state.L, C)                 # (d, m) = M⁻¹C
         else:
             P = gather_columns(W, idx, new_mask)
-        K = jnp.eye(m) + self.isig2 * (C.T @ P)
-        Lk = jnp.linalg.cholesky(K)
-        Et = jnp.sqrt(self.isig2) * jax.scipy.linalg.solve_triangular(
-            Lk, P.T, lower=True
-        )                                              # (m, d) = Eᵀ
-        return Et.T, Et @ Et.T
+        return self._woodbury_factors(C, P)
 
     def filter_gains_batch(self, state: AOptState, idx, mask):
         """Gains w.r.t. S ∪ R_i for every sample i in one fused pass.
@@ -186,6 +195,55 @@ class AOptimalityObjective:
             lambda i, v: state.sel_mask.at[i].set(state.sel_mask[i] | v)
         )(idx, mask)
         return jnp.where(sel, 0.0, g)
+
+    def _woodbury_factors(self, C, P):
+        """(E, F) of M + σ⁻²CCᵀ given C and P = M⁻¹C — the ONE
+        implementation behind ``expand_factors`` (index-based, with the
+        shared-solve gather) and ``dist_filter_gains_batch``."""
+        m = C.shape[1]
+        K = jnp.eye(m) + self.isig2 * (C.T @ P)
+        Lk = jnp.linalg.cholesky(K)
+        Et = jnp.sqrt(self.isig2) * jax.scipy.linalg.solve_triangular(
+            Lk, P.T, lower=True
+        )                                              # (m, d) = Eᵀ
+        return Et.T, Et @ Et.T
+
+    # -- distributed contract (column-based; see DistributedObjective) ----
+    def dist_init(self, X_local) -> AOptDistState:
+        return AOptDistState(
+            M=self.beta2 * jnp.eye(self.d),
+            L=jnp.sqrt(self.beta2) * jnp.eye(self.d),
+            W=X_local / self.beta2,
+        )
+
+    def dist_value(self, ds: AOptDistState):
+        return self.tr_prior - self._trace_inv(ds.L)
+
+    def dist_gains(self, ds: AOptDistState, X_local):
+        # ops wrapper: resolve_path routes each shard to compiled Pallas
+        # on TPU and the jnp reference elsewhere.
+        from repro.kernels.aopt_gains.ops import aopt_gains
+
+        return aopt_gains(X_local, ds.W, self.isig2)
+
+    def dist_set_gain(self, ds: AOptDistState, C, mask):
+        return self._set_gain_cols(ds.L, C, mask)
+
+    def dist_add_set(self, ds: AOptDistState, C, mask, X_local):
+        C = C * mask.astype(C.dtype)[None, :]
+        M = ds.M + self.isig2 * (C @ C.T)
+        L = self._chol(M)
+        # Refresh the shard-local shared solve once per state update.
+        return AOptDistState(M=M, L=L, W=self._minv(L, X_local))
+
+    def dist_filter_gains_batch(self, ds: AOptDistState, Cs, masks, X_local):
+        Cs = Cs * masks.astype(Cs.dtype)[:, None, :]
+        E, F = jax.vmap(
+            lambda C: self._woodbury_factors(C, self._minv(ds.L, C))
+        )(Cs)
+        from repro.kernels.filter_gains.ops import aopt_filter_gains
+
+        return aopt_filter_gains(X_local, ds.W, E, F, self.isig2)
 
     # -- exact reference (tests) ------------------------------------------
     def brute_value(self, sel_idx):

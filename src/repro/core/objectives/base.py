@@ -35,6 +35,21 @@ shared + per-sample parts so all samples ride one fused kernel launch
 (``repro.kernels.filter_gains``).  ``core.dash._estimate_elem_gains``
 dispatches on ``use_filter_engine`` and falls back to the per-sample
 vmap path for objectives without the contract.
+
+Distributed contract
+--------------------
+``core.distributed.dash_distributed`` runs the SAME selection loop with
+the ground-set columns sharded over a mesh axis.  Inside ``shard_map``
+an objective cannot index its global ``X`` — every shard sees only its
+local column block, and sampled sets arrive as already-gathered column
+matrices ``C`` (a psum of one-hot GEMMs, see ``one_hot_columns``).  The
+``DistributedObjective`` contract is therefore *column-based*: the
+replicated oracle state (no ``sel_mask`` — the runner keeps the
+shard-local selection mask) plus oracles over ``(C, mask)`` and the
+shard's local columns ``X_local``.  All six methods must be collective
+free — pure shard-local/replicated dense math — so the runner alone
+decides what is psum'd/pmean'd and the fused filter-engine sweep stays
+a single launch per shard (see docs/distributed.md).
 """
 
 from __future__ import annotations
@@ -82,6 +97,51 @@ class SupportsFilterEngine(Objective, Protocol):
     def filter_gains_batch(self, state, idx, mask) -> Array:
         """(n_samples, n) gains w.r.t. S ∪ R_i for each sampled R_i —
         semantically ``vmap(lambda R: gains(add_set(state, R)))``."""
+
+
+class DistributedObjective(Objective, Protocol):
+    """Column-based oracle bundle for the sharded DASH runtime.
+
+    Implemented by ``RegressionObjective``, ``AOptimalityObjective`` and
+    ``ClassificationObjective``; consumed by
+    ``core.distributed.dash_distributed``.  ``dstate`` is an
+    objective-specific pytree that is REPLICATED across model-axis
+    shards except for explicitly shard-local caches (e.g. the A-opt
+    shared solve W = M⁻¹X_local); it carries no ``sel_mask``.  ``C`` is
+    a (d, m) matrix of globally-gathered sample columns with invalid
+    slots zeroed; ``mask`` is the (m,) replicated slot-validity vector.
+
+    Methods must be free of collectives and must not read ``self.X`` /
+    other (n,)-shaped globals — only ``X_local`` and (d,)-shaped
+    replicated data — so they are safe to trace inside ``shard_map``.
+    """
+
+    X: Array        # (d, n) ground-set columns — sharded BY THE RUNNER
+
+    def dist_init(self, X_local):
+        """Replicated oracle state for S = ∅ (plus shard-local caches)."""
+
+    def dist_value(self, dstate) -> Array:
+        """f(S) from the replicated state."""
+
+    def dist_gains(self, dstate, X_local) -> Array:
+        """(n_local,) singleton marginals for this shard's candidates.
+
+        Must route through the ``repro.kernels`` ops wrappers so
+        ``resolve_path`` backend routing (compiled Pallas on TPU, jnp
+        reference elsewhere) applies per shard."""
+
+    def dist_set_gain(self, dstate, C, mask) -> Array:
+        """f_S(R) for the gathered sample columns."""
+
+    def dist_add_set(self, dstate, C, mask, X_local):
+        """Replicated state for S ∪ R (same accept/capacity rules as
+        ``add_set``; zero columns — padding — are never accepted)."""
+
+    def dist_filter_gains_batch(self, dstate, Cs, masks, X_local) -> Array:
+        """(n_samples, n_local) gains w.r.t. S ∪ R_i for this shard —
+        the filter-engine sweep, one fused launch for all samples.
+        ``Cs``/``masks`` stack ``n_samples`` gathered sets."""
 
 
 def normalize_columns(X: Array, eps: float = 1e-12) -> Array:

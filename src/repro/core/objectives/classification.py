@@ -34,7 +34,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.objectives.base import gather_columns
+from repro.core.objectives.base import gather_columns, write_accepted_column
 
 
 def _sigmoid(z):
@@ -53,6 +53,17 @@ class ClassificationState(NamedTuple):
     eta: jnp.ndarray        # (d,) current logits X_S w
     sel_mask: jnp.ndarray   # (n,) bool
     value: jnp.ndarray      # () f32 — ℓ(w^S) − ℓ(0)
+
+
+class ClassificationDistState(NamedTuple):
+    """Replicated support state for the distributed runtime.  Instead of
+    global column indices (meaningless on a shard) the support stores the
+    gathered COLUMNS themselves — (d, kmax) is replicated once and every
+    refit is shard-independent dense math."""
+    sup_cols: jnp.ndarray   # (d, kcap) support columns (zero-padded)
+    sup_k: jnp.ndarray      # (kcap,) bool — live support slots
+    w: jnp.ndarray          # (kcap,) f32 — weights on the support
+    eta: jnp.ndarray        # (d,) current logits X_S w
 
 
 class ClassificationObjective:
@@ -102,12 +113,13 @@ class ClassificationObjective:
         return state.value
 
     # -- oracles ----------------------------------------------------------
-    def _quadratic_gains(self, eta):
+    def _quadratic_gains(self, eta, X=None):
+        X = self.X if X is None else X             # X_local when sharded
         p = _sigmoid(eta)
         resid = self.y - p                         # (d,)
-        g = self.X.T @ resid                       # (n,)
+        g = X.T @ resid                            # (n,)
         wgt = p * (1.0 - p)                        # (d,)
-        h = (self.X * self.X).T @ wgt              # (n,)
+        h = (X * X).T @ wgt                        # (n,)
         return (g * g) / (2.0 * h + self.gain_eps)
 
     def gains(self, state: ClassificationState):
@@ -252,6 +264,85 @@ class ClassificationObjective:
             lambda i, v: state.sel_mask.at[i].set(state.sel_mask[i] | v)
         )(idx, mask)
         return jnp.where(sel, 0.0, g)
+
+    # -- distributed contract (column-based; see DistributedObjective) ----
+    def dist_init(self, X_local) -> ClassificationDistState:
+        return ClassificationDistState(
+            sup_cols=jnp.zeros((self.d, self.kmax), jnp.float32),
+            sup_k=jnp.zeros((self.kmax,), bool),
+            w=jnp.zeros((self.kmax,), jnp.float32),
+            eta=jnp.zeros((self.d,), jnp.float32),
+        )
+
+    def dist_value(self, ds: ClassificationDistState):
+        return _loglik(ds.eta, self.y) - self.ll0
+
+    def dist_gains(self, ds: ClassificationDistState, X_local):
+        if self.gain_mode == "quadratic":
+            return self._quadratic_gains(ds.eta, X_local)
+        # ops wrapper: resolve_path routes each shard to compiled Pallas
+        # on TPU and the jnp reference elsewhere.
+        from repro.kernels.logistic_gains.ops import logistic_gains
+
+        return logistic_gains(X_local, self.y, ds.eta,
+                              steps=self.newton_gain_steps)
+
+    def dist_set_gain(self, ds: ClassificationDistState, C, mask):
+        m = C.shape[1]
+        take = mask & (jnp.sum(C * C, axis=0) > 0)
+        sup_cols = jnp.concatenate([ds.sup_cols, C * take[None, :]], axis=1)
+        sup_mask = jnp.concatenate([ds.sup_k, take])
+        w0 = jnp.concatenate([ds.w * ds.sup_k, jnp.zeros((m,), jnp.float32)])
+        _, _, ll = self._refit(sup_cols, sup_mask, w0, self.newton_steps)
+        return jnp.maximum(ll - _loglik(ds.eta, self.y), 0.0)
+
+    def dist_add_set(self, ds: ClassificationDistState, C, mask, X_local):
+        # Same slot-order accept rule as add_set; zero (padding) columns
+        # are never accepted so they cannot burn a support slot.
+        take_mask = mask & (jnp.sum(C * C, axis=0) > 0)
+
+        def body(j, carry):
+            sup_cols, sup_k, cnt = carry
+            slot = jnp.minimum(cnt, self.kmax - 1)
+            take = take_mask[j] & (cnt < self.kmax)
+            sup_cols = write_accepted_column(sup_cols, slot, take, C[:, j])
+            sup_k = sup_k.at[slot].set(sup_k[slot] | take)
+            return sup_cols, sup_k, cnt + take.astype(jnp.int32)
+
+        cnt0 = jnp.sum(ds.sup_k.astype(jnp.int32))
+        sup_cols, sup_k, _ = jax.lax.fori_loop(
+            0, C.shape[1], body, (ds.sup_cols, ds.sup_k, cnt0)
+        )
+        w, eta, _ = self._refit(sup_cols, sup_k, ds.w * ds.sup_k,
+                                self.newton_steps + 2)
+        return ClassificationDistState(sup_cols=sup_cols, sup_k=sup_k, w=w,
+                                       eta=eta)
+
+    def _dist_expand_logits(self, ds: ClassificationDistState, C, mask):
+        """Refit logits for S ∪ R from gathered columns (accept rule and
+        step count of ``dist_add_set``, without committing the state)."""
+        m = C.shape[1]
+        new_mask = mask & (jnp.sum(C * C, axis=0) > 0)
+        cnt0 = jnp.sum(ds.sup_k.astype(jnp.int32))
+        order = jnp.cumsum(new_mask.astype(jnp.int32))
+        take = new_mask & (cnt0 + order <= self.kmax)
+        sup_cols = jnp.concatenate([ds.sup_cols, C * take[None, :]], axis=1)
+        sup_mask = jnp.concatenate([ds.sup_k, take])
+        w0 = jnp.concatenate([ds.w * ds.sup_k, jnp.zeros((m,), jnp.float32)])
+        _, eta, _ = self._refit(sup_cols, sup_mask, w0, self.newton_steps + 2)
+        return eta
+
+    def dist_filter_gains_batch(self, ds: ClassificationDistState, Cs, masks,
+                                X_local):
+        etas = jax.vmap(lambda C, v: self._dist_expand_logits(ds, C, v))(
+            Cs, masks
+        )
+        if self.gain_mode == "quadratic":
+            return jax.vmap(lambda e: self._quadratic_gains(e, X_local))(etas)
+        from repro.kernels.filter_gains.ops import logistic_filter_gains
+
+        return logistic_filter_gains(X_local, self.y, etas,
+                                     steps=self.newton_gain_steps)
 
     # -- exact reference (tests) ------------------------------------------
     def brute_value(self, sel_idx, steps: int = 60):

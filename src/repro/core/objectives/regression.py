@@ -45,6 +45,92 @@ class RegressionState(NamedTuple):
     value: jnp.ndarray      # () f32 — normalized f(S)
 
 
+class RegressionDistState(NamedTuple):
+    """Replicated oracle state for the distributed runtime (no sel_mask —
+    the runner keeps the shard-local selection mask).  ``col_sq`` is the
+    shard-LOCAL column-norm cache feeding the gain kernels."""
+    Q: jnp.ndarray          # (d, kcap) orthonormal basis — replicated
+    count: jnp.ndarray      # () int32 — replicated
+    resid: jnp.ndarray      # (d,) — replicated
+    col_sq: jnp.ndarray     # (n_local,) — shard-local
+
+
+# ---------------------------------------------------------------------------
+# incremental-MGS column primitives — shared by the single-device oracle,
+# the filter engine AND the distributed runtime (one accept rule, one
+# capacity guard; previously hand-mirrored in core/distributed.py)
+# ---------------------------------------------------------------------------
+
+def mgs_extend(Q, count, resid, C, kmax: int, span_tol: float = 1e-6):
+    """Commit the columns of C into the orthonormal basis Q (in place).
+
+    Each column is MGS-orthonormalized (two projection rounds) against
+    the padded basis and appended at slot ``count``.  Rejected columns —
+    zero/padded (nrm0 = 0), numerically in span, or at capacity — leave
+    Q, count and resid untouched; in particular the write into the last
+    slot is guarded so an at-capacity call cannot clobber the basis
+    vector already stored there.  Returns ``(Q, count, resid)``.
+    """
+    m = C.shape[1]
+
+    def body(j, carry):
+        Q, count, resid = carry
+        v = C[:, j]
+        nrm0 = jnp.sqrt(jnp.sum(v * v))
+        v = v - Q @ (Q.T @ v)
+        v = v - Q @ (Q.T @ v)
+        nrm = jnp.sqrt(jnp.sum(v * v))
+        accept = (
+            (nrm0 > 0)
+            & (nrm > span_tol * jnp.maximum(nrm0, 1.0))
+            & (count < kmax)
+        )
+        q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
+        Q = write_accepted_column(Q, jnp.minimum(count, kmax - 1), accept, q)
+        resid = resid - q * jnp.dot(q, resid)
+        return Q, count + accept.astype(jnp.int32), resid
+
+    return jax.lax.fori_loop(0, m, body, (Q, count, resid))
+
+
+def mgs_expand(Q, count, resid, C, kmax: int, span_tol: float = 1e-6):
+    """MGS deltas for S ∪ R without rewriting the shared basis.
+
+    The filter-engine analogue of :func:`mgs_extend`: the same accept
+    rule (projections run against Q *and* the earlier deltas), but
+    accepted columns land in a fresh (d, m) buffer D ⊥ span(Q) so the
+    engine can reuse the replicated Q across every Monte-Carlo sample.
+    Returns ``(D, resid)`` — the per-sample delta basis and residual.
+    """
+    m = C.shape[1]
+
+    def body(j, carry):
+        D, dcount, r = carry
+        v = C[:, j]
+        nrm0 = jnp.sqrt(jnp.sum(v * v))
+        # Two rounds of MGS against the shared basis + earlier deltas.
+        v = v - Q @ (Q.T @ v)
+        v = v - D @ (D.T @ v)
+        v = v - Q @ (Q.T @ v)
+        v = v - D @ (D.T @ v)
+        nrm = jnp.sqrt(jnp.sum(v * v))
+        accept = (
+            (nrm0 > 0)
+            & (nrm > span_tol * jnp.maximum(nrm0, 1.0))
+            & (count + dcount < kmax)
+        )
+        q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
+        D = write_accepted_column(D, jnp.minimum(dcount, m - 1), accept, q)
+        r = r - q * jnp.dot(q, r)
+        return D, dcount + accept.astype(jnp.int32), r
+
+    D0 = jnp.zeros((Q.shape[0], m), jnp.float32)
+    D, _, r = jax.lax.fori_loop(
+        0, m, body, (D0, jnp.zeros((), jnp.int32), resid)
+    )
+    return D, r
+
+
 class RegressionObjective:
     """ℓ_reg feature selection oracle.  X: (d, n) columns, y: (d,)."""
 
@@ -113,25 +199,9 @@ class RegressionObjective:
 
     def add_set(self, state: RegressionState, idx, mask) -> RegressionState:
         C = gather_columns(self.X, idx, mask)                  # (d, m)
-        m = idx.shape[0]
-
-        def body(j, carry):
-            Q, count, resid = carry
-            v = C[:, j]
-            # Two rounds of MGS against the (padded-capacity) basis.
-            v = v - Q @ (Q.T @ v)
-            v = v - Q @ (Q.T @ v)
-            nrm = jnp.sqrt(jnp.sum(v * v))
-            ref = jnp.sqrt(jnp.maximum(self.col_sq[idx[j]], 1e-12))
-            accept = mask[j] & (nrm > self.span_tol * jnp.maximum(ref, 1.0)) & (count < self.kmax)
-            q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
-            Q = write_accepted_column(Q, jnp.minimum(count, self.kmax - 1),
-                                      accept, q)
-            resid = resid - q * jnp.dot(q, resid)
-            count = count + accept.astype(jnp.int32)
-            return Q, count, resid
-
-        Q, count, resid = jax.lax.fori_loop(0, m, body, (state.Q, state.count, state.resid))
+        Q, count, resid = mgs_extend(
+            state.Q, state.count, state.resid, C, self.kmax, self.span_tol
+        )
         sel = state.sel_mask.at[idx].set(state.sel_mask[idx] | mask)
         value = (self.ysq - jnp.sum(resid * resid)) / self.ysq
         return RegressionState(Q=Q, count=count, resid=resid, sel_mask=sel, value=value)
@@ -150,34 +220,9 @@ class RegressionObjective:
         (D, resid) — the delta basis and the updated residual.
         """
         C = gather_columns(self.X, idx, mask)                  # (d, m)
-        m = idx.shape[0]
-        Q = state.Q
-
-        def body(j, carry):
-            D, dcount, resid = carry
-            v = C[:, j]
-            # Two rounds of MGS against the shared basis + earlier deltas.
-            v = v - Q @ (Q.T @ v)
-            v = v - D @ (D.T @ v)
-            v = v - Q @ (Q.T @ v)
-            v = v - D @ (D.T @ v)
-            nrm = jnp.sqrt(jnp.sum(v * v))
-            ref = jnp.sqrt(jnp.maximum(self.col_sq[idx[j]], 1e-12))
-            accept = (
-                mask[j]
-                & (nrm > self.span_tol * jnp.maximum(ref, 1.0))
-                & (state.count + dcount < self.kmax)
-            )
-            q = jnp.where(accept, v / jnp.maximum(nrm, 1e-30), 0.0)
-            D = write_accepted_column(D, jnp.minimum(dcount, m - 1), accept, q)
-            resid = resid - q * jnp.dot(q, resid)
-            return D, dcount + accept.astype(jnp.int32), resid
-
-        D0 = jnp.zeros((self.d, m), jnp.float32)
-        D, _, resid = jax.lax.fori_loop(
-            0, m, body, (D0, jnp.zeros((), jnp.int32), state.resid)
+        return mgs_expand(
+            state.Q, state.count, state.resid, C, self.kmax, self.span_tol
         )
-        return D, resid
 
     def filter_gains_batch(self, state: RegressionState, idx, mask):
         """Gains w.r.t. S ∪ R_i for every sample i in one fused pass.
@@ -200,6 +245,57 @@ class RegressionObjective:
             lambda i, v: state.sel_mask.at[i].set(state.sel_mask[i] | v)
         )(idx, mask)
         return jnp.where(sel, 0.0, g)
+
+    # -- distributed contract (column-based; see DistributedObjective) ----
+    def dist_init(self, X_local) -> RegressionDistState:
+        return RegressionDistState(
+            Q=jnp.zeros((self.d, self.kmax), jnp.float32),
+            count=jnp.zeros((), jnp.int32),
+            resid=self.y,
+            col_sq=jnp.sum(X_local * X_local, axis=0),
+        )
+
+    def dist_value(self, ds: RegressionDistState):
+        return (self.ysq - jnp.sum(ds.resid * ds.resid)) / self.ysq
+
+    def dist_gains(self, ds: RegressionDistState, X_local):
+        # ops wrapper, not the inline ref: resolve_path routes each shard
+        # to compiled Pallas on TPU and the jnp reference elsewhere.
+        from repro.kernels.marginal_gains.ops import regression_gains
+
+        return regression_gains(X_local, ds.Q, ds.resid, ds.col_sq) / self.ysq
+
+    def dist_set_gain(self, ds: RegressionDistState, C, mask):
+        Ct = C - ds.Q @ (ds.Q.T @ C)
+        csq = jnp.sum(C * C, axis=0)
+        G = Ct.T @ Ct
+        # Padded/in-span columns: pin the diagonal so Cholesky stays PD.
+        diag_fix = jnp.where(mask & (csq > 0),
+                             self.jitter * jnp.maximum(csq, 1.0), 1.0)
+        G = G + jnp.diag(diag_fix)
+        b = Ct.T @ ds.resid * mask
+        L = jnp.linalg.cholesky(G)
+        z = jax.scipy.linalg.solve_triangular(L, b, lower=True)
+        return jnp.sum(z * z) / self.ysq
+
+    def dist_add_set(self, ds: RegressionDistState, C, mask, X_local):
+        C = C * mask.astype(C.dtype)[None, :]
+        Q, count, resid = mgs_extend(
+            ds.Q, ds.count, ds.resid, C, self.kmax, self.span_tol
+        )
+        return RegressionDistState(Q=Q, count=count, resid=resid,
+                                   col_sq=ds.col_sq)
+
+    def dist_filter_gains_batch(self, ds: RegressionDistState, Cs, masks,
+                                X_local):
+        Cs = Cs * masks.astype(Cs.dtype)[:, None, :]
+        D, R = jax.vmap(
+            lambda C: mgs_expand(ds.Q, ds.count, ds.resid, C, self.kmax,
+                                 self.span_tol)
+        )(Cs)
+        from repro.kernels.filter_gains.ops import filter_gains
+
+        return filter_gains(X_local, ds.Q, D, R, ds.col_sq) / self.ysq
 
     # -- exact reference (tests) ------------------------------------------
     def brute_value(self, sel_idx) -> jnp.ndarray:

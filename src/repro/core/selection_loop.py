@@ -1,0 +1,178 @@
+"""The DASH round/filter control flow, shared by every runtime.
+
+Paper Algorithm 1 (Thm 10) has one control structure — r outer rounds,
+each running the threshold filter until the sampled-set gain clears
+α²·t/r, then committing a uniformly sampled block — and it is the SAME
+structure whether the oracle sweep runs on one device (``core.dash``) or
+sharded over a mesh (``core.distributed``).  This module owns that
+structure once: the runtimes supply a :class:`SelectionHooks` bundle
+(how to estimate the two Monte-Carlo statistics, how to sample-and-commit
+a block, how to count survivors) and :func:`run_selection_rounds` drives
+the rounds, the Lemma-21-capped inner while loop, and the trace
+bookkeeping.
+
+Everything here is pure ``lax`` control flow: the loop jit/vmaps for the
+OPT-guess lattice and runs unchanged inside ``shard_map`` (the hooks are
+where collectives live — e.g. the distributed runtime's ``count_alive``
+is a ``psum``, its estimators ``pmean`` over the data axis).
+
+Per round (t = (1−ε)(OPT − f(S)), block b = ⌈k/r⌉):
+
+    est ← Ê_{R~U(X)}[f_S(R)]
+    while est < α²·t/r and iterations < ⌈log_{1+ε/2} n⌉ and |X| > 0:
+        X ← X \\ { a : Ê_R[f_{S∪R}(a)] < α(1+ε/2)·t/k }       (filter)
+        est ← Ê_{R~U(X)}[f_S(R)]
+    S ← S ∪ R,  R ~ U(X)                                      (commit)
+
+The iteration cap keeps the compiled while loop total even for
+non-differentially-submodular inputs (paper App. A.2's failure mode).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+
+class DashTrace(NamedTuple):
+    values: jnp.ndarray        # (r,) f(S) after each round
+    alive: jnp.ndarray         # (r,) surviving |X| after each round
+    filter_iters: jnp.ndarray  # (r,) inner-loop iterations used
+    est_set_gain: jnp.ndarray  # (r,) final Ê[f_S(R)] per round
+
+
+@dataclass(frozen=True)
+class DashConfig:
+    k: int                     # cardinality constraint
+    r: int = 0                 # outer rounds (0 → ⌈log2 n⌉, clipped to k)
+    eps: float = 0.2
+    alpha: float = 0.5         # differential-submodularity parameter guess
+    n_samples: int = 8         # Monte-Carlo sets per estimate (paper used 5)
+    trim_frac: float = 0.0     # straggler/outlier trimming per side
+    max_filter_iters: int = 0  # 0 → ⌈log_{1+ε/2} n⌉ (Lemma 21 cap)
+
+    def resolve(self, n: int) -> "DashConfig":
+        r = self.r or max(1, min(self.k, int(math.ceil(math.log2(max(n, 2))))))
+        cap = self.max_filter_iters or (
+            int(math.ceil(math.log(max(n, 2)) / math.log1p(self.eps / 2.0))) + 1
+        )
+        return DashConfig(
+            k=self.k, r=r, eps=self.eps, alpha=self.alpha,
+            n_samples=self.n_samples, trim_frac=self.trim_frac,
+            max_filter_iters=cap,
+        )
+
+    @property
+    def block(self) -> int:
+        """⌈k/r⌉ — elements committed per outer round (resolved cfg only)."""
+        return max(1, -(-self.k // max(self.r, 1)))
+
+
+def _count_alive_local(alive) -> Array:
+    return jnp.sum(alive.astype(jnp.int32))
+
+
+@dataclass(frozen=True)
+class SelectionHooks:
+    """Oracle bundle binding the shared loop to a runtime.
+
+    ``state`` is opaque to the loop — any pytree the hooks agree on (the
+    single-device runtime passes the objective's state; the distributed
+    runtime passes ``(replicated oracle state, shard-local sel mask)``).
+    ``alive`` is the (possibly shard-local) bool survivor mask the loop
+    threads through the filter.
+
+    Hooks and their contracts:
+      value(state) -> f(S)                                (replicated)
+      sel_mask(state) -> bool mask aligned with ``alive``
+      estimate_set_gain(state, alive, allowed, key) -> Ê_{R~U(X)}[f_S(R)]
+      estimate_elem_gains(state, alive, allowed, key)
+          -> per-candidate Ê_R[f_{S∪R}(a)], aligned with ``alive``
+      pick_and_add(state, alive, allowed, key) -> (state, #added)
+      count_alive(alive) -> GLOBAL survivor count (distributed: psum)
+
+    ``allowed`` is the remaining capacity k − |S| (clamps sample slots so
+    a round at the capacity edge cannot overfill the solution).
+    """
+
+    value: Callable[[Any], Array]
+    sel_mask: Callable[[Any], Array]
+    estimate_set_gain: Callable[[Any, Array, Array, Array], Array]
+    estimate_elem_gains: Callable[[Any, Array, Array, Array], Array]
+    pick_and_add: Callable[[Any, Array, Array, Array], tuple]
+    count_alive: Callable[[Array], Array] = _count_alive_local
+
+
+def run_selection_rounds(
+    hooks: SelectionHooks,
+    cfg: DashConfig,
+    opt: Array,
+    key: Array,
+    state0: Any,
+    alive0: Array,
+):
+    """Drive the r DASH rounds.  ``cfg`` must already be ``resolve``-d.
+
+    Returns ``(state, alive, count, key, trace)`` — the final oracle
+    state, survivor mask, global |S|, threaded PRNG key and the
+    per-round :class:`DashTrace`.
+    """
+    k, r = cfg.k, cfg.r
+    alpha2 = cfg.alpha * cfg.alpha
+    opt = jnp.asarray(opt, jnp.float32)
+    trace0 = DashTrace(
+        values=jnp.zeros((r,)), alive=jnp.zeros((r,), jnp.int32),
+        filter_iters=jnp.zeros((r,), jnp.int32), est_set_gain=jnp.zeros((r,)),
+    )
+
+    def round_body(rho, carry):
+        state, alive, count, key, trace = carry
+        key, k_est, k_pick = jax.random.split(key, 3)
+        value = hooks.value(state)
+        t = jnp.maximum((1.0 - cfg.eps) * (opt - value), 0.0)
+        thr_set = alpha2 * t / r
+        thr_elem = cfg.alpha * (1.0 + cfg.eps / 2.0) * t / k
+        allowed = jnp.maximum(k - count, 0)
+
+        est0 = hooks.estimate_set_gain(state, alive, allowed, k_est)
+
+        def cond(w):
+            alive_w, key_w, est_w, it = w
+            return (
+                (est_w < thr_set)
+                & (it < cfg.max_filter_iters)
+                & (hooks.count_alive(alive_w) > 0)
+            )
+
+        def body(w):
+            alive_w, key_w, est_w, it = w
+            key_w, k_f, k_e = jax.random.split(key_w, 3)
+            eg = hooks.estimate_elem_gains(state, alive_w, allowed, k_f)
+            alive_w = alive_w & (eg >= thr_elem) & ~hooks.sel_mask(state)
+            est_w = hooks.estimate_set_gain(state, alive_w, allowed, k_e)
+            return alive_w, key_w, est_w, it + 1
+
+        alive, key, est, iters = jax.lax.while_loop(
+            cond, body, (alive, key, est0, jnp.zeros((), jnp.int32))
+        )
+
+        state, added = hooks.pick_and_add(state, alive, allowed, k_pick)
+        alive = alive & ~hooks.sel_mask(state)
+        trace = DashTrace(
+            values=trace.values.at[rho].set(hooks.value(state)),
+            alive=trace.alive.at[rho].set(hooks.count_alive(alive)),
+            filter_iters=trace.filter_iters.at[rho].set(iters),
+            est_set_gain=trace.est_set_gain.at[rho].set(est),
+        )
+        return state, alive, count + added, key, trace
+
+    return jax.lax.fori_loop(
+        0, r, round_body,
+        (state0, alive0, jnp.zeros((), jnp.int32), key, trace0),
+    )

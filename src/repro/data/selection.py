@@ -7,9 +7,11 @@ batch that maximally reduces posterior variance over a linear probe of
 the embedding space is exactly Bayesian A-optimal design (paper Cor. 9),
 so we run DASH on ``AOptimalityObjective`` over the pool.
 
-On a mesh, the candidate pool is sharded over the model axis via
-``dash_distributed_regression``'s machinery; here we expose the
-single-controller API used by the training loop and examples.
+On a mesh, the candidate pool is sharded over the model axis via the
+generic ``core.distributed.dash_distributed`` runtime (the
+``AOptimalityObjective`` implements the ``DistributedObjective``
+contract); here we expose the single-controller API used by the
+training loop and examples.
 """
 
 from __future__ import annotations

@@ -1,0 +1,153 @@
+"""Generic distributed DASH runtime — 8-virtual-device parity suite.
+
+These tests run IN-PROCESS against whatever devices the host exposes, so
+they need the forced-device-count environment:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        pytest tests/test_distributed_runtime.py
+
+(the dedicated CI distributed job sets exactly that).  Under the plain
+tier-1 invocation (1 visible device) the module skips itself; the slow
+subprocess test ``test_generic_runner_all_objectives_parity`` in
+tests/test_distributed.py keeps tier-1 coverage of the same paths.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+if len(jax.devices()) < 8:  # pragma: no cover - environment guard
+    pytest.skip(
+        "needs 8 host devices "
+        "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+        allow_module_level=True,
+    )
+
+import jax.numpy as jnp
+
+from repro.core import (
+    AOptimalityObjective,
+    ClassificationObjective,
+    DashConfig,
+    RegressionObjective,
+    dash,
+    greedy,
+    normalize_columns,
+)
+from repro.core.distributed import dash_distributed, pad_ground_set
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((2, 4), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def reg_setup():
+    rng = np.random.default_rng(0)
+    d, n, k = 96, 64, 8
+    X0 = rng.normal(size=(d, n)) + 0.4 * rng.normal(size=(d, 1))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32))
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, k)
+    y = jnp.asarray(X0 @ w + 0.1 * rng.normal(size=d), jnp.float32)
+    obj = RegressionObjective(X, y, kmax=k)
+    g = greedy(obj, k)
+    cfg = DashConfig(k=k, eps=0.25, alpha=0.6, n_samples=4)
+    return obj, cfg, float(g.value)
+
+
+def _parity_case(obj, cfg, greedy_value, mesh, floor):
+    """Shared assertions: determinism, capacity, quality vs single-device
+    dash, and engine vs per-sample filter-path agreement."""
+    opt = greedy_value * 1.05
+    key = jax.random.PRNGKey(0)
+    r_en = dash_distributed(obj, cfg, key, opt, mesh)
+    r_en2 = dash_distributed(obj, cfg, key, opt, mesh)
+    r_ps = dash_distributed(obj, cfg, key, opt, mesh,
+                            use_filter_engine=False)
+    single = dash(obj, cfg, key, opt)
+
+    assert float(r_en.value) == float(r_en2.value)          # deterministic
+    assert bool(jnp.all(r_en.sel_mask == r_en2.sel_mask))
+    assert int(r_en.sel_count) <= cfg.k
+    assert int(jnp.sum(r_en.sel_mask)) == int(r_en.sel_count)
+    # both runtimes clear the same quality floor vs the greedy reference
+    assert float(r_en.value) >= floor * greedy_value
+    assert float(single.value) >= floor * greedy_value
+    # engine and per-sample paths differ only in f32 summation order
+    assert abs(float(r_en.value) - float(r_ps.value)) <= (
+        1e-3 * max(abs(greedy_value), 1.0)
+    )
+    return r_en
+
+
+def test_regression_parity(reg_setup, mesh):
+    obj, cfg, g = reg_setup
+    res = _parity_case(obj, cfg, g, mesh, floor=0.35)
+    # the trace is the shared selection loop's: monotone values, round
+    # budget respected
+    vals = np.asarray(res.trace.values)
+    assert np.all(np.diff(vals) >= -1e-5)
+    assert int(res.rounds) <= cfg.resolve(obj.n).r * (
+        cfg.resolve(obj.n).max_filter_iters + 1
+    )
+
+
+def test_aopt_parity(mesh):
+    rng = np.random.default_rng(2)
+    d, n, k = 24, 48, 8
+    X = rng.normal(size=(d, n))
+    X = jnp.asarray(X / np.linalg.norm(X, axis=0, keepdims=True), jnp.float32)
+    obj = AOptimalityObjective(X, kmax=k, beta2=1.0, sigma2=1.0)
+    g = greedy(obj, k)
+    cfg = DashConfig(k=k, eps=0.25, alpha=0.5, n_samples=4)
+    _parity_case(obj, cfg, float(g.value), mesh, floor=0.6)
+
+
+def test_logistic_parity(mesh):
+    # Seed 3 is the characterized problem where single-guess dash is
+    # healthy on BOTH runtimes (~0.69x greedy each); other seeds make
+    # the single-device run collapse to as little as 0.01x greedy (one
+    # OPT guess, aggressive filter), which would test guess luck, not
+    # runtime parity.
+    rng = np.random.default_rng(3)
+    d, n, k = 120, 32, 6
+    X0 = rng.normal(size=(d, n))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32)) * np.sqrt(d)
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, k)
+    y = jnp.asarray((1 / (1 + np.exp(-X0 @ w)) > 0.5).astype(np.float32))
+    obj = ClassificationObjective(X, y, kmax=k, newton_steps=4,
+                                  newton_gain_steps=2)
+    g = greedy(obj, k)
+    cfg = DashConfig(k=k, eps=0.3, alpha=0.4, n_samples=3)
+    _parity_case(obj, cfg, float(g.value), mesh, floor=0.4)
+
+
+def test_capacity_edge_fills_to_k_and_stops(reg_setup, mesh):
+    """opt = 0 ⇒ thresholds are 0 ⇒ no filtering: every round commits a
+    full block until capacity.  |S| must land exactly on k — the
+    ``allowed`` clamp has to stop the final round from overfilling."""
+    obj, cfg, _ = reg_setup
+    res = dash_distributed(obj, cfg, jax.random.PRNGKey(3), 0.0, mesh)
+    assert int(res.sel_count) == cfg.k
+    assert int(jnp.sum(res.sel_mask)) == cfg.k
+
+
+def test_padded_ground_set_and_model_only_mesh(reg_setup):
+    """pad_ground_set zero-columns are never selected, and the runner
+    works without a data axis (pure model-parallel mesh)."""
+    obj, cfg, g = reg_setup
+    Xp, n_real = pad_ground_set(obj.X, 40)          # 64 → 80 columns
+    obj_p = RegressionObjective(Xp, obj.y, kmax=cfg.k)
+    mesh8 = make_mesh((8,), ("model",))
+    res = dash_distributed(obj_p, cfg, jax.random.PRNGKey(0), g * 1.05,
+                           mesh8, data_axis=None)
+    assert int(res.sel_count) <= cfg.k
+    assert not bool(jnp.any(res.sel_mask[n_real:]))  # padding never picked
+    # Mechanics test, not a quality test (that's the parity cases, which
+    # have data-axis replicas): just require real progress.
+    assert int(res.sel_count) >= 1
+    assert float(res.value) > 0.0

@@ -182,3 +182,119 @@ class TestDiversity:
         m0 = jnp.zeros(10, bool)
         m1 = m0.at[0].set(True)
         assert float(div.gains(m1)[1]) < float(div.gains(m0)[1])
+
+
+class TestDistributedContract:
+    """The column-based DistributedObjective methods must agree with the
+    index-based single-device oracles when the whole ground set is one
+    shard (X_local = X) — the sharded runner then only changes WHERE the
+    math runs, not what it computes."""
+
+    def _sets(self, n, m=4, seed=0):
+        import numpy as np
+
+        rng = np.random.default_rng(seed)
+        idx = jnp.asarray(rng.choice(n, size=m, replace=False), jnp.int32)
+        mask = jnp.asarray([True, True, True, False])
+        return idx, mask
+
+    def test_regression_dist_matches_index_oracles(self, reg_obj):
+        import numpy as np
+
+        from repro.core.objectives.base import gather_columns
+
+        obj, k = reg_obj
+        idx, mask = self._sets(obj.n)
+        C = gather_columns(obj.X, idx, mask)
+
+        st = obj.init()
+        ds = obj.dist_init(obj.X)
+        np.testing.assert_allclose(
+            float(obj.dist_set_gain(ds, C, mask)),
+            float(obj.set_gain(st, idx, mask)), rtol=1e-5, atol=1e-6)
+
+        st2 = obj.add_set(st, idx, mask)
+        ds2 = obj.dist_add_set(ds, C, mask, obj.X)
+        np.testing.assert_allclose(float(obj.dist_value(ds2)),
+                                   float(st2.value), rtol=1e-5, atol=1e-6)
+        g_idx = np.asarray(obj.gains(st2))
+        g_col = np.asarray(obj.dist_gains(ds2, obj.X))
+        sel = np.asarray(st2.sel_mask)
+        np.testing.assert_allclose(g_col[~sel], g_idx[~sel],
+                                   rtol=1e-4, atol=1e-5)
+
+        # filter-engine sweep: stacked samples, gains at S ∪ R_i
+        idx2, mask2 = self._sets(obj.n, seed=1)
+        Cs = jnp.stack([C, gather_columns(obj.X, idx2, mask2)])
+        masks = jnp.stack([mask, mask2])
+        gb = np.asarray(obj.dist_filter_gains_batch(ds, Cs, masks, obj.X))
+        ref = np.asarray(obj.filter_gains_batch(
+            st, jnp.stack([idx, idx2]), masks))
+        for i, (ii, mm) in enumerate(((idx, mask), (idx2, mask2))):
+            outside = ~np.asarray(
+                st.sel_mask.at[ii].set(st.sel_mask[ii] | mm))
+            np.testing.assert_allclose(gb[i][outside], ref[i][outside],
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_aopt_dist_matches_index_oracles(self, aopt_obj):
+        import numpy as np
+
+        from repro.core.objectives.base import gather_columns
+
+        obj, k = aopt_obj
+        idx, mask = self._sets(obj.n, seed=2)
+        C = gather_columns(obj.X, idx, mask)
+
+        st = obj.init()
+        ds = obj.dist_init(obj.X)
+        np.testing.assert_allclose(
+            float(obj.dist_set_gain(ds, C, mask)),
+            float(obj.set_gain(st, idx, mask)), rtol=1e-5, atol=1e-6)
+
+        st2 = obj.add_set(st, idx, mask)
+        ds2 = obj.dist_add_set(ds, C, mask, obj.X)
+        np.testing.assert_allclose(float(obj.dist_value(ds2)),
+                                   float(st2.value), rtol=1e-5, atol=1e-6)
+        g_idx = np.asarray(obj.gains(st2))
+        g_col = np.asarray(obj.dist_gains(ds2, obj.X))
+        sel = np.asarray(st2.sel_mask)
+        np.testing.assert_allclose(g_col[~sel], g_idx[~sel],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_logistic_dist_matches_index_oracles(self, cls_obj):
+        import numpy as np
+
+        from repro.core.objectives.base import gather_columns
+
+        obj, k = cls_obj
+        idx, mask = self._sets(obj.n, seed=3)
+        C = gather_columns(obj.X, idx, mask)
+
+        st = obj.init()
+        ds = obj.dist_init(obj.X)
+        np.testing.assert_allclose(
+            float(obj.dist_set_gain(ds, C, mask)),
+            float(obj.set_gain(st, idx, mask)), rtol=1e-4, atol=1e-5)
+
+        st2 = obj.add_set(st, idx, mask)
+        ds2 = obj.dist_add_set(ds, C, mask, obj.X)
+        np.testing.assert_allclose(float(obj.dist_value(ds2)),
+                                   float(st2.value), rtol=1e-4, atol=1e-5)
+        g_idx = np.asarray(obj.gains(st2))
+        g_col = np.asarray(obj.dist_gains(ds2, obj.X))
+        sel = np.asarray(st2.sel_mask)
+        np.testing.assert_allclose(g_col[~sel], g_idx[~sel],
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_dist_add_rejects_zero_columns(self, cls_obj):
+        """Padding columns (all zeros) must not burn support slots or
+        count as basis vectors in any objective's dist_add_set."""
+        import numpy as np
+
+        obj, k = cls_obj
+        ds = obj.dist_init(obj.X)
+        C = jnp.zeros((obj.d, 3), jnp.float32)
+        ds2 = obj.dist_add_set(ds, C, jnp.ones((3,), bool), obj.X)
+        assert int(jnp.sum(ds2.sup_k.astype(jnp.int32))) == 0
+        np.testing.assert_array_equal(np.asarray(ds2.eta),
+                                      np.asarray(ds.eta))
