@@ -108,6 +108,85 @@ def bench_logistic_filter_engine(m: int = 8, d: int = 512, n: int = 2048,
         kcap // 2, m, block, f"m={m};d={d};n={n};kcap={kcap}")
 
 
+def bench_guess_axis_engine(G: int = 8, m: int = 8, d: int = 512,
+                            n: int = 2048, kcap: int = 32, b: int = 8):
+    """Folded guess axis: one G·m lattice launch vs G separate m-sample
+    launches through the SAME entry points, per epilogue.
+
+    On CPU both sides run the jnp reference, so the row tracks the
+    batching/dispatch win of folding (one einsum set over G·m states vs
+    G dispatches); on TPU the same entry points compare one fused launch
+    streaming X from HBM once against G launches streaming it G times.
+    """
+    from repro.kernels.filter_gains.ops import (
+        aopt_filter_gains,
+        filter_gains,
+        logistic_filter_gains,
+    )
+
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    csq = jnp.sum(X * X, axis=0)
+
+    # regression: per-guess shared bases + deltas/residuals
+    Qs = []
+    for _ in range(G):
+        Qg, _ = np.linalg.qr(RNG.normal(size=(d, kcap)))
+        Qs.append(Qg)
+    Q = jnp.asarray(np.stack(Qs), jnp.float32)
+    D = jnp.asarray(RNG.normal(size=(G, m, d, b)) * 0.2, jnp.float32)
+    R = jnp.asarray(RNG.normal(size=(G, m, d)), jnp.float32)
+    fold = jax.jit(lambda Q, D, R: filter_gains(X, Q, D, R, csq))
+    per = jax.jit(lambda Q, D, R: filter_gains(X, Q, D, R, csq))
+
+    def sweep(Q, D, R):
+        return jnp.stack([per(Q[g], D[g], R[g]) for g in range(G)])
+
+    t_f, _ = wall_time(lambda: jax.block_until_ready(fold(Q, D, R)))
+    t_p, _ = wall_time(lambda: jax.block_until_ready(sweep(Q, D, R)))
+    derived = f"G={G};m={m};d={d};n={n};kcap={kcap}"
+    emit("kernel/guess_axis_filter_folded", t_f * 1e6, derived)
+    emit("kernel/guess_axis_filter_per_guess", t_p * 1e6, derived)
+    emit("kernel/guess_axis_filter_speedup", 0.0,
+         f"folded_over_per_guess={t_p / t_f:.2f}x")
+
+    # A-optimality: per-guess shared solves + Woodbury factors
+    W = jnp.asarray(RNG.normal(size=(G, d, n)), jnp.float32)
+    E = jnp.asarray(RNG.normal(size=(G, m, d, b)) * 0.3, jnp.float32)
+    F = jnp.einsum("gmdb,gmdc->gmbc", E, E)
+    fold_a = jax.jit(lambda W, E, F: aopt_filter_gains(X, W, E, F, 1.0))
+    per_a = jax.jit(lambda W, E, F: aopt_filter_gains(X, W, E, F, 1.0))
+
+    def sweep_a(W, E, F):
+        return jnp.stack([per_a(W[g], E[g], F[g]) for g in range(G)])
+
+    t_f, _ = wall_time(lambda: jax.block_until_ready(fold_a(W, E, F)))
+    t_p, _ = wall_time(lambda: jax.block_until_ready(sweep_a(W, E, F)))
+    emit("kernel/guess_axis_aopt_folded", t_f * 1e6,
+         f"G={G};m={m};d={d};n={n}")
+    emit("kernel/guess_axis_aopt_per_guess", t_p * 1e6,
+         f"G={G};m={m};d={d};n={n}")
+    emit("kernel/guess_axis_aopt_speedup", 0.0,
+         f"folded_over_per_guess={t_p / t_f:.2f}x")
+
+    # logistic: per-guess refit logits (folded to G·m samples)
+    y = jnp.asarray((RNG.uniform(size=d) > 0.5).astype(np.float32))
+    etas = jnp.asarray(RNG.normal(size=(G, m, d)) * 0.4, jnp.float32)
+    fold_l = jax.jit(lambda e: logistic_filter_gains(X, y, e, steps=3))
+    per_l = jax.jit(lambda e: logistic_filter_gains(X, y, e, steps=3))
+
+    def sweep_l(etas):
+        return jnp.stack([per_l(etas[g]) for g in range(G)])
+
+    t_f, _ = wall_time(lambda: jax.block_until_ready(fold_l(etas)))
+    t_p, _ = wall_time(lambda: jax.block_until_ready(sweep_l(etas)))
+    emit("kernel/guess_axis_logistic_folded", t_f * 1e6,
+         f"G={G};m={m};d={d};n={n}")
+    emit("kernel/guess_axis_logistic_per_guess", t_p * 1e6,
+         f"G={G};m={m};d={d};n={n}")
+    emit("kernel/guess_axis_logistic_speedup", 0.0,
+         f"folded_over_per_guess={t_p / t_f:.2f}x")
+
+
 def run():
     # marginal gains — the DASH per-round oracle
     d, n, k = 512, 2048, 64
@@ -139,6 +218,9 @@ def run():
     bench_filter_engine()
     bench_aopt_filter_engine()
     bench_logistic_filter_engine()
+
+    # folded guess axis — the whole (OPT, α) lattice in one launch
+    bench_guess_axis_engine()
 
     # flash attention
     b, s, h, hkv, dh = 1, 1024, 8, 2, 64

@@ -190,6 +190,174 @@ def distributed_vs_single(name, make_obj, X, k, *, alpha=0.6, eps=0.25,
     return r_s, r_d
 
 
+def lattice_ab(name, obj, k, *, eps, alpha, n_samples, n_guesses=8):
+    """Loop-mode vs batched single-jit (OPT, α) lattice wall-clock.
+
+    Same key, same guesses, same selection loop — the modes are
+    bitwise-identical per guess (tests assert it); only the execution
+    strategy differs: ``loop`` dispatches one jitted run per guess,
+    ``batched`` advances every guess in lockstep under one compilation
+    with a device-side argmax.  On CPU the batched win is dispatch
+    amortization, so the default sizes are small (the DASH regime where
+    per-op overhead dominates); at large per-guess problem sizes the
+    lockstep vmap pays for the heaviest guess's filter iterations in
+    every lane and loop mode can win on CPU — on TPU the batched mode
+    additionally folds all guesses into ONE filter-engine launch
+    streaming X once.  Compilation is excluded (warmup=1; dash_auto
+    caches its jitted runners).
+    """
+    out = {}
+    for mode in ("batched", "loop"):
+        t, res = wall_time(
+            lambda m=mode: jax.block_until_ready(
+                dash_auto(obj, k, KEY, eps=eps, alpha=alpha,
+                          n_samples=n_samples, n_guesses=n_guesses,
+                          guess_mode=m).value
+            ),
+            warmup=1, iters=5)
+        out[mode] = (t, float(res))
+        emit(f"lattice/{name}/G={n_guesses}/{mode}", t * 1e6,
+             f"value={float(res):.4f}")
+    speed = out["loop"][0] / max(out["batched"][0], 1e-12)
+    assert abs(out["loop"][1] - out["batched"][1]) < 1e-6
+    emit(f"lattice/{name}/G={n_guesses}/speedup", 0.0,
+         f"batched_over_loop={speed:.2f}x")
+    return speed
+
+
+def lattice_pod_ab(name, make_obj, X, k, *, eps, alpha, n_samples,
+                   n_guesses=8):
+    """Pod-sharded lattice A/B + strict parity vs the per-guess sweep.
+
+    Parity leg (n_guesses = pod size, one guess per pod slice): the
+    single shard_map launch must return the IDENTICAL best solution as
+    running ``dash_distributed`` once per guess on an equally-shaped
+    (data, model) submesh — bitwise, not approximately.  Timing leg
+    (``n_guesses`` joint guesses): one pod-lattice launch vs the
+    sequential per-guess sweep.  Skips (with a recorded row) when the
+    host exposes fewer than 8 devices.
+    """
+    from repro.core.dash import lattice_grid, opt_guess_lattice
+    from repro.core.distributed import (
+        dash_auto_distributed,
+        dash_distributed,
+        pad_ground_set,
+    )
+    from repro.launch.mesh import make_lattice_mesh, make_mesh
+
+    if len(jax.devices()) < 8:
+        emit(f"lattice_pod/{name}/skipped", 0.0,
+             f"needs 8 devices, have {len(jax.devices())}")
+        return None
+    mesh3 = make_lattice_mesh(2)                      # (2, 2, 2) pod mesh
+    pod = mesh3.shape["pod"]
+    Xp, _ = pad_ground_set(jnp.asarray(X, jnp.float32),
+                           mesh3.shape["model"])
+    obj = make_obj(Xp)
+    # The per-guess reference must run on a submesh shaped exactly like
+    # ONE pod slice — derive it from mesh3 (hosts with >8 devices get a
+    # bigger data axis) so the bitwise-parity claim stays valid.
+    nd, nm = mesh3.shape["data"], mesh3.shape["model"]
+    sub = make_mesh((nd, nm), ("data", "model"),
+                    devices=jax.devices()[: nd * nm])
+    cfg = DashConfig(k=k, eps=eps, alpha=alpha, n_samples=n_samples)
+
+    # --- strict parity: one guess per pod slice, bitwise comparison ----
+    res = dash_auto_distributed(obj, k, KEY, mesh3, eps=eps, alpha=alpha,
+                                n_samples=n_samples, n_guesses=pod)
+    opts, _ = lattice_grid(opt_guess_lattice(obj, eps, pod, k), [alpha])
+    keys = jax.random.split(KEY, pod)
+    sweep = [dash_distributed(obj, cfg, keys[i], opts[i], sub)
+             for i in range(pod)]
+    vals = [float(r.value) for r in sweep]
+    best = int(np.argmax(vals))
+    identical = (
+        float(res.value) == vals[best]
+        and bool(np.array_equal(np.asarray(res.sel_mask),
+                                np.asarray(sweep[best].sel_mask)))
+        and [float(v) for v in np.asarray(res.lattice_values)] == vals
+    )
+    emit(f"lattice_pod/{name}/parity", 0.0,
+         f"identical_best={identical};best_value={float(res.value):.4f};"
+         f"n_guesses={pod}")
+
+    # --- timing: the full lattice in one launch vs the sequential sweep
+    t_pod, _ = wall_time(
+        lambda: jax.block_until_ready(
+            dash_auto_distributed(obj, k, KEY, mesh3, eps=eps, alpha=alpha,
+                                  n_samples=n_samples,
+                                  n_guesses=n_guesses).value),
+        warmup=1, iters=1)
+    opts_n, _ = lattice_grid(opt_guess_lattice(obj, eps, n_guesses, k),
+                             [alpha])
+    keys_n = jax.random.split(KEY, n_guesses)
+
+    def sweep_all():
+        vs = [dash_distributed(obj, cfg, keys_n[i], opts_n[i], sub).value
+              for i in range(n_guesses)]
+        return jax.block_until_ready(jnp.stack(vs))
+
+    t_sweep, _ = wall_time(sweep_all, warmup=1, iters=1)
+    emit(f"lattice_pod/{name}/G={n_guesses}/pod_lattice", t_pod * 1e6,
+         f"mesh=2x2x2")
+    emit(f"lattice_pod/{name}/G={n_guesses}/per_guess_sweep",
+         t_sweep * 1e6, "mesh=2x2(submesh)")
+    emit(f"lattice_pod/{name}/G={n_guesses}/speedup", 0.0,
+         f"pod_over_sweep={t_sweep / max(t_pod, 1e-12):.2f}x")
+    return identical
+
+
+def run_lattice(full: bool = False):
+    """--suite lattice: loop vs batched vs pod-sharded (OPT, α) lattice
+    A/B for all three objectives.
+
+    Default sizes sit in the dispatch-bound regime where the batched
+    single-jit lattice wins ≥2× on CPU (the acceptance target);
+    ``--full`` doubles them, honestly recording the CPU crossover where
+    the lockstep vmap starts paying for the heaviest guess in every lane
+    (TPU numbers are the roadmap item — there the folded engine launch
+    changes the large-size story).
+    """
+    scale = 2 if full else 1
+    rng = np.random.default_rng(0)
+
+    d, n, k = 32 * scale, 24 * scale, 4 * scale
+    X0 = rng.normal(size=(d, n)) + 0.4 * rng.normal(size=(d, 1))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32))
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, k)
+    y = jnp.asarray(X0 @ w + 0.1 * rng.normal(size=d), jnp.float32)
+    obj = RegressionObjective(X, y, kmax=k)
+    lattice_ab("regression", obj, k, eps=0.25, alpha=0.6, n_samples=4)
+    lattice_pod_ab("regression",
+                   lambda Xp: RegressionObjective(Xp, y, kmax=k), X, k,
+                   eps=0.25, alpha=0.6, n_samples=4)
+
+    da, na, ka = 24 * scale, 48 * scale, 6 * scale
+    Xa = rng.normal(size=(da, na))
+    Xa = jnp.asarray(Xa / np.linalg.norm(Xa, axis=0, keepdims=True),
+                     jnp.float32)
+    obja = AOptimalityObjective(Xa, kmax=ka)
+    lattice_ab("aopt", obja, ka, eps=0.25, alpha=0.5, n_samples=4)
+    lattice_pod_ab("aopt", lambda Xp: AOptimalityObjective(Xp, kmax=ka),
+                   Xa, ka, eps=0.25, alpha=0.5, n_samples=4)
+
+    dc, nc, kc = 32 * scale, 20 * scale, 3 * scale
+    Xc0 = rng.normal(size=(dc, nc))
+    Xc = normalize_columns(jnp.asarray(Xc0, jnp.float32)) * np.sqrt(dc)
+    wc = np.zeros(nc)
+    wc[:kc] = rng.uniform(-2, 2, kc)
+    yc = jnp.asarray((1 / (1 + np.exp(-Xc0 @ wc)) > 0.5).astype(np.float32))
+    objc = ClassificationObjective(Xc, yc, kmax=kc, newton_steps=2,
+                                   newton_gain_steps=1)
+    lattice_ab("logistic", objc, kc, eps=0.3, alpha=0.4, n_samples=3)
+    lattice_pod_ab(
+        "logistic",
+        lambda Xp: ClassificationObjective(Xp, yc, kmax=kc, newton_steps=2,
+                                           newton_gain_steps=1),
+        Xc, kc, eps=0.3, alpha=0.4, n_samples=3)
+
+
 def run_distributed(full: bool = False):
     """Distributed-vs-single benches for ALL THREE paper objectives."""
     scale = 1 if full else 2
@@ -289,16 +457,27 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale problem sizes")
     ap.add_argument(
-        "--suite", choices=("paper", "distributed", "all"), default="all",
-        help="'paper' = Fig 2/3/4 analogues; 'distributed' = "
-             "dash_distributed vs dash for all three objectives (fast — "
-             "what CI runs with 8 forced host devices)",
+        "--suite", default="all",
+        help="comma-separated subset of {paper, distributed, lattice} or "
+             "'all'.  'paper' = Fig 2/3/4 analogues; 'distributed' = "
+             "dash_distributed vs dash for all three objectives; "
+             "'lattice' = loop vs batched vs pod-sharded (OPT, α) guess "
+             "lattice (the distributed CI job runs "
+             "'distributed,lattice' with 8 forced host devices)",
     )
     args = ap.parse_args()
-    if args.suite in ("paper", "all"):
+    known = {"paper", "distributed", "lattice"}
+    suites = (known if args.suite == "all"
+              else {s.strip() for s in args.suite.split(",")})
+    unknown = suites - known
+    if unknown:
+        ap.error(f"unknown suite(s): {sorted(unknown)}")
+    if "paper" in suites:
         run(full=args.full)
-    if args.suite in ("distributed", "all"):
+    if "distributed" in suites:
         run_distributed(full=args.full)
+    if "lattice" in suites:
+        run_lattice(full=args.full)
     if args.json:
         payload = {"suite": f"bench_selection/{args.suite}",
                    "backend": jax.default_backend(),

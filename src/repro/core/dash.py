@@ -23,9 +23,12 @@ the objective opts in via its ``use_filter_engine`` flag.
 Differences from the idealized listing (all from the paper's App. G):
   * expectations are Monte-Carlo estimates over ``n_samples`` sets
     (straggler-robust trimmed mean optional),
-  * OPT and α are guessed — ``dash_auto`` runs a (1+ε)^i lattice of OPT
-    guesses (in parallel via vmap, or over the ``pod`` mesh axis in the
-    distributed runner) and returns the best solution,
+  * OPT and α are guessed — ``dash_auto`` runs a (1+ε)^i lattice of
+    (OPT, α) guesses and returns the best solution; by default the WHOLE
+    lattice is one jitted vmapped computation (device-side argmax, the
+    filter sweeps folded into single guess-axis engine launches), and
+    ``core.distributed.dash_auto_distributed`` maps the same lattice
+    onto the ``pod`` mesh axis,
   * the filter estimates E_R[f_{S∪(R\\{a})}(a)] by evaluating the batched
     gain vector at S∪R_i for each sample i and averaging over only the
     samples with a ∉ R_i (exact leave-one-out semantics for the samples
@@ -54,6 +57,7 @@ from repro.core.selection_loop import (  # noqa: F401  (re-exported API)
     DashConfig,
     DashTrace,
     SelectionHooks,
+    cached_runner,
     run_selection_rounds,
 )
 
@@ -137,12 +141,18 @@ def _single_device_hooks(obj, cfg: DashConfig) -> SelectionHooks:
     )
 
 
-def dash(obj, cfg: DashConfig, key, opt: float | jnp.ndarray) -> DashResult:
-    """Run DASH for a single (OPT, α) guess.  jit/vmap-compatible."""
+def dash(obj, cfg: DashConfig, key, opt: float | jnp.ndarray,
+         alpha: jnp.ndarray | None = None) -> DashResult:
+    """Run DASH for a single (OPT, α) guess.  jit/vmap-compatible.
+
+    ``alpha`` optionally overrides ``cfg.alpha`` with a traced value so
+    the (OPT, α) lattice can vmap over both guess axes at once.
+    """
     cfg = cfg.resolve(obj.n)
     hooks = _single_device_hooks(obj, cfg)
     state, alive, count, key, trace = run_selection_rounds(
-        hooks, cfg, opt, key, obj.init(), jnp.ones((obj.n,), bool)
+        hooks, cfg, opt, key, obj.init(), jnp.ones((obj.n,), bool),
+        alpha=alpha,
     )
     return DashResult(
         sel_mask=state.sel_mask,
@@ -161,12 +171,67 @@ def opt_guess_lattice(obj, eps: float, n_guesses: int, k: int | None = None):
     with a budgeted number of guesses we cover the same feasible range
     [g0, k·g0] (monotonicity ⇒ OPT ≥ g0; the modular upper bound of the
     sandwich ⇒ OPT ≲ k·g0) with geometric spacing — equivalent up to the
-    (1+ε) granularity the analysis needs."""
+    (1+ε) granularity the analysis needs.
+
+    A single guess gets the geometric midpoint of [g0, hi·g0] — the
+    minimax-regret point of the range in log space.  (The old ratio
+    formula's ``1/max(n_guesses − 1, 1)`` exponent silently pinned
+    ``n_guesses=1`` to the degenerate lower endpoint g0.)
+    """
     g0 = jnp.maximum(jnp.max(obj.gains(obj.init())), 1e-12)
     hi = float(k) if k else 1.0 / eps
-    ratio = jnp.asarray(hi, jnp.float32) ** (1.0 / max(n_guesses - 1, 1))
+    if n_guesses == 1:
+        return g0 * jnp.sqrt(jnp.asarray(hi, jnp.float32))[None]
+    ratio = jnp.asarray(hi, jnp.float32) ** (1.0 / (n_guesses - 1))
     i = jnp.arange(n_guesses, dtype=jnp.float32)
     return g0 * ratio ** i
+
+
+def lattice_grid(guesses, alphas):
+    """Cross product of the OPT lattice with an α lattice.
+
+    Returns ``(opts, alphas)`` flattened to one leading guess axis of
+    size ``n_guesses · n_alphas``, OPT-major (all α for guess 0 first) —
+    the layout every lattice runner (batched vmap, pod axis) uses.
+    """
+    guesses = jnp.asarray(guesses, jnp.float32).reshape(-1)
+    alphas = jnp.asarray(alphas, jnp.float32).reshape(-1)
+    g, a = guesses.shape[0], alphas.shape[0]
+    return (jnp.repeat(guesses, a),
+            jnp.tile(alphas, g))
+
+
+def nan_to_neginf(v):
+    """Guard lattice argmaxes: a numerically degenerate guess lane
+    (value = NaN) must never win — jnp.argmax would return the NaN
+    index, where the historical host-side ``float(a) > float(b)`` sweep
+    skipped it."""
+    return jnp.where(jnp.isnan(v), -jnp.inf, v)
+
+
+def _best_of_lattice(results: DashResult) -> DashResult:
+    """Device-side argmax over the leading guess axis — no host sync."""
+    best = jnp.argmax(nan_to_neginf(results.value))
+    return jax.tree_util.tree_map(lambda x: x[best], results)
+
+
+def _lattice_runner(obj, cfg: DashConfig, batched: bool):
+    """Jitted lattice executors, cached per objective (weakly — see
+    :func:`core.selection_loop.cached_runner`).
+
+    ``dash_auto`` is called repeatedly with the same objective (guess
+    sweeps, benchmarks, retries with fresh keys); building the jit
+    wrapper inline would discard XLA's compilation cache every call and
+    turn each invocation into a full retrace.
+    """
+    def build():
+        if batched:
+            return jax.jit(
+                jax.vmap(lambda kk, g, a: dash(obj, cfg, kk, g, a))
+            )
+        return jax.jit(lambda kk, g, a: dash(obj, cfg, kk, g, a))
+
+    return cached_runner(obj, ("lattice", cfg, batched), build)
 
 
 def dash_auto(
@@ -180,20 +245,51 @@ def dash_auto(
     n_samples: int = 8,
     n_guesses: int = 8,
     trim_frac: float = 0.0,
-    guess_mode: str = "loop",
-) -> DashResult:
-    """DASH with the OPT-guess lattice; returns the best-value solution."""
+    alphas=None,
+    guess_mode: str = "batched",
+    return_lattice: bool = False,
+):
+    """DASH with the (OPT, α) guess lattice; returns the best solution.
+
+    The default ``guess_mode="batched"`` runs the WHOLE lattice as one
+    jitted vmapped computation: all guesses' selection loops advance in
+    lockstep under a single compilation, the filter sweeps ride the
+    guess-folded filter engine (one fused launch for all G·n_samples
+    perturbed states — see ``repro.kernels.filter_gains``), and the best
+    guess is committed by a device-side argmax, so the host never syncs
+    per guess.  ``guess_mode="loop"`` is kept as a DEBUG mode only
+    (per-guess executions are easier to bisect); it jits ``dash`` once
+    and still reduces on device.  ``"vmap"`` is accepted as a legacy
+    alias for ``"batched"``.
+
+    ``alphas`` optionally adds an α lattice: the runs sweep the full
+    (OPT, α) cross product (``n_guesses · len(alphas)`` joint guesses),
+    which is how App. G treats the unknown differential-submodularity
+    parameter.  ``return_lattice=True`` additionally returns the stacked
+    per-guess :class:`DashResult` (leading axis = joint guess, OPT-major)
+    for diagnostics and parity tests.
+    """
+    if guess_mode not in ("batched", "vmap", "loop"):
+        raise ValueError(f"unknown guess_mode: {guess_mode!r}")
     cfg = DashConfig(k=k, r=r, eps=eps, alpha=alpha, n_samples=n_samples,
                      trim_frac=trim_frac)
     guesses = opt_guess_lattice(obj, eps, n_guesses, k)
-    keys = jax.random.split(key, n_guesses)
-    if guess_mode == "vmap":
-        results = jax.vmap(lambda kk, g: dash(obj, cfg, kk, g))(keys, guesses)
-        best = jnp.argmax(results.value)
-        return jax.tree_util.tree_map(lambda x: x[best], results)
-    best_res = None
-    for i in range(n_guesses):
-        res = dash(obj, cfg, keys[i], guesses[i])
-        if best_res is None or float(res.value) > float(best_res.value):
-            best_res = res
-    return best_res
+    opts, alphas = lattice_grid(guesses, [alpha] if alphas is None else alphas)
+    n_runs = opts.shape[0]
+    keys = jax.random.split(key, n_runs)
+
+    if guess_mode in ("batched", "vmap"):
+        results = _lattice_runner(obj, cfg, True)(keys, opts, alphas)
+    else:
+        # Debug path: one trace (jit outside the loop — the old code
+        # retraced dash per guess), still no per-guess host sync: results
+        # are stacked and reduced on device.
+        run = _lattice_runner(obj, cfg, False)
+        per_guess = [run(keys[i], opts[i], alphas[i]) for i in range(n_runs)]
+        results = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_guess
+        )
+    best = _best_of_lattice(results)
+    if return_lattice:
+        return best, results
+    return best

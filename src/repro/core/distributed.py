@@ -21,8 +21,11 @@ Layout:
   * Monte-Carlo expectation replicas over the ``data`` axis — each data
     row draws its own R ~ U(X) and the estimate is a ``pmean``
     (straggler-robust trimming happens host-side, runtime/straggler.py),
-  * independent (OPT, α) guesses map onto the ``pod`` axis (or a host
-    loop on smaller meshes).
+  * independent (OPT, α) guesses map onto the ``pod`` axis:
+    ``dash_auto_distributed`` runs the WHOLE App.-G guess lattice in one
+    ``shard_map`` launch — each pod slice drives its guesses through the
+    same single-guess body ``dash_distributed`` uses, and the winner is
+    committed with one ``all_gather``/argmax/``psum`` over ``pod``.
 
 Collectives per adaptive round (n = ground set, P = model shards,
 b = block size ⌈k/r⌉, d = feature dim):
@@ -60,6 +63,7 @@ from repro.core.selection_loop import (
     DashConfig,
     DashTrace,
     SelectionHooks,
+    cached_runner,
     run_selection_rounds,
 )
 
@@ -71,6 +75,21 @@ class DistDashResult(NamedTuple):
     rounds: jnp.ndarray        # adaptive rounds consumed (filter iters + r)
     values_trace: jnp.ndarray  # (r,)
     trace: DashTrace | None = None
+
+
+class LatticeDistResult(NamedTuple):
+    """Best-of-lattice result of :func:`dash_auto_distributed`: the
+    winning guess's solution plus the whole lattice's values.  The
+    winning guess's per-round values are ``trace.values`` (no separate
+    ``values_trace`` alias — ``trace`` is always present here, unlike
+    :class:`DistDashResult`)."""
+    sel_mask: jnp.ndarray        # (n,) bool — the WINNING guess's solution
+    sel_count: jnp.ndarray
+    value: jnp.ndarray
+    rounds: jnp.ndarray
+    trace: DashTrace             # winning guess's full trace
+    lattice_values: jnp.ndarray  # (n_guesses,) f(S) per joint (OPT, α) guess
+    best_guess: jnp.ndarray      # () int32 — argmax index into the lattice
 
 
 # ---------------------------------------------------------------------------
@@ -114,44 +133,22 @@ def _dist_gather_columns(X_local, idx_local, owned, axis):
 # the generic sharded runner
 # ---------------------------------------------------------------------------
 
-def dash_distributed(
-    obj, cfg: DashConfig, key, opt, mesh,
-    *, model_axis: str = "model", data_axis: str | None = "data",
-    use_filter_engine: bool | None = None,
-):
-    """Run DASH for any ``DistributedObjective`` on a device mesh.
+def _make_guess_runner(obj, cfg: DashConfig, n_local: int,
+                       model_axis: str, data_axis: str | None,
+                       use_filter_engine: bool):
+    """Build the shard-local single-guess DASH body.
 
-    ``obj.X`` (d, n) is sharded over ``model_axis`` (n must be divisible
-    by the axis size — pad first, see ``pad_ground_set``); Monte-Carlo
-    estimate replicas ride ``data_axis`` (pass ``None`` for a pure
-    model-parallel mesh).  The selection loop, thresholds and trace are
-    the shared ``core.selection_loop`` implementation, so solutions are
-    statistically exchangeable with single-device ``dash(obj, ...)``.
-
-    ``use_filter_engine=None`` defers to ``obj.use_filter_engine``;
-    ``False`` forces the per-sample ``dist_add_set`` + ``dist_gains``
-    path, which re-evaluates the full local shard once per sample.
+    Returns ``run_one(X_local, key, opt, alpha=None) -> (sel_local,
+    count, value, rounds, trace)`` — the function both sharded runtimes
+    trace inside ``shard_map``: :func:`dash_distributed` runs it for one
+    (OPT, α) guess, :func:`dash_auto_distributed` vmaps it over the pod
+    slice's share of the guess lattice.  All collectives inside touch
+    only ``model_axis`` / ``data_axis``, so the caller is free to lay a
+    ``pod`` axis on top.
     """
-    X = obj.X
-    d, n = X.shape
-    cfg = cfg.resolve(n)
-    Pm = mesh.shape[model_axis]
-    assert n % Pm == 0, f"pad ground set: n={n} % model={Pm}"
-    n_local = n // Pm
     block = cfg.block
-    if use_filter_engine is None:
-        use_filter_engine = bool(getattr(obj, "use_filter_engine", False))
-    use_filter_engine = use_filter_engine and hasattr(
-        obj, "dist_filter_gains_batch"
-    )
 
-    in_specs = (P(None, model_axis), P(), P())
-    out_specs = (
-        P(model_axis), P(), P(), P(),
-        DashTrace(values=P(), alive=P(), filter_iters=P(), est_set_gain=P()),
-    )
-
-    def run(X_local, key_rep, opt_rep):
+    def run_one(X_local, key_rep, opt_rep, alpha_rep=None):
         def draw(kk, alive, allowed):
             """One global sample: local indices/ownership + gathered cols.
 
@@ -260,33 +257,228 @@ def dash_distributed(
         # round commits without filtering.
         alive0 = jnp.sum(X_local * X_local, axis=0) > 0
         (ds, sel_local), _, count, _, trace = run_selection_rounds(
-            hooks, cfg, opt_rep, key_rep, state0, alive0
+            hooks, cfg, opt_rep, key_rep, state0, alive0, alpha=alpha_rep
         )
         rounds = jnp.sum(trace.filter_iters) + jnp.asarray(cfg.r, jnp.int32)
         return sel_local, count, obj.dist_value(ds), rounds, trace
 
-    # Replication checking off: the Monte-Carlo estimators vmap over sample
-    # keys with collectives (psum/all_gather) inside the vmapped body; the
-    # VMA/rep invariant checker does not yet support that composition.
+    return run_one
+
+
+def _shard_mapped(run, mesh, in_specs, out_specs):
+    """shard_map across jax versions, replication checking off: the
+    Monte-Carlo estimators vmap over sample keys with collectives
+    (psum/all_gather) inside the vmapped body; the VMA/rep invariant
+    checker does not yet support that composition."""
     if hasattr(jax, "shard_map"):
-        mapped = jax.shard_map(
+        return jax.shard_map(
             run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )
-    else:  # jax < 0.6: experimental API, check_vma was called check_rep
-        from jax.experimental.shard_map import shard_map
+    # jax < 0.6: experimental API, check_vma was called check_rep
+    from jax.experimental.shard_map import shard_map
 
-        mapped = shard_map(
-            run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_rep=False,
+    return shard_map(
+        run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+def _resolve_engine_flag(obj, use_filter_engine: bool | None) -> bool:
+    if use_filter_engine is None:
+        use_filter_engine = bool(getattr(obj, "use_filter_engine", False))
+    return use_filter_engine and hasattr(obj, "dist_filter_gains_batch")
+
+
+def _dist_runner(obj, cfg: DashConfig, mesh, n_local: int, model_axis: str,
+                 data_axis: str | None, engine: bool):
+    """Jitted single-guess sharded executor, cached per objective
+    (weakly — see :func:`core.selection_loop.cached_runner`) on the
+    (resolved config, mesh, layout) residual.  Rebuilding the
+    jit(shard_map) closure per call would retrace and recompile on EVERY
+    invocation — guess sweeps and benchmarks call this repeatedly."""
+    def build():
+        run_one = _make_guess_runner(obj, cfg, n_local, model_axis,
+                                     data_axis, engine)
+        in_specs = (P(None, model_axis), P(), P())
+        out_specs = (
+            P(model_axis), P(), P(), P(),
+            DashTrace(values=P(), alive=P(), filter_iters=P(),
+                      est_set_gain=P()),
         )
-    run_sharded = jax.jit(mapped)
+        return jax.jit(_shard_mapped(run_one, mesh, in_specs, out_specs))
+
+    return cached_runner(
+        obj, ("dist", cfg, mesh, n_local, model_axis, data_axis, engine),
+        build,
+    )
+
+
+def dash_distributed(
+    obj, cfg: DashConfig, key, opt, mesh,
+    *, model_axis: str = "model", data_axis: str | None = "data",
+    use_filter_engine: bool | None = None,
+):
+    """Run DASH for any ``DistributedObjective`` on a device mesh.
+
+    ``obj.X`` (d, n) is sharded over ``model_axis`` (n must be divisible
+    by the axis size — pad first, see ``pad_ground_set``); Monte-Carlo
+    estimate replicas ride ``data_axis`` (pass ``None`` for a pure
+    model-parallel mesh).  The selection loop, thresholds and trace are
+    the shared ``core.selection_loop`` implementation, so solutions are
+    statistically exchangeable with single-device ``dash(obj, ...)``.
+
+    ``use_filter_engine=None`` defers to ``obj.use_filter_engine``;
+    ``False`` forces the per-sample ``dist_add_set`` + ``dist_gains``
+    path, which re-evaluates the full local shard once per sample.
+
+    This runs ONE (OPT, α) guess; :func:`dash_auto_distributed` sweeps
+    the whole guess lattice over the ``pod`` mesh axis in one launch.
+    """
+    X = obj.X
+    d, n = X.shape
+    cfg = cfg.resolve(n)
+    Pm = mesh.shape[model_axis]
+    assert n % Pm == 0, f"pad ground set: n={n} % model={Pm}"
+    run_sharded = _dist_runner(
+        obj, cfg, mesh, n // Pm, model_axis, data_axis,
+        _resolve_engine_flag(obj, use_filter_engine),
+    )
     sel, nsel, value, rounds, trace = run_sharded(
         X, key, jnp.asarray(opt, jnp.float32)
     )
     return DistDashResult(
         sel_mask=sel, sel_count=nsel, value=value, rounds=rounds,
         values_trace=trace.values, trace=trace,
+    )
+
+
+def _lattice_dist_runner(obj, cfg: DashConfig, mesh, n_local: int,
+                         g_local: int, pod_axis: str, model_axis: str,
+                         data_axis: str | None, engine: bool):
+    """Jitted pod-lattice executor (cached like :func:`_dist_runner`).
+
+    The traced program: every pod slice runs its ``g_local`` guesses
+    through the SAME single-guess body ``dash_distributed`` uses
+    (vmapped when g_local > 1; called directly when g_local == 1 so the
+    numerics are bitwise those of the per-guess runs), picks its local
+    best, and the winner is committed with an ``all_gather`` of per-pod
+    best values + replicated argmax + ``psum`` broadcast."""
+    from repro.core.dash import nan_to_neginf
+
+    run_one = _make_guess_runner(obj, cfg, n_local, model_axis, data_axis,
+                                 engine)
+
+    def commit_winner(tree, win):
+        """Broadcast the winning pod's pytree to every pod (exactly one
+        pod has ``win=True``, so the psum IS the winner's value)."""
+        def pick(x):
+            masked = jnp.where(win, x, jnp.zeros_like(x))
+            if x.dtype == jnp.bool_:
+                return jax.lax.psum(masked.astype(jnp.int32), pod_axis) > 0
+            return jax.lax.psum(masked, pod_axis)
+        return jax.tree_util.tree_map(pick, tree)
+
+    def run(X_local, keys_l, opts_l, alphas_l):
+        if g_local == 1:
+            # Bitwise-identical to a dash_distributed run of this guess:
+            # no vmap wrapper to perturb the numerics.
+            res = run_one(X_local, keys_l[0], opts_l[0], alphas_l[0])
+            res = jax.tree_util.tree_map(lambda x: x[None], res)
+        else:
+            res = jax.vmap(
+                lambda kk, g, a: run_one(X_local, kk, g, a)
+            )(keys_l, opts_l, alphas_l)
+        value_s = res[2]
+
+        # Local best of this pod slice's guesses, then the global commit:
+        # all_gather (pod,) values → replicated argmax → psum broadcast.
+        # NaN lanes are masked out of both argmaxes (nan_to_neginf) so a
+        # degenerate guess can never win the lattice.
+        bi = jnp.argmax(nan_to_neginf(value_s))
+        local_best = jax.tree_util.tree_map(
+            lambda x: jnp.take(x, bi, axis=0), res
+        )
+        vals_pod = jax.lax.all_gather(local_best[2], pod_axis)     # (Pp,)
+        gbi = jnp.argmax(nan_to_neginf(vals_pod))
+        win = jax.lax.axis_index(pod_axis) == gbi
+        sel_b, count_b, value_b, rounds_b, trace_b = commit_winner(
+            local_best, win
+        )
+        best_guess = gbi.astype(jnp.int32) * g_local + bi.astype(jnp.int32)
+        best_guess = commit_winner(best_guess, win)
+        return (sel_b, count_b, value_b, rounds_b, trace_b, value_s,
+                best_guess)
+
+    trace_spec = DashTrace(values=P(), alive=P(), filter_iters=P(),
+                           est_set_gain=P())
+    in_specs = (P(None, model_axis), P(pod_axis), P(pod_axis), P(pod_axis))
+    out_specs = (P(model_axis), P(), P(), P(), trace_spec, P(pod_axis), P())
+    return cached_runner(
+        obj,
+        ("lattice_dist", cfg, mesh, n_local, g_local, pod_axis, model_axis,
+         data_axis, engine),
+        lambda: jax.jit(_shard_mapped(run, mesh, in_specs, out_specs)),
+    )
+
+
+def dash_auto_distributed(
+    obj, k: int, key, mesh,
+    *, eps: float = 0.2, alpha: float = 0.5, r: int = 0,
+    n_samples: int = 8, n_guesses: int = 8, trim_frac: float = 0.0,
+    alphas=None, pod_axis: str = "pod", model_axis: str = "model",
+    data_axis: str | None = "data", use_filter_engine: bool | None = None,
+) -> LatticeDistResult:
+    """Distributed DASH over the WHOLE (OPT, α) guess lattice — one
+    compiled ``shard_map`` launch instead of ``n_guesses`` sequential
+    :func:`dash_distributed` runs.
+
+    The joint guess lattice (``opt_guess_lattice`` × optional
+    ``alphas``, OPT-major — the exact grid the single-device batched
+    ``dash_auto`` runs) is laid over the leading ``pod`` mesh axis: each
+    pod slice receives ``n_guesses_total / pod`` guesses and runs the
+    generic ``DistributedObjective`` selection loop over its own
+    ``data``/``model`` shards (vmapped when a slice owns more than one
+    guess — all of a slice's guesses advance in lockstep, exactly like
+    the single-device batched lattice).  The only cross-pod
+    communication is the final commit: an ``all_gather`` of the per-pod
+    best values (O(pod) scalars), a replicated argmax, and a ``psum``
+    that broadcasts the winning guess's solution — no per-guess host
+    sync anywhere.
+
+    Requires ``pod_axis`` in the mesh and the total number of joint
+    guesses divisible by its size.  Returns :class:`LatticeDistResult`;
+    ``lattice_values`` holds every guess's final f(S) in lattice order.
+    """
+    from repro.core.dash import lattice_grid, opt_guess_lattice
+
+    X = obj.X
+    d, n = X.shape
+    cfg = DashConfig(k=k, r=r, eps=eps, alpha=alpha, n_samples=n_samples,
+                     trim_frac=trim_frac).resolve(n)
+    Pp = mesh.shape[pod_axis]
+    Pm = mesh.shape[model_axis]
+    assert n % Pm == 0, f"pad ground set: n={n} % model={Pm}"
+    guesses = opt_guess_lattice(obj, eps, n_guesses, k)
+    opts, alphas_arr = lattice_grid(
+        guesses, [alpha] if alphas is None else alphas
+    )
+    n_runs = int(opts.shape[0])
+    assert n_runs % Pp == 0, (
+        f"joint guesses {n_runs} must be divisible by pod axis {Pp}"
+    )
+    g_local = n_runs // Pp
+    keys = jax.random.split(key, n_runs)
+    run_sharded = _lattice_dist_runner(
+        obj, cfg, mesh, n // Pm, g_local, pod_axis, model_axis, data_axis,
+        _resolve_engine_flag(obj, use_filter_engine),
+    )
+    sel, nsel, value, rounds, trace, lattice_values, best_guess = run_sharded(
+        X, keys, opts, alphas_arr
+    )
+    return LatticeDistResult(
+        sel_mask=sel, sel_count=nsel, value=value, rounds=rounds,
+        trace=trace, lattice_values=lattice_values, best_guess=best_guess,
     )
 
 

@@ -178,6 +178,12 @@ class AOptimalityObjective:
         idx/mask: (n_samples, m) padded Monte-Carlo sets.  Returns the
         (n_samples, n) matrix ``jax.vmap(lambda R: gains(add_set(S, R)))``
         would produce, without re-factorizing M per sample.
+
+        Under the batched (OPT, α) lattice this runs inside ``vmap``
+        over guesses; the ``aopt_filter_gains`` wrapper's custom-vmap
+        rule folds every guess's (W, E, F) into ONE guess-axis engine
+        launch (X streamed once, each guess's W slab fetched at its
+        guess boundary).
         """
         W = state.W                                    # (d, n) — shared
         E, F = jax.vmap(lambda i, v: self.expand_factors(state, i, v, W))(

@@ -36,6 +36,15 @@ shared + per-sample parts so all samples ride one fused kernel launch
 dispatches on ``use_filter_engine`` and falls back to the per-sample
 vmap path for objectives without the contract.
 
+The contract composes with the (OPT, α) guess lattice for free: the
+batched ``dash_auto`` vmaps the selection loop over guesses, and the
+``repro.kernels.filter_gains`` ops wrappers register ``custom_vmap``
+rules that fold the vmapped per-guess state operands into ONE launch
+over the ``n_guesses·n_samples`` grid (the ground set X streams once
+for the whole lattice) — an implementation of ``filter_gains_batch``
+only needs to keep its per-sample decomposition expressed through
+those wrappers.
+
 Distributed contract
 --------------------
 ``core.distributed.dash_distributed`` runs the SAME selection loop with

@@ -240,6 +240,11 @@ class ClassificationObjective:
         (n_samples, n) matrix ``jax.vmap(lambda R: gains(add_set(S, R)))``
         would produce; the per-sample work is only the small support
         refit — the candidate sweep streams X once for all samples.
+
+        Under the batched (OPT, α) lattice this runs inside ``vmap``
+        over guesses; the ``logistic_filter_gains`` wrapper's
+        custom-vmap rule folds every guess's logits into ONE G·m-sample
+        engine launch.
         """
         etas = jax.vmap(lambda i, v: self.expand_logits(state, i, v))(
             idx, mask

@@ -230,6 +230,11 @@ class RegressionObjective:
         idx/mask: (n_samples, m) padded Monte-Carlo sets.  Returns the
         (n_samples, n) matrix ``jax.vmap(lambda R: gains(add_set(S, R)))``
         would produce, without re-projecting the shared basis per sample.
+
+        Under the batched (OPT, α) lattice this whole method runs inside
+        ``vmap`` over guesses; the ``filter_gains`` wrapper's
+        custom-vmap rule then folds every guess's (Q, D, R) into ONE
+        guess-axis engine launch (X streamed once for the lattice).
         """
         D, R = jax.vmap(lambda i, v: self.expand_basis(state, i, v))(idx, mask)
         if self.use_kernel:

@@ -39,6 +39,37 @@ import jax.numpy as jnp
 
 Array = Any
 
+_RUNNER_CACHE_ATTR = "_selection_runner_cache"
+# Fallback for objectives that cannot take new attributes (__slots__):
+# entries here DO pin the objective until eviction, hence the small bound.
+_RUNNER_CACHE_FALLBACK: dict = {}
+_RUNNER_CACHE_FALLBACK_MAX = 16
+
+
+def cached_runner(obj, key, build: Callable[[], Any]):
+    """Per-objective cache for jitted selection-loop executors.
+
+    Both runtimes build their jitted runners from (objective, config,
+    layout) closures; rebuilding per call would retrace and recompile
+    every invocation, while a global ``lru_cache`` keyed on the
+    objective would strongly pin each dead objective's device-resident
+    dataset (X, y, caches) until enough entries accumulate.  The cache
+    therefore lives ON the objective (the runner closures reference the
+    objective anyway, so the reference cycle is internal and the GC
+    frees runners, executables and buffers together when the objective
+    is dropped).  ``key`` is any hashable residual (config, mesh, axes,
+    flags).
+    """
+    try:
+        per_obj = obj.__dict__.setdefault(_RUNNER_CACHE_ATTR, {})
+    except AttributeError:       # __slots__ objective: bounded global dict
+        per_obj = _RUNNER_CACHE_FALLBACK.setdefault(id(obj), (obj, {}))[1]
+        while len(_RUNNER_CACHE_FALLBACK) > _RUNNER_CACHE_FALLBACK_MAX:
+            _RUNNER_CACHE_FALLBACK.pop(next(iter(_RUNNER_CACHE_FALLBACK)))
+    if key not in per_obj:
+        per_obj[key] = build()
+    return per_obj[key]
+
 
 class DashTrace(NamedTuple):
     values: jnp.ndarray        # (r,) f(S) after each round
@@ -116,15 +147,23 @@ def run_selection_rounds(
     key: Array,
     state0: Any,
     alive0: Array,
+    alpha: Array | None = None,
 ):
     """Drive the r DASH rounds.  ``cfg`` must already be ``resolve``-d.
+
+    ``alpha`` optionally overrides ``cfg.alpha`` with a *traced* value —
+    this is what lets the OPT-guess lattice vmap over (OPT, α) pairs
+    under ONE compilation instead of retracing per α.
 
     Returns ``(state, alive, count, key, trace)`` — the final oracle
     state, survivor mask, global |S|, threaded PRNG key and the
     per-round :class:`DashTrace`.
     """
     k, r = cfg.k, cfg.r
-    alpha2 = cfg.alpha * cfg.alpha
+    alpha = jnp.asarray(
+        cfg.alpha if alpha is None else alpha, jnp.float32
+    )
+    alpha2 = alpha * alpha
     opt = jnp.asarray(opt, jnp.float32)
     trace0 = DashTrace(
         values=jnp.zeros((r,)), alive=jnp.zeros((r,), jnp.int32),
@@ -137,7 +176,7 @@ def run_selection_rounds(
         value = hooks.value(state)
         t = jnp.maximum((1.0 - cfg.eps) * (opt - value), 0.0)
         thr_set = alpha2 * t / r
-        thr_elem = cfg.alpha * (1.0 + cfg.eps / 2.0) * t / k
+        thr_elem = alpha * (1.0 + cfg.eps / 2.0) * t / k
         allowed = jnp.maximum(k - count, 0)
 
         est0 = hooks.estimate_set_gain(state, alive, allowed, k_est)

@@ -19,9 +19,18 @@ triangular solves per sample; the engine pays one shared solve plus
 (m · b · d · n) delta GEMMs — same shape of win as the regression
 epilogue's shared-base projection.
 
-Per grid step the kernel holds in VMEM (f32): X and W blocks (stream),
-E_i (d, bcap) + F_i (bcap, bcap) (sample), wsq/xw (cand), t/u/ft
-temporaries (3·bcap·block_n) — ops.py budgets block_n accordingly.
+Guess lattice: each OPT guess g has its own state, hence its own shared
+solve W_g = M_g⁻¹X (a ``gstream`` operand — one (d, n) slab per guess,
+re-fetched only at guess boundaries thanks to the sample-minor grid
+order) and its own ‖w_a‖² / x_aᵀw_a rows (``gcand``).  X itself stays a
+single ``stream`` — fetched from HBM once for the whole lattice instead
+of once per guess.
+
+Per grid step the kernel holds in VMEM (f32): X and W_g blocks
+(stream/gstream), E_gi (d, bcap) + F_gi (bcap, bcap) (sample), wsq/xw
+rows (gcand), t/u/ft temporaries (3·bcap·block_n) — ops.py budgets
+block_n accordingly; the guess fold leaves the per-step working set
+unchanged.
 """
 
 from __future__ import annotations
@@ -37,17 +46,17 @@ from repro.kernels.filter_gains.core import Operand, launch_filter_engine
 def _aopt_epilogue(x_ref, w_ref, e_ref, f_ref, wsq_ref, xw_ref, o_ref,
                    *, isig2: float):
     x = x_ref[...]                          # (d, bn)
-    w = w_ref[...]                          # (d, bn)
+    w = w_ref[0]                            # (d, bn) — this guess's W slab
     e = e_ref[0]                            # (d, b)
-    t = jax.lax.dot_general(                # E_iᵀ X — (b, bn)
+    t = jax.lax.dot_general(                # E_giᵀ X — (b, bn)
         e, x, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    u = jax.lax.dot_general(                # E_iᵀ W — (b, bn)
+    u = jax.lax.dot_general(                # E_giᵀ W_g — (b, bn)
         e, w, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    ft = jax.lax.dot_general(               # F_i t — (b, bn)
+    ft = jax.lax.dot_general(               # F_gi t — (b, bn)
         f_ref[0], t, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
@@ -65,22 +74,26 @@ def aopt_filter_gains_pallas(
     X, W, E, F, wsq, xw, *, isig2: float, block_n: int = 256,
     interpret: bool = True,
 ):
-    """X, W: (d, n); E: (m, d, b); F: (m, b, b); wsq, xw: (n,) — all
-    pre-padded so that n % block_n == 0.  Returns (m, n) f32 gains."""
+    """X: (d, n); W: (G, d, n) per-guess shared solves; E: (G·m, d, b);
+    F: (G·m, b, b) folded guess-major; wsq, xw: (G, n) — all pre-padded
+    so that n % block_n == 0.  Returns (G·m, n) f32 gains.  A guess-free
+    sweep is simply G = 1."""
     n = X.shape[1]
-    m = E.shape[0]
+    g = W.shape[0]
+    m = E.shape[0] // g
     return launch_filter_engine(
         functools.partial(_aopt_epilogue, isig2=isig2),
         [
             Operand(X, "stream"),
-            Operand(W, "stream"),
+            Operand(W, "gstream"),
             Operand(E, "sample"),
             Operand(F, "sample"),
-            Operand(wsq, "cand"),
-            Operand(xw, "cand"),
+            Operand(wsq, "gcand"),
+            Operand(xw, "gcand"),
         ],
         n=n,
         n_samples=m,
+        n_guesses=g,
         block_n=block_n,
         interpret=interpret,
     )

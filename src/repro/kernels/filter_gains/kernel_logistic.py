@@ -15,6 +15,12 @@ but the HBM story is identical: the per-sample path streams the full
 one X block is fetched once per launch and reused across all samples
 and all steps (sample axis minor, X resident in VMEM).
 
+Guess lattice: the logistic perturbed state is FULLY described by its
+refit logits, so the (OPT, α) lattice needs no per-guess operand kinds —
+ops.py simply folds the (G, m, d) logits stack to (G·m, d) guess-major
+"samples" and this kernel sweeps the whole lattice in one launch (X
+fetched once for all G·m states instead of once per guess).
+
 Per grid step the kernel holds in VMEM (f32): the X block (d·block_n),
 y and η_i columns (2·d), the (d, block_n) logits temporary of the
 Newton recurrence, and ~4 (1, block_n) rows — ops.py budgets block_n

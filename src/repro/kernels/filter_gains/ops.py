@@ -8,10 +8,30 @@ also-sample-batched jnp reference; Pallas interpret mode only when
 requested explicitly), grid geometry via
 ``repro.kernels.filter_gains.core``.  Padded delta columns, residual
 rows and logits are zero, so they contribute nothing to the projections.
+
+Guess lattice
+-------------
+Every wrapper accepts the per-guess state operands with an optional
+leading ``n_guesses`` axis (Q: (G, d, k), W: (G, d, n), etas:
+(G, m, d), …) and then runs the WHOLE (OPT, α) lattice as one launch:
+the guess axis is folded into the sample grid axis (see ``core.py``) so
+X streams from HBM once for all G·m perturbed states instead of once
+per guess.  Returns (G, m, n) in that mode.
+
+The wrappers additionally register ``jax.custom_vmap`` batching rules:
+``jax.vmap`` over the per-guess operands (which is exactly what the
+batched ``dash_auto`` lattice does — one vmapped selection loop per
+guess) resolves to the SAME folded single launch rather than G logical
+copies of the kernel.  Unexpected batching patterns (a batched ground
+set X) fall back to the vmapped reference — correct, just without the
+stream amortization.
 """
 
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import (
@@ -30,10 +50,95 @@ from repro.kernels.filter_gains.kernel_logistic import (
 )
 from repro.kernels.filter_gains.ref import (
     SPAN_TOL,
+    aopt_filter_gains_lattice_ref,
     aopt_filter_gains_ref,
+    filter_gains_lattice_ref,
     filter_gains_ref,
     logistic_filter_gains_ref,
 )
+
+
+def _bcast(x, batched: bool, axis_size: int):
+    """Give ``x`` the leading batch axis the custom-vmap rules expect."""
+    return x if batched else jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+
+
+# ---------------------------------------------------------------------------
+# regression epilogue
+# ---------------------------------------------------------------------------
+
+def _filter_gains_lattice(X, Q, D, R, col_sq, interpret):
+    """Folded-guess-axis launch: Q (G, d, k), D (G, m, d, b), R (G, m, d).
+    Returns (G, m, n)."""
+    use_ref, interpret = resolve_path(interpret)
+    d, n = X.shape
+    g, _, k = Q.shape
+    m, b = D.shape[1], D.shape[3]
+    dp = round_up(d, SUBLANE)
+    kp = round_up(max(k, 1), SUBLANE)
+    bp = round_up(max(b, 1), SUBLANE)
+    # Per-step VMEM is unchanged by the guess fold (one Q_g/D_gi/r_gi
+    # resident at a time): X block, Q_g, D_gi, r_gi, col_sq, base
+    # scratch + out block.
+    bn = pick_block_n(lambda bn: 4 * (dp * (bn + kp + bp + 1) + 3 * bn))
+    np_ = round_up(n, bn)
+    if use_ref or dp * (np_ + g * kp + g * m * bp) > HUGE_ELEMS:
+        return filter_gains_lattice_ref(X, Q, D, R, col_sq)
+
+    Xp = pad2d(X, dp, np_)
+    Qp = jnp.zeros((g, dp, kp), jnp.float32).at[:, :d, :k].set(Q)
+    Dp = jnp.zeros((g * m, dp, bp), jnp.float32).at[:, :d, :b].set(
+        D.reshape(g * m, d, b)
+    )
+    Rp = jnp.zeros((g * m, dp), jnp.float32).at[:, :d].set(
+        R.reshape(g * m, d)
+    )
+    # Padded candidates: col_sq = 1 so the span guard clamps them to 0.
+    cp = pad1d(col_sq, np_, fill=1.0)
+    out = filter_gains_pallas(
+        Xp, Qp, Dp, Rp, cp, block_n=bn, span_tol=SPAN_TOL,
+        interpret=interpret,
+    )
+    return out.reshape(g, m, -1)[:, :, :n]
+
+
+def _filter_gains_single(X, Q, D, R, col_sq, interpret):
+    """Guess-free sweep: the lattice launch at G = 1 (the kernel path),
+    the plain reference off-TPU."""
+    use_ref, _ = resolve_path(interpret)
+    if use_ref:
+        return filter_gains_ref(X, Q, D, R, col_sq)
+    return _filter_gains_lattice(X, Q[None], D[None], R[None], col_sq,
+                                 interpret)[0]
+
+
+@functools.lru_cache(maxsize=None)
+def _filter_gains_batched(interpret):
+    """custom-vmap wrapper: vmapping the per-guess operands folds into
+    ONE lattice launch instead of G logical kernel copies."""
+
+    @jax.custom_batching.custom_vmap
+    def fg(X, Q, D, R, col_sq):
+        return _filter_gains_single(X, Q, D, R, col_sq, interpret)
+
+    @fg.def_vmap
+    def _fg_vmap(axis_size, in_batched, X, Q, D, R, col_sq):
+        xb, qb, db, rb, cb = in_batched
+        if xb or cb:
+            # Per-lane ground sets: no shared stream to amortize.
+            out = jax.vmap(filter_gains_ref)(
+                _bcast(X, xb, axis_size), _bcast(Q, qb, axis_size),
+                _bcast(D, db, axis_size), _bcast(R, rb, axis_size),
+                _bcast(col_sq, cb, axis_size),
+            )
+            return out, True
+        out = _filter_gains_lattice(
+            X, _bcast(Q, qb, axis_size), _bcast(D, db, axis_size),
+            _bcast(R, rb, axis_size), col_sq, interpret,
+        )
+        return out, True
+
+    return fg
 
 
 def filter_gains(X, Q, D, R, col_sq, *, interpret: bool | None = None):
@@ -42,32 +147,99 @@ def filter_gains(X, Q, D, R, col_sq, *, interpret: bool | None = None):
     X: (d, n) candidates; Q: (d, k) shared basis; D: (m, d, b) per-sample
     orthonormal deltas (⊥ Q); R: (m, d) per-sample residuals; col_sq:
     (n,).  Returns (m, n) unnormalized gains, one row per sample.
+
+    Guess lattice: pass Q (G, d, k), D (G, m, d, b), R (G, m, d) to sweep
+    all G guesses' perturbed states in one folded launch — returns
+    (G, m, n).  ``jax.vmap`` over (Q, D, R) resolves to the same launch.
     """
+    if Q.ndim == 3:
+        return _filter_gains_lattice(X, Q, D, R, col_sq, interpret)
+    return _filter_gains_batched(interpret)(X, Q, D, R, col_sq)
+
+
+# ---------------------------------------------------------------------------
+# A-optimality epilogue
+# ---------------------------------------------------------------------------
+
+def _aopt_filter_gains_lattice(X, W, E, F, isig2, interpret):
+    """Folded-guess-axis launch: W (G, d, n), E (G, m, d, b),
+    F (G, m, b, b).  Returns (G, m, n)."""
     use_ref, interpret = resolve_path(interpret)
     d, n = X.shape
-    k = Q.shape[1]
-    m, _, b = D.shape
+    g = W.shape[0]
+    m, b = E.shape[1], E.shape[3]
     dp = round_up(d, SUBLANE)
-    kp = round_up(max(k, 1), SUBLANE)
     bp = round_up(max(b, 1), SUBLANE)
-    # f32 bytes resident per grid step: X block, Q, D_i, r_i, col_sq,
-    # base scratch + out block.
-    bn = pick_block_n(lambda bn: 4 * (dp * (bn + kp + bp + 1) + 3 * bn))
+    # Per-step VMEM unchanged by the fold: X + W_g blocks, E_gi, F_gi,
+    # wsq, xw, out, and the t/u/ft (bp, bn) temporaries.
+    bn = pick_block_n(
+        lambda bn: 4 * (2 * dp * bn + dp * bp + bp * bp + 3 * bn
+                        + 3 * bp * bn)
+    )
     np_ = round_up(n, bn)
-    if use_ref or dp * (np_ + kp + m * bp) > HUGE_ELEMS:
-        return filter_gains_ref(X, Q, D, R, col_sq)
+    if use_ref or dp * ((1 + g) * np_ + g * m * bp) > HUGE_ELEMS:
+        return aopt_filter_gains_lattice_ref(X, W, E, F, isig2)
 
     Xp = pad2d(X, dp, np_)
-    Qp = pad2d(Q, dp, kp)
-    Dp = jnp.zeros((m, dp, bp), jnp.float32).at[:, :d, :b].set(D)
-    Rp = jnp.zeros((m, dp), jnp.float32).at[:, :d].set(R)
-    # Padded candidates: col_sq = 1 so the span guard clamps them to 0.
-    cp = pad1d(col_sq, np_, fill=1.0)
-    out = filter_gains_pallas(
-        Xp, Qp, Dp, Rp, cp, block_n=bn, span_tol=SPAN_TOL,
+    Wp = jnp.zeros((g, dp, np_), jnp.float32).at[:, :d, :n].set(W)
+    Ep = jnp.zeros((g * m, dp, bp), jnp.float32).at[:, :d, :b].set(
+        E.reshape(g * m, d, b)
+    )
+    Fp = jnp.zeros((g * m, bp, bp), jnp.float32).at[:, :b, :b].set(
+        F.reshape(g * m, b, b)
+    )
+    # Padded candidates have x = w = 0 → num = 0, den = 1 → gain 0.
+    wsq = jnp.zeros((g, np_), jnp.float32).at[:, :n].set(
+        jnp.sum(W * W, axis=1)
+    )
+    xw = jnp.zeros((g, np_), jnp.float32).at[:, :n].set(
+        jnp.sum(X[None] * W, axis=1)
+    )
+    out = aopt_filter_gains_pallas(
+        Xp, Wp, Ep, Fp, wsq, xw, isig2=float(isig2), block_n=bn,
         interpret=interpret,
     )
-    return out[:, :n]
+    return out.reshape(g, m, -1)[:, :, :n]
+
+
+def _aopt_filter_gains_single(X, W, E, F, isig2, interpret):
+    use_ref, _ = resolve_path(interpret)
+    if use_ref:
+        return aopt_filter_gains_ref(X, W, E, F, isig2)
+    return _aopt_filter_gains_lattice(X, W[None], E[None], F[None], isig2,
+                                      interpret)[0]
+
+
+# Bounded: the key includes the data-dependent float isig2 (one entry —
+# and one retained custom_vmap wrapper + its executables — per distinct
+# sigma2), unlike the interpret/steps-keyed caches below whose key spaces
+# are tiny enums.
+@functools.lru_cache(maxsize=64)
+def _aopt_filter_gains_batched(isig2, interpret):
+    @jax.custom_batching.custom_vmap
+    def fg(X, W, E, F):
+        return _aopt_filter_gains_single(X, W, E, F, isig2, interpret)
+
+    @fg.def_vmap
+    def _fg_vmap(axis_size, in_batched, X, W, E, F):
+        xb, wb, eb, fb = in_batched
+        if xb:
+            out = jax.vmap(
+                lambda Xg, Wg, Eg, Fg: aopt_filter_gains_ref(
+                    Xg, Wg, Eg, Fg, isig2
+                )
+            )(
+                _bcast(X, xb, axis_size), _bcast(W, wb, axis_size),
+                _bcast(E, eb, axis_size), _bcast(F, fb, axis_size),
+            )
+            return out, True
+        out = _aopt_filter_gains_lattice(
+            X, _bcast(W, wb, axis_size), _bcast(E, eb, axis_size),
+            _bcast(F, fb, axis_size), isig2, interpret,
+        )
+        return out, True
+
+    return fg
 
 
 def aopt_filter_gains(X, W, E, F, isig2, *, interpret: bool | None = None):
@@ -76,44 +248,25 @@ def aopt_filter_gains(X, W, E, F, isig2, *, interpret: bool | None = None):
     X: (d, n) stimuli; W = M⁻¹X (d, n) shared solve; E: (m, d, b)
     per-sample Woodbury factors; F: (m, b, b) Grams E_iᵀE_i; isig2 =
     1/σ².  Returns (m, n) gains, one row per perturbed state S ∪ R_i.
+
+    Guess lattice: pass W (G, d, n), E (G, m, d, b), F (G, m, b, b) for
+    one folded launch over all guesses — returns (G, m, n).  ``jax.vmap``
+    over (W, E, F) resolves to the same launch when ``isig2`` is a host
+    scalar (the objective's, always).
     """
-    use_ref, interpret = resolve_path(interpret)
-    d, n = X.shape
-    m, _, b = E.shape
-    dp = round_up(d, SUBLANE)
-    bp = round_up(max(b, 1), SUBLANE)
-    # f32 bytes resident per grid step: X + W blocks, E_i, F_i, wsq, xw,
-    # out, and the t/u/ft (bp, bn) temporaries.
-    bn = pick_block_n(
-        lambda bn: 4 * (2 * dp * bn + dp * bp + bp * bp + 3 * bn
-                        + 3 * bp * bn)
-    )
-    np_ = round_up(n, bn)
-    if use_ref or dp * (2 * np_ + m * bp) > HUGE_ELEMS:
-        return aopt_filter_gains_ref(X, W, E, F, isig2)
-
-    Xp = pad2d(X, dp, np_)
-    Wp = pad2d(W, dp, np_)
-    Ep = jnp.zeros((m, dp, bp), jnp.float32).at[:, :d, :b].set(E)
-    Fp = jnp.zeros((m, bp, bp), jnp.float32).at[:, :b, :b].set(F)
-    # Padded candidates have x = w = 0 → num = 0, den = 1 → gain 0.
-    wsq = pad1d(jnp.sum(W * W, axis=0), np_)
-    xw = pad1d(jnp.sum(X * W, axis=0), np_)
-    out = aopt_filter_gains_pallas(
-        Xp, Wp, Ep, Fp, wsq, xw, isig2=float(isig2), block_n=bn,
-        interpret=interpret,
-    )
-    return out[:, :n]
+    if E.ndim == 4:
+        return _aopt_filter_gains_lattice(X, W, E, F, isig2, interpret)
+    if isinstance(isig2, (int, float)):
+        return _aopt_filter_gains_batched(float(isig2), interpret)(X, W, E, F)
+    return _aopt_filter_gains_single(X, W, E, F, isig2, interpret)
 
 
-def logistic_filter_gains(X, y, etas, *, steps: int = 3,
-                          interpret: bool | None = None):
-    """Sample-batched logistic filter gains for DASH.
+# ---------------------------------------------------------------------------
+# logistic epilogue
+# ---------------------------------------------------------------------------
 
-    X: (d, n) features; y: (d,) labels; etas: (m, d) per-sample refit
-    logits.  Returns (m, n) gains — row i is the ``steps``-step-Newton
-    log-likelihood improvement of each candidate at state S ∪ R_i.
-    """
+def _logistic_filter_gains_folded(X, y, etas, steps, interpret):
+    """Folded sweep: etas (M, d) for M = G·m perturbed states."""
     use_ref, interpret = resolve_path(interpret)
     d, n = X.shape
     m = etas.shape[0]
@@ -134,3 +287,57 @@ def logistic_filter_gains(X, y, etas, *, steps: int = 3,
         Xp, yp, ep, steps=steps, block_n=bn, interpret=interpret,
     )
     return out[:, :n]
+
+
+@functools.lru_cache(maxsize=None)
+def _logistic_filter_gains_batched(steps, interpret):
+    @jax.custom_batching.custom_vmap
+    def fg(X, y, etas):
+        return _logistic_filter_gains_folded(X, y, etas, steps, interpret)
+
+    @fg.def_vmap
+    def _fg_vmap(axis_size, in_batched, X, y, etas):
+        xb, yb, eb = in_batched
+        if xb or yb:
+            out = jax.vmap(
+                lambda Xg, yg, eg: logistic_filter_gains_ref(
+                    Xg, yg, eg, steps=steps
+                )
+            )(
+                _bcast(X, xb, axis_size), _bcast(y, yb, axis_size),
+                _bcast(etas, eb, axis_size),
+            )
+            return out, True
+        eg = _bcast(etas, eb, axis_size)
+        g, m, d = eg.shape
+        out = _logistic_filter_gains_folded(
+            X, y, eg.reshape(g * m, d), steps, interpret
+        )
+        return out.reshape(g, m, -1), True
+
+    return fg
+
+
+def logistic_filter_gains(X, y, etas, *, steps: int = 3,
+                          interpret: bool | None = None):
+    """Sample-batched logistic filter gains for DASH.
+
+    X: (d, n) features; y: (d,) labels; etas: (m, d) per-sample refit
+    logits.  Returns (m, n) gains — row i is the ``steps``-step-Newton
+    log-likelihood improvement of each candidate at state S ∪ R_i.
+
+    Guess lattice: pass etas (G, m, d) for one folded launch over all
+    guesses — returns (G, m, n).  ``jax.vmap`` over etas resolves to the
+    same launch (the logistic state is fully described by its logits, so
+    the lattice is simply G·m folded samples).
+    """
+    if etas.ndim == 3:
+        return _unfold_logistic(X, y, etas, steps, interpret)
+    return _logistic_filter_gains_batched(steps, interpret)(X, y, etas)
+
+
+def _unfold_logistic(X, y, etas, steps, interpret):
+    g, m, d = etas.shape
+    out = _logistic_filter_gains_folded(X, y, etas.reshape(g * m, d),
+                                        steps, interpret)
+    return out.reshape(g, m, -1)

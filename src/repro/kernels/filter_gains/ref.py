@@ -79,3 +79,38 @@ def logistic_filter_gains_ref(X, y, etas, *, steps: int = 3,
     return jax.vmap(
         lambda eta: logistic_gains_ref(X, y, eta, steps=steps, eps=eps)
     )(etas)
+
+
+# ---------------------------------------------------------------------------
+# guess-lattice variants: one leading (OPT, α)-guess axis over the
+# per-guess state operands, the ground set X shared by every guess.
+# These are the non-TPU execution paths of the folded-guess-axis engine
+# (ops.py routes here off-TPU) as well as its test oracles.
+# ---------------------------------------------------------------------------
+
+def filter_gains_lattice_ref(X, Q, D, R, col_sq, *,
+                             span_tol: float = SPAN_TOL):
+    """Per-guess bases Q: (G, d, k), deltas D: (G, m, d, b), residuals
+    R: (G, m, d); shared X: (d, n), col_sq: (n,).  Returns (G, m, n)."""
+    return jax.vmap(
+        lambda Qg, Dg, Rg: filter_gains_ref(X, Qg, Dg, Rg, col_sq,
+                                            span_tol=span_tol)
+    )(Q, D, R)
+
+
+def aopt_filter_gains_lattice_ref(X, W, E, F, isig2):
+    """Per-guess shared solves W: (G, d, n), factors E: (G, m, d, b),
+    Grams F: (G, m, b, b); shared X: (d, n).  Returns (G, m, n)."""
+    return jax.vmap(
+        lambda Wg, Eg, Fg: aopt_filter_gains_ref(X, Wg, Eg, Fg, isig2)
+    )(W, E, F)
+
+
+def logistic_filter_gains_lattice_ref(X, y, etas, *, steps: int = 3,
+                                      eps: float = 1e-9):
+    """Per-guess logits etas: (G, m, d); shared X: (d, n), y: (d,).
+    Returns (G, m, n)."""
+    g, m, d = etas.shape
+    out = logistic_filter_gains_ref(X, y, etas.reshape(g * m, d),
+                                    steps=steps, eps=eps)
+    return out.reshape(g, m, -1)

@@ -28,20 +28,44 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
-def make_mesh(shape, axes):
+def make_mesh(shape, axes, devices=None):
     """Arbitrary mesh (tests, elastic resizes, selection meshes).
 
-    ``axis_types`` only exists on newer jax (explicit-sharding work);
-    every axis here is Auto, which is also the old default — so omit the
-    argument on versions that predate ``jax.sharding.AxisType``.
+    ``devices`` optionally restricts the mesh to a subset of the host's
+    devices (parity tests build a (data, model) submesh next to the full
+    (pod, data, model) lattice mesh this way).  ``axis_types`` only
+    exists on newer jax (explicit-sharding work); every axis here is
+    Auto, which is also the old default — so omit the argument on
+    versions that predate ``jax.sharding.AxisType``.
     """
     shape, axes = tuple(shape), tuple(axes)
     if hasattr(jax.sharding, "AxisType"):
         return jax.make_mesh(
             shape, axes,
             axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+            devices=devices,
         )
-    return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_lattice_mesh(pod: int, axes=(POD_AXIS, DATA_AXIS, MODEL_AXIS)):
+    """(pod, data, model) mesh for the OPT-guess lattice runtime.
+
+    The leading ``pod`` axis carries independent (OPT, α) guesses
+    (``core.distributed.dash_auto_distributed``); the remaining host
+    devices are factorized data-major over the trailing two axes — e.g.
+    8 devices with ``pod=2`` gives the (2, 2, 2) pod-in-miniature mesh
+    the CI distributed job exercises.
+    """
+    n = len(jax.devices())
+    assert n % pod == 0, f"{n} devices not divisible by pod={pod}"
+    rest = n // pod
+    d = 1
+    for cand in range(int(rest ** 0.5), 0, -1):
+        if rest % cand == 0:
+            d = cand
+            break
+    return make_mesh((pod, rest // d, d), axes)
 
 
 def make_host_mesh(max_devices: int | None = None, axes=("data", "model")):

@@ -94,6 +94,91 @@ class TestDash:
         assert float(res.value) >= 0.4 * float(g.value)
 
 
+class TestGuessLattice:
+    def test_single_guess_is_geometric_midpoint(self, reg_obj):
+        """n_guesses=1 must NOT degenerate to the lower endpoint g0 (the
+        old ratio formula's 1/max(0, 1) exponent pinned it there)."""
+        from repro.core.dash import opt_guess_lattice
+
+        obj, k = reg_obj
+        g = opt_guess_lattice(obj, 0.25, 1, k)
+        g0 = float(jnp.max(obj.gains(obj.init())))
+        assert g.shape == (1,)
+        np.testing.assert_allclose(float(g[0]), g0 * np.sqrt(k), rtol=1e-5)
+
+    def test_lattice_spans_feasible_range(self, reg_obj):
+        from repro.core.dash import opt_guess_lattice
+
+        obj, k = reg_obj
+        g = np.asarray(opt_guess_lattice(obj, 0.25, 6, k))
+        g0 = float(jnp.max(obj.gains(obj.init())))
+        np.testing.assert_allclose(g[0], g0, rtol=1e-5)
+        np.testing.assert_allclose(g[-1], g0 * k, rtol=1e-4)
+        # geometric spacing: constant successive ratio
+        ratios = g[1:] / g[:-1]
+        np.testing.assert_allclose(ratios, ratios[0], rtol=1e-4)
+
+    def test_batched_matches_loop_per_guess(self, reg_obj):
+        """The batched single-jit lattice must reproduce the loop-mode
+        (debug) per-guess results bitwise — same keys, same guesses,
+        same selection loop, only the vmap wrapping differs."""
+        obj, k = reg_obj
+        key = jax.random.PRNGKey(3)
+        kw = dict(eps=0.25, alpha=0.6, n_samples=4, n_guesses=4,
+                  return_lattice=True)
+        best_b, lat_b = dash_auto(obj, k, key, guess_mode="batched", **kw)
+        best_l, lat_l = dash_auto(obj, k, key, guess_mode="loop", **kw)
+        np.testing.assert_array_equal(np.asarray(lat_b.value),
+                                      np.asarray(lat_l.value))
+        np.testing.assert_array_equal(np.asarray(lat_b.sel_mask),
+                                      np.asarray(lat_l.sel_mask))
+        assert float(best_b.value) == float(best_l.value)
+        assert float(best_b.value) == float(jnp.max(lat_b.value))
+
+    def test_alpha_lattice_cross_product(self, reg_obj):
+        """(OPT, α) pairs sweep jointly: n_guesses · len(alphas) runs,
+        OPT-major layout, and the best still wins the argmax."""
+        obj, k = reg_obj
+        key = jax.random.PRNGKey(0)
+        best, lat = dash_auto(obj, k, key, n_guesses=3, alphas=[0.4, 0.7],
+                              n_samples=4, return_lattice=True)
+        assert lat.value.shape == (6,)
+        assert float(best.value) == float(jnp.max(lat.value))
+        # α must actually reach the thresholds: an α=0 lane never filters
+        _, lat0 = dash_auto(obj, k, key, n_guesses=1, alphas=[0.0],
+                            n_samples=4, return_lattice=True)
+        assert int(jnp.sum(lat0.trace.filter_iters)) == 0
+
+    def test_unknown_guess_mode_raises(self, reg_obj):
+        obj, k = reg_obj
+        with pytest.raises(ValueError):
+            dash_auto(obj, k, jax.random.PRNGKey(0), guess_mode="nope")
+
+    def test_nan_guess_lane_never_wins(self):
+        """jnp.argmax would return a NaN lane's index; the device-side
+        lattice commit must skip it (the historical host-side float
+        comparison did)."""
+        from repro.core.dash import DashResult, DashTrace, _best_of_lattice
+
+        G, n, r = 3, 5, 2
+        trace = DashTrace(
+            values=jnp.zeros((G, r)), alive=jnp.zeros((G, r), jnp.int32),
+            filter_iters=jnp.zeros((G, r), jnp.int32),
+            est_set_gain=jnp.zeros((G, r)),
+        )
+        results = DashResult(
+            sel_mask=jnp.eye(G, n, dtype=bool),
+            sel_count=jnp.arange(G, dtype=jnp.int32),
+            value=jnp.asarray([1.0, jnp.nan, 3.0], jnp.float32),
+            rounds=jnp.arange(G, dtype=jnp.int32),
+            trace=trace,
+            state=None,
+        )
+        best = _best_of_lattice(results)
+        assert float(best.value) == 3.0
+        assert int(best.sel_count) == 2
+
+
 class TestAdaptiveSequencing:
     def test_respects_cardinality_and_quality(self, reg_obj):
         obj, k = reg_obj

@@ -34,13 +34,30 @@ from repro.core import (
     greedy,
     normalize_columns,
 )
-from repro.core.distributed import dash_distributed, pad_ground_set
-from repro.launch.mesh import make_mesh
+from repro.core.distributed import (
+    dash_auto_distributed,
+    dash_distributed,
+    pad_ground_set,
+)
+from repro.launch.mesh import make_lattice_mesh, make_mesh
 
 
 @pytest.fixture(scope="module")
 def mesh():
     return make_mesh((2, 4), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def pod_mesh():
+    """(2, 2, 2) = (pod, data, model) — the CI pod-in-miniature."""
+    return make_lattice_mesh(2)
+
+
+@pytest.fixture(scope="module")
+def sub_mesh():
+    """(2, 2) = (data, model) submesh matching one pod slice's shape, for
+    the per-guess reference sweep."""
+    return make_mesh((2, 2), ("data", "model"), devices=jax.devices()[:4])
 
 
 @pytest.fixture(scope="module")
@@ -124,6 +141,96 @@ def test_logistic_parity(mesh):
     g = greedy(obj, k)
     cfg = DashConfig(k=k, eps=0.3, alpha=0.4, n_samples=3)
     _parity_case(obj, cfg, float(g.value), mesh, floor=0.4)
+
+
+class TestPodGuessLattice:
+    """dash_auto_distributed: the (OPT, α) lattice over the pod axis in
+    ONE shard_map launch vs the per-guess dash_distributed sweep."""
+
+    def _sweep(self, obj, cfg, key, n_guesses, sub_mesh, alpha=None):
+        from repro.core.dash import lattice_grid, opt_guess_lattice
+
+        guesses = opt_guess_lattice(obj, cfg.eps, n_guesses, cfg.k)
+        opts, alphas = lattice_grid(guesses, [cfg.alpha])
+        keys = jax.random.split(key, opts.shape[0])
+        return [
+            dash_distributed(obj, cfg, keys[i], opts[i], sub_mesh)
+            for i in range(opts.shape[0])
+        ]
+
+    def test_pod_lattice_matches_per_guess_sweep(self, reg_setup, pod_mesh,
+                                                 sub_mesh):
+        """One guess per pod slice (g_local=1): the lattice run must be
+        BITWISE identical to the per-guess sweep — same keys, same
+        guesses, same selection loop, same mesh shape per slice."""
+        obj, cfg, _ = reg_setup
+        key = jax.random.PRNGKey(0)
+        res = dash_auto_distributed(
+            obj, cfg.k, key, pod_mesh, eps=cfg.eps, alpha=cfg.alpha,
+            n_samples=cfg.n_samples, n_guesses=2,
+        )
+        sweep = self._sweep(obj, cfg, key, 2, sub_mesh)
+        sweep_vals = [float(r.value) for r in sweep]
+        np.testing.assert_array_equal(
+            np.asarray(res.lattice_values), np.asarray(sweep_vals)
+        )
+        best = int(np.argmax(sweep_vals))
+        assert int(res.best_guess) == best
+        assert float(res.value) == sweep_vals[best]
+        np.testing.assert_array_equal(np.asarray(res.sel_mask),
+                                      np.asarray(sweep[best].sel_mask))
+        assert int(res.sel_count) == int(sweep[best].sel_count)
+        assert int(res.rounds) == int(sweep[best].rounds)
+
+    def test_pod_lattice_vmapped_slices(self, reg_setup, pod_mesh,
+                                        sub_mesh):
+        """More guesses than pods (g_local=2): each pod slice vmaps its
+        share; values agree with the per-guess sweep to f32 vmap
+        tolerance and the committed best is the lattice argmax."""
+        obj, cfg, _ = reg_setup
+        key = jax.random.PRNGKey(1)
+        res = dash_auto_distributed(
+            obj, cfg.k, key, pod_mesh, eps=cfg.eps, alpha=cfg.alpha,
+            n_samples=cfg.n_samples, n_guesses=4,
+        )
+        sweep = self._sweep(obj, cfg, key, 4, sub_mesh)
+        np.testing.assert_allclose(
+            np.asarray(res.lattice_values),
+            np.asarray([float(r.value) for r in sweep]),
+            rtol=1e-5, atol=1e-6,
+        )
+        assert float(res.value) == float(jnp.max(res.lattice_values))
+        assert int(res.sel_count) <= cfg.k
+        assert int(jnp.sum(res.sel_mask)) == int(res.sel_count)
+
+    def test_pod_lattice_deterministic(self, reg_setup, pod_mesh):
+        obj, cfg, _ = reg_setup
+        key = jax.random.PRNGKey(2)
+        r1 = dash_auto_distributed(obj, cfg.k, key, pod_mesh,
+                                   n_samples=cfg.n_samples, n_guesses=2)
+        r2 = dash_auto_distributed(obj, cfg.k, key, pod_mesh,
+                                   n_samples=cfg.n_samples, n_guesses=2)
+        assert float(r1.value) == float(r2.value)
+        assert bool(jnp.all(r1.sel_mask == r2.sel_mask))
+        assert bool(jnp.all(r1.lattice_values == r2.lattice_values))
+
+    def test_pod_lattice_alpha_pairs(self, reg_setup, pod_mesh):
+        """(OPT, α) cross product over the pod axis: 2 OPT × 2 α = 4
+        joint guesses on 2 pods."""
+        obj, cfg, _ = reg_setup
+        res = dash_auto_distributed(
+            obj, cfg.k, jax.random.PRNGKey(3), pod_mesh,
+            n_samples=cfg.n_samples, n_guesses=2, alphas=[0.4, 0.7],
+        )
+        assert res.lattice_values.shape == (4,)
+        assert float(res.value) == float(jnp.max(res.lattice_values))
+        assert int(res.sel_count) <= cfg.k
+
+    def test_pod_lattice_guess_count_must_divide(self, reg_setup, pod_mesh):
+        obj, cfg, _ = reg_setup
+        with pytest.raises(AssertionError):
+            dash_auto_distributed(obj, cfg.k, jax.random.PRNGKey(0),
+                                  pod_mesh, n_guesses=3)
 
 
 def test_capacity_edge_fills_to_k_and_stops(reg_setup, mesh):

@@ -346,6 +346,126 @@ def test_cls_estimate_matches_per_sample_path():
                                rtol=1e-4, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# folded guess axis (the (OPT, α) lattice through the engine)
+# ---------------------------------------------------------------------------
+
+def _guessed_regression_operands(d, k, m, b, G):
+    Qs, Ds, Rs = [], [], []
+    for _ in range(G):
+        Q, D = _shared_and_deltas(d, k, m, b)
+        Qs.append(Q)
+        Ds.append(D)
+        Rs.append(RNG.normal(size=(m, d)))
+    return (jnp.stack(Qs), jnp.stack(Ds),
+            jnp.asarray(np.stack(Rs), jnp.float32))
+
+
+@pytest.mark.parametrize("d,n,k,b,m,G", [
+    (100, 300, 7, 4, 5, 3),   # misaligned n AND G·m = 15 not a multiple
+    (64, 128, 4, 2, 3, 1),    # G = 1 must be a no-op
+    (257, 513, 5, 3, 2, 4),   # everything misaligned
+])
+def test_filter_gains_guess_axis_matches_per_guess(d, n, k, b, m, G):
+    """One folded (G·m)-launch == G separate per-guess launches, for the
+    kernel (interpret) and the lattice reference."""
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    csq = jnp.sum(X * X, axis=0)
+    Q, D, R = _guessed_regression_operands(d, k, m, b, G)
+    got = filter_gains(X, Q, D, R, csq, interpret=True)
+    assert got.shape == (G, m, n)
+    for g in range(G):
+        want = filter_gains(X, Q[g], D[g], R[g], csq, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[g]), np.asarray(want))
+    ref = filter_gains_ref(X, Q[0], D[0], R[0], csq)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("d,n,b,m,G", [
+    (100, 300, 4, 5, 3),
+    (64, 128, 2, 3, 1),       # G = 1 no-op
+])
+def test_aopt_guess_axis_matches_per_guess(d, n, b, m, G):
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    W = jnp.asarray(RNG.normal(size=(G, d, n)), jnp.float32)
+    E = jnp.asarray(RNG.normal(size=(G, m, d, b)) * 0.3, jnp.float32)
+    F = jnp.einsum("gmdb,gmdc->gmbc", E, E)
+    got = aopt_filter_gains(X, W, E, F, 0.7, interpret=True)
+    assert got.shape == (G, m, n)
+    for g in range(G):
+        want = aopt_filter_gains(X, W[g], E[g], F[g], 0.7, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[g]), np.asarray(want))
+
+
+@pytest.mark.parametrize("d,n,m,G", [(100, 300, 4, 3), (64, 128, 3, 1)])
+def test_logistic_guess_axis_matches_per_guess(d, n, m, G):
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    y = jnp.asarray((RNG.uniform(size=d) > 0.5), jnp.float32)
+    etas = jnp.asarray(RNG.normal(size=(G, m, d)) * 0.4, jnp.float32)
+    got = logistic_filter_gains(X, y, etas, steps=3, interpret=True)
+    assert got.shape == (G, m, n)
+    for g in range(G):
+        want = logistic_filter_gains(X, y, etas[g], steps=3, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[g]), np.asarray(want))
+
+
+def test_vmap_over_guesses_folds_into_lattice_launch():
+    """jax.vmap over the per-guess state operands (what the batched
+    dash_auto lattice does) must equal the explicit folded call — the
+    custom-vmap rule routes both to the same launch."""
+    d, n, k, b, m, G = 48, 96, 5, 3, 4, 3
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    csq = jnp.sum(X * X, axis=0)
+    Q, D, R = _guessed_regression_operands(d, k, m, b, G)
+    lat = filter_gains(X, Q, D, R, csq)
+    via_vmap = jax.vmap(
+        lambda q, dd, rr: filter_gains(X, q, dd, rr, csq)
+    )(Q, D, R)
+    np.testing.assert_array_equal(np.asarray(via_vmap), np.asarray(lat))
+    # under jit too (the batched lattice always runs jitted)
+    via_jit = jax.jit(jax.vmap(
+        lambda q, dd, rr: filter_gains(X, q, dd, rr, csq)
+    ))(Q, D, R)
+    np.testing.assert_allclose(np.asarray(via_jit), np.asarray(lat),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_vmap_with_unbatched_state_broadcasts():
+    """At state0 the shared basis is a closure constant (unbatched lane):
+    the custom-vmap rule must broadcast it, not crash."""
+    d, n, k, b, m, G = 48, 96, 5, 3, 4, 3
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    csq = jnp.sum(X * X, axis=0)
+    Q, D, R = _guessed_regression_operands(d, k, m, b, G)
+    Q0 = Q[0]                                   # shared across lanes
+    via_vmap = jax.vmap(
+        lambda dd, rr: filter_gains(X, Q0, dd, rr, csq)
+    )(D, R)
+    want = jnp.stack([filter_gains(X, Q0, D[g], R[g], csq)
+                      for g in range(G)])
+    np.testing.assert_allclose(np.asarray(via_vmap), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_batched_dash_auto_equals_loop_with_engine():
+    """End-to-end: the batched lattice (vmapped dash → custom-vmap →
+    folded engine) reproduces loop-mode per-guess results on an
+    engine-enabled objective."""
+    from repro.core import dash_auto
+
+    obj = _problem(use_filter_engine=True)
+    key = jax.random.PRNGKey(1)
+    kw = dict(eps=0.25, alpha=0.6, n_samples=4, n_guesses=3,
+              return_lattice=True)
+    _, lat_b = dash_auto(obj, obj.kmax, key, guess_mode="batched", **kw)
+    _, lat_l = dash_auto(obj, obj.kmax, key, guess_mode="loop", **kw)
+    np.testing.assert_array_equal(np.asarray(lat_b.value),
+                                  np.asarray(lat_l.value))
+    np.testing.assert_array_equal(np.asarray(lat_b.sel_mask),
+                                  np.asarray(lat_l.sel_mask))
+
+
 def test_dash_end_to_end_cls_engine():
     from repro.core import dash_auto, greedy
 
