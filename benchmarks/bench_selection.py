@@ -15,7 +15,10 @@ n (the algorithms are identical — only wall time changes).
 against single-device ``dash`` for all three objectives on whatever mesh
 the host devices allow (force a pod-in-miniature with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), recording
-values and wall times per runtime.  ``--json`` writes every emitted row
+values and wall times per runtime.  ``--suite baselines`` sweeps the
+whole ``core.algorithms.select`` registry — every §5 competitor,
+single-device AND sharded — into the same artifact (see
+``run_baselines``).  ``--json`` writes every emitted row
 as ``BENCH_selection.json`` — the CI artifact that accumulates the
 selection-benchmark trajectory alongside ``BENCH_kernels.json``.
 
@@ -393,6 +396,176 @@ def run_distributed(full: bool = False):
         Xc, kc, alpha=0.4, eps=0.3, n_samples=3)
 
 
+def _baseline_datasets(scale: int):
+    """The three paper objectives at baseline-suite sizes, as
+    ``(name, make_obj(X) factory, X, k_grid, select-opts)`` tuples —
+    factories take the (possibly padded) candidate matrix so the same
+    problems drive both the single-device and the sharded legs."""
+    rng = np.random.default_rng(0)
+
+    d, n, k = 96 * scale, 64 * scale, 8 * scale
+    X0 = rng.normal(size=(d, n)) + 0.4 * rng.normal(size=(d, 1))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32))
+    w = np.zeros(n)
+    w[: k] = rng.uniform(-2, 2, k)
+    y = jnp.asarray(X0 @ w + 0.1 * rng.normal(size=d), jnp.float32)
+    reg = ("regression", lambda Xp: RegressionObjective(Xp, y, kmax=k), X,
+           [k // 2, k], {"alpha": 0.6, "eps": 0.25})
+
+    da, na, ka = 24 * scale, 48 * scale, 6 * scale
+    Xa0 = rng.normal(size=(da, na))
+    Xa = jnp.asarray(Xa0 / np.linalg.norm(Xa0, axis=0, keepdims=True),
+                     jnp.float32)
+    aopt = ("aopt", lambda Xp: AOptimalityObjective(Xp, kmax=ka), Xa,
+            [ka // 2, ka], {"alpha": 0.5, "eps": 0.25})
+
+    dc, nc, kc = 96 * scale, 32 * scale, 4 * scale
+    Xc0 = rng.normal(size=(dc, nc))
+    Xc = normalize_columns(jnp.asarray(Xc0, jnp.float32)) * np.sqrt(dc)
+    wc = np.zeros(nc)
+    wc[: kc] = rng.uniform(-2, 2, kc)
+    yc = jnp.asarray((1 / (1 + np.exp(-Xc0 @ wc)) > 0.5).astype(np.float32))
+    logi = ("logistic",
+            lambda Xp: ClassificationObjective(Xp, yc, kmax=kc,
+                                               newton_steps=3,
+                                               newton_gain_steps=2),
+            Xc, [kc], {"alpha": 0.4, "eps": 0.3})
+    return [reg, aopt, logi]
+
+
+#: Baseline-suite roster: every registry algorithm with per-algorithm
+#: select() opts (dash runs a small guess lattice; lazy_greedy is the
+#: host-driven variant, single-device only by design).
+_BASELINE_ALGOS = (
+    ("dash", {"n_samples": 4, "n_guesses": 4}),
+    ("greedy", {}),
+    ("lazy_greedy", {}),
+    ("stochastic_greedy", {}),
+    ("topk", {}),
+    ("random", {}),
+)
+
+
+def run_baselines(full: bool = False):
+    """--suite baselines: the §5 comparison shape for the WHOLE registry.
+
+    Three table families into ``BENCH_selection.json``:
+      * value-vs-k        — every algorithm × every objective (the Fig
+                            2b/3b/4b analogue, now including stochastic
+                            and lazy greedy),
+      * single-vs-sharded — every algorithm with a distributed twin run
+                            through ``select(..., mesh=mesh)`` on the
+                            host mesh, with a value-parity field (the
+                            acceptance gate: sharded must agree with its
+                            single-device twin),
+      * time-vs-n         — greedy vs stochastic-greedy vs topk
+                            wall-clock as the ground set grows, plus the
+                            derived adaptivity accounting from
+                            ``algorithm_cost``.
+    """
+    from repro.core import algorithm_cost, get_algorithm, select
+    from repro.core.distributed import pad_ground_set
+    from repro.launch.mesh import make_host_mesh
+
+    scale = 2 if full else 1
+    key = jax.random.PRNGKey(0)
+    mesh = make_host_mesh() if len(jax.devices()) > 1 else None
+
+    for name, make_obj, X, k_grid, opts in _baseline_datasets(scale):
+        obj = make_obj(X)
+        dash_opts = {kk: v for kk, v in opts.items()}
+        for k in k_grid:
+            # ---- value-vs-k: every algorithm, single device ----------
+            single_vals = {}
+            for algo, aopts in _BASELINE_ALGOS:
+                use = dict(dash_opts, **aopts) if algo == "dash" else dict(aopts)
+                t, res = wall_time(
+                    lambda a=algo, u=use: jax.block_until_ready(
+                        select(a, obj, k, key=key, **u).value),
+                    warmup=1, iters=1)
+                single_vals[algo] = float(res)
+                cost = algorithm_cost(algo, obj.n, k)
+                emit(f"baselines/{name}/k={k}/{algo}", t * 1e6,
+                     f"value={float(res):.4f};"
+                     f"rounds={cost['adaptive_rounds']};"
+                     f"queries={cost['oracle_calls']}")
+
+            # ---- single-vs-sharded: the distributed twins ------------
+            if mesh is not None:
+                Xp, _ = pad_ground_set(X, mesh.shape["model"])
+                obj_p = make_obj(Xp)
+                for algo, aopts in _BASELINE_ALGOS:
+                    if get_algorithm(algo).distributed is None:
+                        continue
+                    use = dict(aopts)
+                    if algo == "dash":
+                        # single-guess sharded dash: pin OPT from greedy
+                        use = dict(dash_opts, opt=single_vals["greedy"] * 1.05,
+                                   n_samples=4)
+                    t, res = wall_time(
+                        lambda a=algo, u=use: jax.block_until_ready(
+                            select(a, obj_p, k, key=key, mesh=mesh, **u).value),
+                        warmup=1, iters=1)
+                    ref = single_vals[algo]
+                    emit(f"baselines/{name}/k={k}/{algo}_sharded", t * 1e6,
+                         f"value={float(res):.4f};"
+                         f"single_value={ref:.4f};"
+                         f"parity={float(res) / max(ref, 1e-9):.4f};"
+                         f"mesh={'x'.join(str(s) for s in mesh.devices.shape)}")
+
+    # ---- time-vs-n: wall-clock growth of the per-round sweeps --------
+    # Jitted whole-selection runners (warmup excludes compile) on the
+    # LOGISTIC objective — the oracle-bound regime where stochastic
+    # greedy's k·s query count converts into wall-clock (measured
+    # ~1.6–2.2× over greedy on CPU; on the cheap regression oracle the
+    # per-round noise/top-k overhead outweighs the saved GEMM and exact
+    # greedy wins — query counts are recorded either way, so the
+    # artifact carries the honest crossover).
+    from repro.core import greedy as greedy_fn
+    from repro.core import stochastic_greedy as stochastic_fn
+    from repro.core import top_k_select as topk_fn
+
+    rng = np.random.default_rng(1)
+    k = 8 * scale
+    for n in (128 * scale, 256 * scale, 512 * scale):
+        d = 128 * scale
+        X0 = rng.normal(size=(d, n))
+        X = normalize_columns(jnp.asarray(X0, jnp.float32)) * np.sqrt(d)
+        w = np.zeros(n)
+        w[: k] = rng.uniform(-2, 2, k)
+        yb = jnp.asarray((1 / (1 + np.exp(-X0 @ w)) > 0.5).astype(np.float32))
+        # Data enters as jit ARGUMENTS (not closures) so XLA cannot
+        # constant-fold the oracle sweeps being timed.
+        def make(Xa, ya):
+            return ClassificationObjective(Xa, ya, kmax=k, newton_steps=3,
+                                           newton_gain_steps=2)
+
+        runners = {
+            "greedy": (
+                jax.jit(lambda Xa, ya: greedy_fn(make(Xa, ya), k).value),
+                (X, yb)),
+            "stochastic_greedy": (
+                jax.jit(lambda Xa, ya, kk:
+                        stochastic_fn(make(Xa, ya), k, kk).value),
+                (X, yb, key)),
+            "topk": (
+                jax.jit(lambda Xa, ya: topk_fn(make(Xa, ya), k).value),
+                (X, yb)),
+        }
+        times = {}
+        for algo, (fn, fargs) in runners.items():
+            t, res = wall_time(
+                lambda f=fn, a=fargs: jax.block_until_ready(f(*a)),
+                warmup=1, iters=3)
+            times[algo] = t
+            cost = algorithm_cost(algo, n, k)
+            emit(f"baselines/time_vs_n/n={n}/{algo}", t * 1e6,
+                 f"value={float(res):.4f};queries={cost['oracle_calls']}")
+        emit(f"baselines/time_vs_n/n={n}/speedup", 0.0,
+             f"greedy_over_stochastic="
+             f"{times['greedy'] / max(times['stochastic_greedy'], 1e-12):.2f}x")
+
+
 def run(full: bool = False):
     scale = 1 if full else 4
 
@@ -458,15 +631,18 @@ def main() -> None:
                     help="paper-scale problem sizes")
     ap.add_argument(
         "--suite", default="all",
-        help="comma-separated subset of {paper, distributed, lattice} or "
-             "'all'.  'paper' = Fig 2/3/4 analogues; 'distributed' = "
-             "dash_distributed vs dash for all three objectives; "
-             "'lattice' = loop vs batched vs pod-sharded (OPT, α) guess "
-             "lattice (the distributed CI job runs "
-             "'distributed,lattice' with 8 forced host devices)",
+        help="comma-separated subset of {paper, distributed, lattice, "
+             "baselines} or 'all'.  'paper' = Fig 2/3/4 analogues; "
+             "'distributed' = dash_distributed vs dash for all three "
+             "objectives; 'lattice' = loop vs batched vs pod-sharded "
+             "(OPT, α) guess lattice; 'baselines' = the full select() "
+             "registry (§5 competitors), value-vs-k / single-vs-sharded "
+             "/ time-vs-n (the distributed CI job runs "
+             "'distributed,lattice,baselines' with 8 forced host "
+             "devices)",
     )
     args = ap.parse_args()
-    known = {"paper", "distributed", "lattice"}
+    known = {"paper", "distributed", "lattice", "baselines"}
     suites = (known if args.suite == "all"
               else {s.strip() for s in args.suite.split(",")})
     unknown = suites - known
@@ -478,6 +654,8 @@ def main() -> None:
         run_distributed(full=args.full)
     if "lattice" in suites:
         run_lattice(full=args.full)
+    if "baselines" in suites:
+        run_baselines(full=args.full)
     if args.json:
         payload = {"suite": f"bench_selection/{args.suite}",
                    "backend": jax.default_backend(),

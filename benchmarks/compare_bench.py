@@ -1,0 +1,122 @@
+"""Render a BENCH_*.json artifact — optionally vs a baseline — as a
+GitHub-flavoured Markdown summary.
+
+CI appends the output to ``$GITHUB_STEP_SUMMARY`` so benchmark
+regressions are visible on the PR itself:
+
+    python -m benchmarks.compare_bench BENCH_selection.json \
+        --baseline baseline/BENCH_selection.json \
+        --filter baselines/ >> "$GITHUB_STEP_SUMMARY"
+
+The baseline file is the artifact the last ``main`` run saved to the
+actions cache (see .github/workflows/ci.yml); when it is missing (first
+run, cache eviction, fork PRs without cache access) the script degrades
+to a current-run-only table instead of failing the job.
+
+Row format is the ``benchmarks.common.emit`` schema: ``name`` (a
+``/``-separated metric path), ``us_per_call``, and a ``derived`` string
+of ``key=value`` pairs (``value=...`` is the objective value the §5
+tables compare).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    """name → row for one artifact; later duplicates win (re-runs)."""
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def parse_derived(derived: str) -> dict[str, str]:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def _fmt_delta(cur: float, base: float | None, *, pct: bool = True) -> str:
+    if base is None:
+        return ""
+    if base == 0:
+        return " (new)"
+    rel = (cur - base) / abs(base)
+    return f" ({rel:+.1%})" if pct else f" ({cur - base:+.4g})"
+
+
+def markdown_table(cur: dict[str, dict], base: dict[str, dict],
+                   prefix: str) -> list[str]:
+    names = [n for n in cur if n.startswith(prefix)]
+    if not names:
+        return [f"_no rows matching `{prefix}`_", ""]
+    lines = [
+        f"### `{prefix}` ({len(names)} rows"
+        + (", vs baseline" if base else ", no baseline — first run?") + ")",
+        "",
+        "| metric | value | µs/call |",
+        "|---|---:|---:|",
+    ]
+    for name in names:
+        row = cur[name]
+        brow = base.get(name)
+        d = parse_derived(row.get("derived", ""))
+        bd = parse_derived(brow.get("derived", "")) if brow else {}
+        if "value" in d:
+            try:
+                v = float(d["value"])
+                bv = float(bd["value"]) if "value" in bd else None
+                val = f"{v:.4f}{_fmt_delta(v, bv, pct=False)}"
+            except ValueError:
+                val = d["value"]
+        else:
+            val = row.get("derived", "")
+        us = float(row.get("us_per_call", 0.0))
+        braw = brow.get("us_per_call") if brow else None
+        bus = float(braw) if braw is not None else None
+        us_s = f"{us:,.1f}{_fmt_delta(us, bus)}" if us else "—"
+        lines.append(f"| `{name}` | {val} | {us_s} |")
+    lines.append("")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="BENCH_*.json produced by this run")
+    ap.add_argument("--baseline", default=None,
+                    help="BENCH_*.json from the main branch (optional)")
+    ap.add_argument("--filter", dest="prefixes", action="append",
+                    default=None, metavar="PREFIX",
+                    help="row-name prefix to tabulate (repeatable; "
+                         "default: baselines/ and distributed/)")
+    ap.add_argument("--title", default="Selection benchmarks")
+    args = ap.parse_args(argv)
+
+    try:
+        cur = load_rows(args.current)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"_could not read {args.current}: {e}_")
+        return 0  # summary rendering must never fail the job
+    base: dict[str, dict] = {}
+    if args.baseline:
+        try:
+            base = load_rows(args.baseline)
+        except (OSError, json.JSONDecodeError):
+            base = {}
+
+    print(f"## {args.title}")
+    print()
+    for prefix in args.prefixes or ["baselines/", "distributed/"]:
+        for line in markdown_table(cur, base, prefix):
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

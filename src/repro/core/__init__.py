@@ -2,8 +2,10 @@
 
 Public API:
     objectives: RegressionObjective, ClassificationObjective,
-                AOptimalityObjective, DiversifiedObjective
-    algorithms: dash, dash_auto, DashConfig, greedy, lazy_greedy,
+                AOptimalityObjective, DiversityObjective,
+                DiversifiedObjective
+    algorithms: select (registry entry point), dash, dash_auto,
+                DashConfig, greedy, lazy_greedy, stochastic_greedy,
                 adaptive_sequencing, top_k_select, random_select,
                 lasso_path_select
     analysis:   gamma_regression, gamma_classification, gamma_aopt,
@@ -15,12 +17,30 @@ from repro.core.objectives import (
     ClassificationObjective,
     ClusterDiversity,
     DiversifiedObjective,
+    DiversityObjective,
     RegressionObjective,
     normalize_columns,
 )
 from repro.core.dash import DashConfig, DashResult, dash, dash_auto
-from repro.core.greedy import greedy, lazy_greedy, greedy_parallel_cost, greedy_sequential_cost
+from repro.core.greedy import (
+    greedy,
+    greedy_parallel_cost,
+    greedy_sequential_cost,
+    lazy_greedy,
+    lazy_greedy_cost,
+    stochastic_greedy,
+    stochastic_greedy_cost,
+)
 from repro.core.baselines import random_select, top_k_select
+from repro.core.algorithms import (
+    AlgorithmSpec,
+    SelectionResult,
+    algorithm_cost,
+    available_algorithms,
+    get_algorithm,
+    register,
+    select,
+)
 from repro.core.lasso import fista, lasso_path_select
 from repro.core.adaptive_sequencing import adaptive_sequencing
 from repro.core.spectral import (
@@ -35,6 +55,7 @@ __all__ = [
     "ClassificationObjective",
     "ClusterDiversity",
     "DiversifiedObjective",
+    "DiversityObjective",
     "RegressionObjective",
     "normalize_columns",
     "DashConfig",
@@ -43,10 +64,20 @@ __all__ = [
     "dash_auto",
     "greedy",
     "lazy_greedy",
+    "stochastic_greedy",
     "greedy_parallel_cost",
     "greedy_sequential_cost",
+    "lazy_greedy_cost",
+    "stochastic_greedy_cost",
     "random_select",
     "top_k_select",
+    "AlgorithmSpec",
+    "SelectionResult",
+    "algorithm_cost",
+    "available_algorithms",
+    "get_algorithm",
+    "register",
+    "select",
     "fista",
     "lasso_path_select",
     "adaptive_sequencing",

@@ -1,0 +1,276 @@
+"""Selection-algorithm registry — one entry point for every §5 competitor.
+
+The paper's experiments are head-to-head comparisons: DASH vs SDS_MA
+greedy, TOP-k and RANDOM (plus lazy and stochastic greedy as the strong
+practical competitors of Khanna et al. / Breuer et al.).  This module
+owns the roster once:
+
+    from repro.core import select
+    res = select("greedy", obj, k)                  # single device
+    res = select("greedy", obj, k, mesh=mesh)       # sharded
+
+Every algorithm is registered as an :class:`AlgorithmSpec` pairing its
+single-device implementation with its distributed twin (expressed
+against the ``DistributedObjective`` contract — see
+``core.distributed``), plus an adaptivity/query cost model for the
+benchmark tables and docs/algorithms.md.  ``select`` dispatches on
+``mesh`` and normalizes every native result type into one
+:class:`SelectionResult` so benchmarks, tests and serving code can loop
+over algorithms without per-algorithm unpacking.
+
+Adding an algorithm = one ``register(AlgorithmSpec(...))`` call; the
+benchmark suite (``bench_selection --suite baselines``) and the parity
+tests iterate the registry, so a new entry is benched and parity-tested
+for free.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import random_select, top_k_select
+from repro.core.greedy import (
+    greedy,
+    greedy_parallel_cost,
+    greedy_sequential_cost,
+    lazy_greedy,
+    lazy_greedy_cost,
+    stochastic_greedy,
+    stochastic_greedy_cost,
+)
+
+
+class SelectionResult(NamedTuple):
+    """Normalized result of :func:`select`.
+
+    ``values`` is the per-round f(S) trace when the algorithm has one
+    (DASH rounds, greedy picks) and an empty (0,) array for the one-shot
+    selectors.  ``raw`` keeps the algorithm's native result (DashResult,
+    GreedyResult, DistSelectResult, ...) for callers that need
+    algorithm-specific fields (traces, states, lattices).
+    """
+
+    sel_mask: jnp.ndarray
+    sel_count: jnp.ndarray
+    value: jnp.ndarray
+    values: jnp.ndarray
+    raw: Any
+
+
+@dataclass(frozen=True)
+class AlgorithmSpec:
+    """Registry entry: the single-device / distributed pair + metadata.
+
+    ``single(obj, k, key, **opts)`` and
+    ``distributed(obj, k, key, mesh, **opts)`` both return their native
+    result type; ``select`` normalizes.  ``needs_key`` marks randomized
+    algorithms (``select`` defaults their key deterministically).
+    ``cost(n, k)`` returns the ``{"oracle_calls", "adaptive_rounds"}``
+    accounting used by docs/algorithms.md and the benchmark tables.
+    """
+
+    name: str
+    single: Callable[..., Any]
+    distributed: Callable[..., Any] | None
+    needs_key: bool
+    cost: Callable[[int, int], dict]
+    summary: str
+
+
+_REGISTRY: dict[str, AlgorithmSpec] = {}
+
+
+def register(spec: AlgorithmSpec) -> AlgorithmSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"algorithm {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def available_algorithms(*, distributed: bool | None = None) -> tuple[str, ...]:
+    """Registered names, optionally only those with a distributed twin."""
+    return tuple(
+        name for name, spec in _REGISTRY.items()
+        if distributed is None or (spec.distributed is not None) == distributed
+    )
+
+
+def get_algorithm(name: str) -> AlgorithmSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; available: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def algorithm_cost(name: str, n: int, k: int) -> dict:
+    """{"oracle_calls", "adaptive_rounds"} for the algorithm at (n, k)."""
+    return get_algorithm(name).cost(n, k)
+
+
+def _normalize(raw) -> SelectionResult:
+    sel_mask = raw.sel_mask
+    count = getattr(raw, "sel_count", None)
+    if count is None:
+        count = jnp.sum(sel_mask.astype(jnp.int32))
+    values = getattr(raw, "values", None)
+    if values is None:
+        trace = getattr(raw, "trace", None)
+        values = (trace.values if trace is not None
+                  else jnp.zeros((0,), jnp.float32))
+    return SelectionResult(
+        sel_mask=sel_mask, sel_count=count, value=raw.value,
+        values=values, raw=raw,
+    )
+
+
+def select(algo: str, obj, k: int, key=None, mesh=None, **opts) -> SelectionResult:
+    """Run any registered selection algorithm — THE entry point.
+
+    ``mesh=None`` runs the single-device implementation; passing a mesh
+    dispatches to the distributed twin (the objective must implement the
+    ``DistributedObjective`` contract and ``obj.X``'s column count must
+    divide the mesh's model axis — ``pad_ground_set`` first if needed).
+
+    ``key`` seeds the randomized algorithms (dash, stochastic_greedy,
+    random); when omitted it defaults to ``PRNGKey(0)`` so every
+    algorithm is runnable with the same two-argument call.  Extra
+    ``**opts`` pass through to the implementation (e.g. ``subsample=``
+    for stochastic greedy, ``n_guesses=``/``opt=`` for dash,
+    ``model_axis=`` for any distributed twin).
+    """
+    spec = get_algorithm(algo)
+    if spec.needs_key and key is None:
+        key = jax.random.PRNGKey(0)
+    if mesh is None:
+        return _normalize(spec.single(obj, int(k), key, **opts))
+    if spec.distributed is None:
+        raise ValueError(f"algorithm {algo!r} has no distributed twin")
+    return _normalize(spec.distributed(obj, int(k), key, mesh, **opts))
+
+
+# ---------------------------------------------------------------------------
+# the §5 roster
+# ---------------------------------------------------------------------------
+
+def _dash_single(obj, k, key, **opts):
+    from repro.core.dash import DashConfig, dash, dash_auto
+
+    opt = opts.pop("opt", None)
+    if opt is not None:
+        cfg_keys = ("r", "eps", "alpha", "n_samples", "trim_frac",
+                    "max_filter_iters")
+        cfg = DashConfig(k=k, **{kk: opts.pop(kk) for kk in cfg_keys
+                                 if kk in opts})
+        return dash(obj, cfg, key, opt, **opts)
+    return dash_auto(obj, k, key, **opts)
+
+
+def _dash_distributed(obj, k, key, mesh, **opts):
+    from repro.core.dash import DashConfig
+    from repro.core.distributed import dash_auto_distributed, dash_distributed
+
+    opt = opts.pop("opt", None)
+    if opt is not None:
+        cfg_keys = ("r", "eps", "alpha", "n_samples", "trim_frac",
+                    "max_filter_iters")
+        cfg = DashConfig(k=k, **{kk: opts.pop(kk) for kk in cfg_keys
+                                 if kk in opts})
+        return dash_distributed(obj, cfg, key, opt, mesh, **opts)
+    if "pod" not in mesh.shape:
+        raise ValueError(
+            "select('dash', ..., mesh=...) without opt= sweeps the (OPT, α) "
+            "guess lattice over the mesh's 'pod' axis — build the mesh with "
+            "make_lattice_mesh, or pass an explicit opt= guess for a "
+            "(data, model) mesh"
+        )
+    return dash_auto_distributed(obj, k, key, mesh, **opts)
+
+
+def _dash_cost(n: int, k: int) -> dict:
+    # Thm 10: O(log n) adaptive rounds, O(n log n) oracle queries (each
+    # round's filter sweeps the ≤ n survivors a logarithmic number of
+    # times); reported at the paper's leading order.
+    import math
+
+    r = max(1, min(k, int(math.ceil(math.log2(max(n, 2))))))
+    return {"oracle_calls": n * r, "adaptive_rounds": r}
+
+
+register(AlgorithmSpec(
+    name="dash",
+    single=_dash_single,
+    distributed=_dash_distributed,
+    needs_key=True,
+    cost=_dash_cost,
+    summary="Alg. 1 adaptive sampling: O(log n) rounds, "
+            "(1-1/e^{α²}-ε)·OPT for α-differentially-submodular f",
+))
+
+register(AlgorithmSpec(
+    name="greedy",
+    single=lambda obj, k, key, **o: greedy(obj, k, **o),
+    distributed=lambda obj, k, key, mesh, **o: _dist().greedy_distributed(
+        obj, k, mesh, key=key, **o),
+    needs_key=False,
+    cost=greedy_parallel_cost,
+    summary="parallel SDS_MA: k rounds, batched argmax per round, "
+            "(1-1/e^{γ}) via weak submodularity",
+))
+
+register(AlgorithmSpec(
+    name="lazy_greedy",
+    single=lambda obj, k, key, **o: lazy_greedy(obj, k, **o),
+    distributed=None,
+    needs_key=False,
+    cost=lazy_greedy_cost,
+    summary="Minoux lazy bounds with batched re-checks; exact for "
+            "submodular f (host-driven — no distributed twin)",
+))
+
+register(AlgorithmSpec(
+    name="stochastic_greedy",
+    single=lambda obj, k, key, **o: stochastic_greedy(obj, k, key, **o),
+    distributed=lambda obj, k, key, mesh, **o:
+        _dist().stochastic_greedy_distributed(obj, k, key, mesh, **o),
+    needs_key=True,
+    cost=stochastic_greedy_cost,
+    summary="Mirzasoleiman subsampled argmax: k rounds of "
+            "⌈(n/k)ln(1/ε)⌉ queries, (1-1/e-ε) expected",
+))
+
+register(AlgorithmSpec(
+    name="topk",
+    single=lambda obj, k, key, **o: top_k_select(obj, k, **o),
+    distributed=lambda obj, k, key, mesh, **o: _dist().top_k_distributed(
+        obj, k, mesh, key=key, **o),
+    needs_key=False,
+    cost=lambda n, k: {"oracle_calls": n, "adaptive_rounds": 1},
+    summary="largest k singleton values in one sweep; γ²-approximation "
+            "for feature selection (App. J)",
+))
+
+register(AlgorithmSpec(
+    name="random",
+    single=lambda obj, k, key, **o: random_select(obj, k, key, **o),
+    distributed=lambda obj, k, key, mesh, **o: _dist().random_distributed(
+        obj, k, key, mesh, **o),
+    needs_key=True,
+    cost=lambda n, k: {"oracle_calls": 1, "adaptive_rounds": 1},
+    summary="uniform without-replacement sample (Gumbel top-k) — the "
+            "§5 floor",
+))
+
+
+def _dist():
+    # Deferred: core.distributed imports shard_map machinery; keep the
+    # registry importable (and the single-device path usable) without it.
+    from repro.core import distributed
+
+    return distributed

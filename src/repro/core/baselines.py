@@ -1,4 +1,15 @@
-"""RANDOM and TOP-k baselines (paper §5 benchmarks)."""
+"""RANDOM and TOP-k baselines (paper §5 benchmarks).
+
+Both are one-shot (single adaptive round) selectors and both guard the
+capacity edges: ``k > n`` is clamped to the ground-set size instead of
+crashing ``lax.top_k``, and the returned ``sel_count`` reports how many
+elements were actually committed — ``random_select`` can under-fill when
+fewer than ``k`` candidates are alive, which used to be silent.
+
+Distributed twins (``top_k_distributed``, ``random_distributed``) live in
+``core.distributed``; the ``core.algorithms`` registry dispatches
+between the pairs.
+"""
 
 from __future__ import annotations
 
@@ -14,22 +25,36 @@ class SelectResult(NamedTuple):
     sel_mask: jnp.ndarray
     value: jnp.ndarray
     state: Any
+    sel_count: jnp.ndarray  # committed |S| — can be < the requested k
 
 
 def random_select(obj, k: int, key) -> SelectResult:
-    """Select k uniformly random elements in one round."""
-    idx, valid = sample_set_from_mask(key, jnp.ones((obj.n,), bool), k)
+    """Select ≤ k uniformly random elements in one round.
+
+    ``k > n`` is clamped; invalid sample slots (fewer than ``kk`` alive
+    candidates) are masked out of the commit rather than burning
+    arbitrary top-k indices, and the actual committed count is returned
+    as ``sel_count`` — callers must not assume ``sel_count == k``.
+    """
+    kk = min(int(k), obj.n)
+    idx, valid = sample_set_from_mask(key, jnp.ones((obj.n,), bool), kk)
     state = obj.add_set(obj.init(), idx, valid)
-    return SelectResult(state.sel_mask, obj.value(state), state)
+    return SelectResult(state.sel_mask, obj.value(state), state,
+                        jnp.sum(state.sel_mask.astype(jnp.int32)))
 
 
 def top_k_select(obj, k: int) -> SelectResult:
-    """Select the k elements with the largest singleton value f(a).
+    """Select the ≤ k elements with the largest singleton value f(a).
 
     App. J of the paper shows TOP-k is itself a γ²-approximation for the
-    no-diversity feature-selection objective.
+    no-diversity feature-selection objective.  ``k > n`` is clamped (the
+    unguarded ``lax.top_k`` call used to raise, and any padding of the
+    index vector would have burnt slots on duplicate indices).
     """
+    kk = min(int(k), obj.n)
     g = obj.gains(obj.init())
-    _, idx = jax.lax.top_k(g, k)
-    state = obj.add_set(obj.init(), idx.astype(jnp.int32), jnp.ones((k,), bool))
-    return SelectResult(state.sel_mask, obj.value(state), state)
+    _, idx = jax.lax.top_k(g, kk)
+    state = obj.add_set(obj.init(), idx.astype(jnp.int32),
+                        jnp.ones((kk,), bool))
+    return SelectResult(state.sel_mask, obj.value(state), state,
+                        jnp.sum(state.sel_mask.astype(jnp.int32)))

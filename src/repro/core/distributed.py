@@ -503,6 +503,247 @@ def dash_distributed_regression(
     )
 
 
+# ---------------------------------------------------------------------------
+# distributed §5 baselines — every competitor on the SAME sharded contract
+# ---------------------------------------------------------------------------
+
+class DistSelectResult(NamedTuple):
+    """Result of the distributed baseline selectors.  ``values`` is the
+    per-pick f(S) trace for the greedy family and empty (shape (0,)) for
+    the one-shot TOP-k/RANDOM selectors."""
+    sel_mask: jnp.ndarray      # (n,) bool — global (gathered)
+    sel_count: jnp.ndarray     # () int32
+    value: jnp.ndarray         # () f32
+    values: jnp.ndarray        # (k,) trace, or (0,)
+
+
+def _local_noise_slice(noise, rank, n_local: int):
+    """This shard's block of a replicated (n,) noise vector.
+
+    Every shard evaluates the SAME ``round_gumbel`` draw (replicated
+    key ⇒ replicated noise) and slices its contiguous column block, so
+    globally the sample is bitwise the one the single-device runtime
+    draws — the property the parity suite pins down.
+    """
+    return jax.lax.dynamic_slice(noise, (rank * n_local,), (n_local,))
+
+
+def _global_topk_commit(scores_l, k_top: int, n_local: int, rank, axis):
+    """Global top-``k_top`` of shard-local scores → local view.
+
+    all_gather of each shard's local top-t (t = min(k_top, n_local)),
+    replicated re-top-k over the P·t finalists.  ``lax.top_k`` is stable
+    and the gather is shard-major, so ties resolve in global index order
+    exactly like a single-device top-k over the concatenated vector.
+    Returns (idx_local, owned, valid_global) like ``_dist_sample``.
+    """
+    t = min(k_top, n_local)
+    loc_vals, loc_idx = jax.lax.top_k(scores_l, t)
+    all_vals = jax.lax.all_gather(loc_vals, axis)           # (P, t)
+    all_idx = jax.lax.all_gather(loc_idx, axis)             # (P, t)
+    top_vals, top_flat = jax.lax.top_k(all_vals.reshape(-1), k_top)
+    top_shard = top_flat // t
+    top_local = jnp.take(all_idx.reshape(-1), top_flat)
+    valid_global = jnp.isfinite(top_vals)
+    owned = (top_shard == rank) & valid_global
+    return top_local.astype(jnp.int32), owned, valid_global
+
+
+def _greedy_runner(obj, k: int, mesh, n_local: int, n: int,
+                   model_axis: str, subsample: int | None):
+    """Jitted sharded greedy/stochastic-greedy executor (weak-cached per
+    objective like the DASH runners).  One adaptive round per pick; the
+    collectives per round are one all_gather of per-shard argmax scores
+    (+ one for the sample threshold when subsampling) and one psum that
+    fetches the winning column."""
+    def build():
+        from repro.core.greedy import round_gumbel
+
+        def run(X_local, key_rep):
+            rank = jax.lax.axis_index(model_axis)
+            alive0 = jnp.sum(X_local * X_local, axis=0) > 0
+
+            def body(i, carry):
+                ds, sel_local, count, values = carry
+                g = jnp.where(
+                    sel_local | ~alive0, -jnp.inf,
+                    obj.dist_gains(ds, X_local),
+                )
+                if subsample is not None:
+                    # Replicated per-round noise, local slice, global
+                    # top-s threshold: the sample is bitwise the one
+                    # single-device stochastic_greedy draws.
+                    noise_l = _local_noise_slice(
+                        round_gumbel(key_rep, i, n), rank, n_local
+                    )
+                    noise_l = jnp.where(sel_local, -jnp.inf, noise_l)
+                    t = min(subsample, n_local)
+                    lv = jax.lax.top_k(noise_l, t)[0]
+                    av = jax.lax.all_gather(lv, model_axis).reshape(-1)
+                    thr = jax.lax.top_k(av, subsample)[0][-1]
+                    g = jnp.where(noise_l >= thr, g, -jnp.inf)
+
+                # Global argmax commit: per-shard max → all_gather →
+                # replicated argmax (ties resolve to the lowest shard,
+                # i.e. the lowest global index — single-device argmax
+                # semantics) → one-hot psum fetches the winning column.
+                lmax = jnp.max(g)
+                larg = jnp.argmax(g)
+                allmax = jax.lax.all_gather(lmax, model_axis)   # (P,)
+                wshard = jnp.argmax(allmax)
+                accept = jnp.isfinite(allmax[wshard]) & (count < k)
+                win = (rank == wshard) & accept
+                col = jnp.where(win, X_local[:, larg], 0.0)
+                C = jax.lax.psum(col, model_axis)[:, None]
+                ds = obj.dist_add_set(
+                    ds, C, jnp.full((1,), True) & accept, X_local
+                )
+                sel_local = sel_local.at[
+                    jnp.where(win, larg, n_local)
+                ].set(True, mode="drop")
+                values = values.at[i].set(obj.dist_value(ds))
+                return ds, sel_local, count + accept.astype(jnp.int32), values
+
+            ds, sel_local, count, values = jax.lax.fori_loop(
+                0, k, body,
+                (obj.dist_init(X_local), jnp.zeros((n_local,), bool),
+                 jnp.zeros((), jnp.int32), jnp.zeros((k,), jnp.float32)),
+            )
+            return sel_local, count, obj.dist_value(ds), values
+
+        in_specs = (P(None, model_axis), P())
+        out_specs = (P(model_axis), P(), P(), P())
+        return jax.jit(_shard_mapped(run, mesh, in_specs, out_specs))
+
+    return cached_runner(
+        obj, ("greedy_dist", k, mesh, n_local, model_axis, subsample), build
+    )
+
+
+def _check_sharding(obj, mesh, model_axis: str):
+    n = obj.X.shape[1]
+    Pm = mesh.shape[model_axis]
+    assert n % Pm == 0, f"pad ground set: n={n} % model={Pm}"
+    return n, n // Pm
+
+
+def greedy_distributed(obj, k: int, mesh, *, key=None,
+                       model_axis: str = "model") -> DistSelectResult:
+    """Parallel SDS_MA on a device mesh — the paper's §5 greedy
+    competitor with its per-round gain sweep sharded over ``model_axis``
+    through the same ``DistributedObjective`` oracles DASH uses.
+
+    Each of the k rounds runs one shard-local fused gain sweep
+    (``dist_gains`` → the ``repro.kernels`` ops wrappers), one
+    all_gather/argmax to pick the global best candidate, and one psum to
+    fetch its column — greedy's k-round sequential latency is the
+    baseline DASH's O(log n) adaptivity beats.  ``key`` is unused
+    (greedy is deterministic) and accepted for registry uniformity.
+    """
+    n, n_local = _check_sharding(obj, mesh, model_axis)
+    run = _greedy_runner(obj, int(k), mesh, n_local, n, model_axis, None)
+    sel, count, value, values = run(obj.X, jax.random.PRNGKey(0))
+    return DistSelectResult(sel, count, value, values)
+
+
+def stochastic_greedy_distributed(
+    obj, k: int, key, mesh, *, subsample: int | None = None,
+    eps: float = 0.1, model_axis: str = "model",
+) -> DistSelectResult:
+    """Distributed stochastic greedy (subsampled argmax SDS_MA).
+
+    Identical noise layout to the single-device ``stochastic_greedy``
+    (replicated per-round Gumbel draw, global top-s threshold), so for
+    the same ``key`` the two runtimes select bitwise-identical sets —
+    the sharding only distributes the gain sweep and the argmax.
+
+    Unlike the single-device twin (which evaluates ``gains_subset`` for
+    the s sampled candidates only), each shard here sweeps its full
+    local block and masks to the sample: the column-based
+    ``DistributedObjective`` contract has no subset oracle, and the
+    block sweep IS the shard-parallel design — per-shard work is
+    n/P ≥ s/P either way at the mesh sizes this runtime targets.
+    """
+    from repro.core.greedy import subsample_size
+
+    n, n_local = _check_sharding(obj, mesh, model_axis)
+    s = (subsample_size(n, int(k), eps) if subsample is None
+         else max(1, min(int(subsample), n)))
+    run = _greedy_runner(obj, int(k), mesh, n_local, n, model_axis, s)
+    sel, count, value, values = run(obj.X, key)
+    return DistSelectResult(sel, count, value, values)
+
+
+def _oneshot_runner(obj, kk: int, mesh, n_local: int, n: int,
+                    model_axis: str, kind: str):
+    """Jitted sharded TOP-k / RANDOM executor (weak-cached).  One gain
+    sweep (TOP-k only), one all_gather for the global top-k, one psum
+    for the column fetch — a single adaptive round."""
+    def build():
+        from repro.core.estimators import gumbel_noise
+
+        def run(X_local, key_rep):
+            rank = jax.lax.axis_index(model_axis)
+            alive0 = jnp.sum(X_local * X_local, axis=0) > 0
+            ds0 = obj.dist_init(X_local)
+            if kind == "topk":
+                scores = obj.dist_gains(ds0, X_local)
+            else:
+                # Same (n,) draw ``sample_set_from_mask`` makes from this
+                # key on one device — replicated, then locally sliced.
+                scores = _local_noise_slice(
+                    gumbel_noise(key_rep, n), rank, n_local
+                )
+            scores = jnp.where(alive0, scores, -jnp.inf)
+            idx_l, owned, validg = _global_topk_commit(
+                scores, kk, n_local, rank, model_axis
+            )
+            C = _dist_gather_columns(X_local, idx_l, owned, model_axis)
+            ds = obj.dist_add_set(ds0, C, validg, X_local)
+            sel_local = jnp.zeros((n_local,), bool).at[
+                jnp.where(owned, idx_l, n_local)
+            ].set(True, mode="drop")
+            count = jax.lax.psum(
+                jnp.sum(owned.astype(jnp.int32)), model_axis
+            )
+            return sel_local, count, obj.dist_value(ds)
+
+        in_specs = (P(None, model_axis), P())
+        out_specs = (P(model_axis), P(), P())
+        return jax.jit(_shard_mapped(run, mesh, in_specs, out_specs))
+
+    return cached_runner(
+        obj, ("oneshot_dist", kind, kk, mesh, n_local, model_axis), build
+    )
+
+
+def top_k_distributed(obj, k: int, mesh, *, key=None,
+                      model_axis: str = "model") -> DistSelectResult:
+    """TOP-k on a device mesh: one sharded singleton-gain sweep, one
+    all_gather for the global top-k, one psum column fetch.  ``k > n``
+    is clamped like the single-device twin; zero (padding) columns are
+    excluded before the top-k so they can never burn a slot."""
+    n, n_local = _check_sharding(obj, mesh, model_axis)
+    kk = min(int(k), n)
+    run = _oneshot_runner(obj, kk, mesh, n_local, n, model_axis, "topk")
+    sel, count, value = run(obj.X, jax.random.PRNGKey(0))
+    return DistSelectResult(sel, count, value, jnp.zeros((0,), jnp.float32))
+
+
+def random_distributed(obj, k: int, key, mesh, *,
+                       model_axis: str = "model") -> DistSelectResult:
+    """RANDOM on a device mesh.  The sample is the global top-k of a
+    replicated Gumbel draw — bitwise the set single-device
+    ``random_select`` commits for the same key (modulo padding columns,
+    which are excluded here).  ``sel_count`` reports the committed size;
+    it can be < k when fewer than k candidates are alive."""
+    n, n_local = _check_sharding(obj, mesh, model_axis)
+    kk = min(int(k), n)
+    run = _oneshot_runner(obj, kk, mesh, n_local, n, model_axis, "random")
+    sel, count, value = run(obj.X, key)
+    return DistSelectResult(sel, count, value, jnp.zeros((0,), jnp.float32))
+
+
 def pad_ground_set(X, multiple: int):
     """Pad candidate columns with zeros to a multiple (zero columns can
     never be selected: the runner starts them outside the alive set, so

@@ -15,6 +15,15 @@ import jax
 import jax.numpy as jnp
 
 
+def gumbel_noise(key, n: int):
+    """(n,) i.i.d. Gumbel noise — the ONE noise layout every Gumbel-top-k
+    sampler draws from.  Distributed runners evaluate the same function
+    with a replicated key and slice their local block, which is what
+    makes their samples bitwise identical to the single-device ones."""
+    u = jax.random.uniform(key, (n,), minval=1e-9, maxval=1.0 - 1e-9)
+    return -jnp.log(-jnp.log(u))
+
+
 def sample_set_from_mask(key, mask, m: int):
     """Uniformly sample ≤ m distinct elements of the alive ``mask``.
 
@@ -23,10 +32,7 @@ def sample_set_from_mask(key, mask, m: int):
     (idx, valid): int32 (m,) indices and bool (m,) slot validity (invalid
     slots occur when fewer than m elements are alive).
     """
-    n = mask.shape[0]
-    u = jax.random.uniform(key, (n,), minval=1e-9, maxval=1.0 - 1e-9)
-    g = -jnp.log(-jnp.log(u))
-    scores = jnp.where(mask, g, -jnp.inf)
+    scores = jnp.where(mask, gumbel_noise(key, mask.shape[0]), -jnp.inf)
     vals, idx = jax.lax.top_k(scores, m)
     return idx.astype(jnp.int32), jnp.isfinite(vals)
 

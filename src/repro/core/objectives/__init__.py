@@ -2,23 +2,30 @@ from repro.core.objectives.base import (
     DistributedObjective,
     Objective,
     SupportsFilterEngine,
+    SupportsSubsetGains,
     normalize_columns,
 )
 from repro.core.objectives.regression import RegressionObjective
 from repro.core.objectives.classification import ClassificationObjective
 from repro.core.objectives.a_optimal import AOptimalityObjective
-from repro.core.objectives.diversity import ClusterDiversity, DiversifiedObjective
+from repro.core.objectives.diversity import (
+    ClusterDiversity,
+    DiversifiedObjective,
+    DiversityObjective,
+)
 from repro.core.objectives.r2 import R2Objective
 
 __all__ = [
     "DistributedObjective",
     "Objective",
     "SupportsFilterEngine",
+    "SupportsSubsetGains",
     "normalize_columns",
     "RegressionObjective",
     "ClassificationObjective",
     "AOptimalityObjective",
     "ClusterDiversity",
     "DiversifiedObjective",
+    "DiversityObjective",
     "R2Objective",
 ]

@@ -102,16 +102,21 @@ class AOptimalityObjective:
         z = jax.scipy.linalg.solve_triangular(L, B, lower=True)
         return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
 
-    def gains(self, state: AOptState):
-        W = state.W                                # (d, n) = M⁻¹X, cached
+    def _gains_cols(self, Xs, Ws):
+        """Sherman–Morrison gains for candidate columns ``Xs`` with their
+        shared-solve slabs ``Ws`` — the ONE use_kernel/ref dispatch
+        behind both the full sweep and the subset re-check."""
         if self.use_kernel:
             from repro.kernels.aopt_gains.ops import aopt_gains
 
-            g = aopt_gains(self.X, W, self.isig2)
-        else:
-            from repro.kernels.aopt_gains.ref import aopt_gains_ref
+            return aopt_gains(Xs, Ws, self.isig2)
+        from repro.kernels.aopt_gains.ref import aopt_gains_ref
 
-            g = aopt_gains_ref(self.X, W, self.isig2)
+        return aopt_gains_ref(Xs, Ws, self.isig2)
+
+    def gains(self, state: AOptState):
+        # state.W is the cached shared solve M⁻¹X
+        g = self._gains_cols(self.X, state.W)
         return jnp.where(state.sel_mask, 0.0, g)
 
     def _set_gain_cols(self, L, C, mask):
@@ -146,6 +151,14 @@ class AOptimalityObjective:
     def add_one(self, state: AOptState, a) -> AOptState:
         idx = jnp.full((1,), a, jnp.int32)
         return self.add_set(state, idx, jnp.ones((1,), bool))
+
+    def gains_subset(self, state: AOptState, idx):
+        """Singleton gains for the candidate subset ``idx`` only — lazy
+        greedy's batched re-check oracle.  The cached shared solve W
+        makes this a pure column gather + the fused ratio math."""
+        g = self._gains_cols(jnp.take(self.X, idx, axis=1),
+                             jnp.take(state.W, idx, axis=1))
+        return jnp.where(state.sel_mask[idx], 0.0, g)
 
     # -- sample-batched filter engine (DASH inner loop) -------------------
     def expand_factors(self, state: AOptState, idx, mask, W=None):

@@ -48,7 +48,11 @@ those wrappers.
 Distributed contract
 --------------------
 ``core.distributed.dash_distributed`` runs the SAME selection loop with
-the ground-set columns sharded over a mesh axis.  Inside ``shard_map``
+the ground-set columns sharded over a mesh axis — and the §5 baseline
+twins (``greedy_distributed``, ``stochastic_greedy_distributed``,
+``top_k_distributed``, ``random_distributed``) run against the SAME
+six-method contract, so implementing it once gives an objective the
+whole ``core.algorithms.select`` registry on both runtimes.  Inside ``shard_map``
 an objective cannot index its global ``X`` — every shard sees only its
 local column block, and sampled sets arrive as already-gathered column
 matrices ``C`` (a psum of one-hot GEMMs, see ``one_hot_columns``).  The
@@ -91,6 +95,21 @@ class Objective(Protocol):
 
     def add_set(self, state, idx, mask):
         """State for S ∪ R."""
+
+
+class SupportsSubsetGains(Objective, Protocol):
+    """Objectives that evaluate singleton gains for a candidate SUBSET.
+
+    ``gains_subset(state, idx) -> (len(idx),)`` must equal
+    ``gains(state)[idx]`` while touching only the gathered columns —
+    this is lazy greedy's batched re-check oracle (one fused sweep of B
+    stale candidates instead of a full (d, n) pass per pop).  All three
+    paper objectives and the diversity objectives implement it; callers
+    must treat it as optional (fall back to ``gains(state)[idx]``).
+    """
+
+    def gains_subset(self, state, idx) -> Array:
+        """(len(idx),) gains f_S(idx[j]); 0 for already-selected."""
 
 
 class SupportsFilterEngine(Objective, Protocol):

@@ -122,22 +122,25 @@ class ClassificationObjective:
         h = (X * X).T @ wgt                        # (n,)
         return (g * g) / (2.0 * h + self.gain_eps)
 
-    def gains(self, state: ClassificationState):
+    def _gains_cols(self, eta, Xs):
+        """Per-candidate Newton (or quadratic) gains at logits ``eta``
+        for candidate columns ``Xs`` — the ONE gain_mode/use_kernel
+        dispatch behind both the full sweep and the subset re-check."""
         if self.gain_mode == "quadratic":
-            gains = self._quadratic_gains(state.eta)
-        elif self.use_kernel:
+            return self._quadratic_gains(eta, Xs)
+        if self.use_kernel:
             from repro.kernels.logistic_gains.ops import logistic_gains
 
-            gains = logistic_gains(
-                self.X, self.y, state.eta, steps=self.newton_gain_steps
-            )
-        else:
-            from repro.kernels.logistic_gains.ref import logistic_gains_ref
+            return logistic_gains(Xs, self.y, eta,
+                                  steps=self.newton_gain_steps)
+        from repro.kernels.logistic_gains.ref import logistic_gains_ref
 
-            gains = logistic_gains_ref(
-                self.X, self.y, state.eta, steps=self.newton_gain_steps
-            )
-        return jnp.where(state.sel_mask, 0.0, gains)
+        return logistic_gains_ref(Xs, self.y, eta,
+                                  steps=self.newton_gain_steps)
+
+    def gains(self, state: ClassificationState):
+        return jnp.where(state.sel_mask, 0.0,
+                         self._gains_cols(state.eta, self.X))
 
     def _refit(self, sup_cols, sup_mask, w0, steps):
         """Damped IRLS on a fixed padded support.  Returns (w, eta, ll)."""
@@ -207,6 +210,13 @@ class ClassificationObjective:
     def add_one(self, state: ClassificationState, a) -> ClassificationState:
         idx = jnp.full((1,), a, jnp.int32)
         return self.add_set(state, idx, jnp.ones((1,), bool))
+
+    def gains_subset(self, state: ClassificationState, idx):
+        """Singleton gains for the candidate subset ``idx`` only — lazy
+        greedy's batched re-check oracle (the per-candidate Newton sweep
+        over the gathered columns instead of all of X)."""
+        g = self._gains_cols(state.eta, jnp.take(self.X, idx, axis=1))
+        return jnp.where(state.sel_mask[idx], 0.0, g)
 
     # -- sample-batched filter engine (DASH inner loop) -------------------
     def expand_logits(self, state: ClassificationState, idx, mask):

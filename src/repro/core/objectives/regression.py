@@ -172,16 +172,22 @@ class RegressionObjective:
         return state.value
 
     # -- oracles ----------------------------------------------------------
-    def gains(self, state: RegressionState):
+    def _gains_cols(self, state: RegressionState, Xs, cs):
+        """Normalized singleton gains for candidate columns ``Xs`` with
+        squared norms ``cs`` — the ONE use_kernel/ref dispatch behind
+        both the full sweep and the subset re-check."""
         if self.use_kernel:
             from repro.kernels.marginal_gains.ops import regression_gains
 
-            g = regression_gains(self.X, state.Q, state.resid, self.col_sq)
+            g = regression_gains(Xs, state.Q, state.resid, cs)
         else:
             from repro.kernels.marginal_gains.ref import regression_gains_ref
 
-            g = regression_gains_ref(self.X, state.Q, state.resid, self.col_sq)
-        g = g / self.ysq
+            g = regression_gains_ref(Xs, state.Q, state.resid, cs)
+        return g / self.ysq
+
+    def gains(self, state: RegressionState):
+        g = self._gains_cols(state, self.X, self.col_sq)
         return jnp.where(state.sel_mask, 0.0, g)
 
     def set_gain(self, state: RegressionState, idx, mask):
@@ -209,6 +215,15 @@ class RegressionObjective:
     def add_one(self, state: RegressionState, a) -> RegressionState:
         idx = jnp.full((1,), a, jnp.int32)
         return self.add_set(state, idx, jnp.ones((1,), bool))
+
+    def gains_subset(self, state: RegressionState, idx):
+        """Singleton gains f_S(a) for the candidate subset ``idx`` only —
+        lazy greedy's batched re-check oracle.  Same math as ``gains``
+        (one fused sweep through the marginal-gains wrapper) over the
+        gathered columns instead of the whole ground set."""
+        g = self._gains_cols(state, jnp.take(self.X, idx, axis=1),
+                             jnp.take(self.col_sq, idx))
+        return jnp.where(state.sel_mask[idx], 0.0, g)
 
     # -- sample-batched filter engine (DASH inner loop) -------------------
     def expand_basis(self, state: RegressionState, idx, mask):

@@ -1,0 +1,344 @@
+"""The selection-algorithm registry (core/algorithms.py) + §5 baselines.
+
+Single-device coverage: registry dispatch and result normalization,
+stochastic greedy, the batched lazy greedy (exactness vs greedy on the
+submodular diversity objective), the TOP-k / RANDOM capacity-edge
+guards, and the slow seed-sweep quality harness that pins the paper's
+qualitative ordering (DASH ≥ stochastic-greedy ≥ RANDOM, greedy ≥
+TOP-k).  Distributed parity lives in test_distributed_runtime.py
+(TestDistributedBaselines).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AOptimalityObjective,
+    DiversityObjective,
+    RegressionObjective,
+    algorithm_cost,
+    available_algorithms,
+    dash_auto,
+    get_algorithm,
+    greedy,
+    lazy_greedy,
+    normalize_columns,
+    random_select,
+    select,
+    stochastic_greedy,
+    top_k_select,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_regression(seed=0, d=48, n=32, k=6, noise=0.1):
+    rng = np.random.default_rng(seed)
+    X0 = rng.normal(size=(d, n)) + 0.4 * rng.normal(size=(d, 1))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32))
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, k)
+    y = jnp.asarray(X0 @ w + noise * rng.normal(size=d), jnp.float32)
+    return RegressionObjective(X, y, kmax=k), k
+
+
+@pytest.fixture(scope="module")
+def reg():
+    return make_regression()
+
+
+class TestRegistry:
+    def test_roster(self):
+        algos = available_algorithms()
+        for name in ("dash", "greedy", "lazy_greedy", "stochastic_greedy",
+                     "topk", "random"):
+            assert name in algos
+        # every §5 competitor except the host-driven lazy greedy has a
+        # distributed twin
+        dist = available_algorithms(distributed=True)
+        assert set(dist) == {"dash", "greedy", "stochastic_greedy", "topk",
+                             "random"}
+
+    def test_unknown_algorithm(self, reg):
+        obj, k = reg
+        with pytest.raises(ValueError, match="unknown algorithm"):
+            select("gredy", obj, k)
+
+    def test_no_distributed_twin(self, reg):
+        obj, k = reg
+        assert get_algorithm("lazy_greedy").distributed is None
+        with pytest.raises(ValueError, match="no distributed twin"):
+            select("lazy_greedy", obj, k, mesh=object())
+
+    def test_normalized_results(self, reg):
+        """Every algorithm returns the same SelectionResult surface."""
+        obj, k = reg
+        for algo in available_algorithms():
+            opts = {"n_guesses": 2, "n_samples": 4} if algo == "dash" else {}
+            res = select(algo, obj, k, key=KEY, **opts)
+            assert res.sel_mask.shape == (obj.n,), algo
+            assert int(res.sel_count) == int(jnp.sum(res.sel_mask)), algo
+            assert int(res.sel_count) <= max(k, obj.kmax), algo
+            assert np.isfinite(float(res.value)), algo
+            assert res.values.ndim == 1, algo
+            assert res.raw is not None, algo
+
+    def test_select_matches_direct_calls(self, reg):
+        obj, k = reg
+        assert float(select("greedy", obj, k).value) == float(
+            greedy(obj, k).value
+        )
+        assert float(select("topk", obj, k).value) == float(
+            top_k_select(obj, k).value
+        )
+        assert float(select("random", obj, k, key=KEY).value) == float(
+            random_select(obj, k, KEY).value
+        )
+        assert float(
+            select("stochastic_greedy", obj, k, key=KEY).value
+        ) == float(stochastic_greedy(obj, k, KEY).value)
+
+    def test_select_dash_opt_vs_auto(self, reg):
+        """opt= pins a single guess; omitting it sweeps the lattice."""
+        obj, k = reg
+        g = float(greedy(obj, k).value)
+        r_pin = select("dash", obj, k, key=KEY, opt=g * 1.05, n_samples=4)
+        r_auto = select("dash", obj, k, key=KEY, n_samples=4, n_guesses=2)
+        assert int(r_pin.sel_count) <= k
+        assert int(r_auto.sel_count) <= k
+        # the auto lattice keeps the native lattice result accessible
+        assert hasattr(r_auto.raw, "trace")
+
+    def test_cost_accounting(self):
+        g = algorithm_cost("greedy", 100, 10)
+        assert g["adaptive_rounds"] == 10
+        s = algorithm_cost("stochastic_greedy", 100, 10)
+        assert s["adaptive_rounds"] == 10
+        assert s["oracle_calls"] < g["oracle_calls"]
+        assert algorithm_cost("topk", 100, 10)["adaptive_rounds"] == 1
+        assert algorithm_cost("random", 100, 10)["oracle_calls"] == 1
+        d = algorithm_cost("dash", 100, 10)
+        assert d["adaptive_rounds"] <= 10
+
+    def test_registry_rejects_duplicates(self):
+        from repro.core import AlgorithmSpec, register
+
+        with pytest.raises(ValueError, match="already registered"):
+            register(AlgorithmSpec(
+                name="greedy", single=lambda *a, **kw: None,
+                distributed=None, needs_key=False,
+                cost=lambda n, k: {}, summary=""))
+
+
+class TestStochasticGreedy:
+    def test_quality_between_greedy_and_random(self, reg):
+        obj, k = reg
+        g = float(greedy(obj, k).value)
+        s = float(stochastic_greedy(obj, k, KEY).value)
+        assert 0.0 < s <= g + 1e-5
+
+    def test_deterministic_per_key(self, reg):
+        obj, k = reg
+        r1 = stochastic_greedy(obj, k, KEY)
+        r2 = stochastic_greedy(obj, k, KEY)
+        assert float(r1.value) == float(r2.value)
+        assert bool(jnp.all(r1.sel_mask == r2.sel_mask))
+
+    def test_full_subsample_matches_greedy(self, reg):
+        """s = n makes every round's sample the whole alive set — the
+        subsampled argmax degenerates to exact greedy."""
+        obj, k = reg
+        r = stochastic_greedy(obj, k, KEY, subsample=obj.n)
+        g = greedy(obj, k)
+        np.testing.assert_array_equal(np.asarray(r.sel_mask),
+                                      np.asarray(g.sel_mask))
+        np.testing.assert_allclose(float(r.value), float(g.value),
+                                   rtol=1e-6)
+
+    def test_subsample_clamped(self, reg):
+        obj, k = reg
+        r = stochastic_greedy(obj, k, KEY, subsample=10 * obj.n)
+        assert int(jnp.sum(r.sel_mask)) == k
+
+    def test_distributed_parity_rule_on_ties(self):
+        """The subset argmax scatters back to ground-set coordinates, so
+        equal-gain candidates resolve to the lowest global index — the
+        distributed twin's rule.  Pin it on an all-tied objective."""
+        clusters = jnp.zeros((12,), jnp.int32)      # every gain identical
+        obj = DiversityObjective(clusters, 1, kmax=12)
+        r = stochastic_greedy(obj, 3, KEY, subsample=12)
+        g = greedy(obj, 3)
+        np.testing.assert_array_equal(np.asarray(r.sel_idx),
+                                      np.asarray(g.sel_idx))
+
+
+class TestLazyGreedy:
+    def test_exact_on_submodular_diversity(self):
+        """Minoux's invariant holds for submodular f: lazy greedy must
+        reproduce greedy pick for pick, through the batched re-check."""
+        rng = np.random.default_rng(5)
+        clusters = jnp.asarray(rng.integers(0, 7, size=60), jnp.int32)
+        obj = DiversityObjective(clusters, 7, kmax=20)
+        g = greedy(obj, 14)
+        for batch in (1, 4, 32):
+            l = lazy_greedy(obj, 14, batch=batch)
+            np.testing.assert_array_equal(np.asarray(l.sel_idx),
+                                          np.asarray(g.sel_idx))
+            np.testing.assert_allclose(np.asarray(l.values),
+                                       np.asarray(g.values), rtol=1e-6)
+
+    def test_close_to_greedy_on_regression(self, reg):
+        obj, k = reg
+        l = lazy_greedy(obj, k)
+        g = greedy(obj, k)
+        assert float(l.value) >= 0.95 * float(g.value)
+
+    def test_no_duplicate_picks_at_zero_gain_endgame(self):
+        """Rank-deficient ground set (d < n = k): once span(X_S) is
+        full, every remaining gain is 0.  The batched re-check must not
+        resurrect picked elements' -inf bounds (their gains_subset
+        re-check returns 0) — that used to let the zero-gain endgame
+        commit duplicates instead of distinct zero-gain candidates."""
+        rng = np.random.default_rng(3)
+        d, n = 4, 8
+        X = normalize_columns(jnp.asarray(rng.normal(size=(d, n)),
+                                          jnp.float32))
+        y = jnp.asarray(rng.normal(size=d), jnp.float32)
+        obj = RegressionObjective(X, y, kmax=n)
+        res = lazy_greedy(obj, n, batch=n)
+        picks = np.asarray(res.sel_idx)
+        assert len(set(picks.tolist())) == n, picks
+        assert int(jnp.sum(res.sel_mask)) == n
+
+    def test_k_exceeds_n_stops_after_n_distinct_picks(self):
+        """k > n must not pad the pick trace with duplicate re-commits."""
+        rng = np.random.default_rng(4)
+        n = 5
+        X = normalize_columns(jnp.asarray(rng.normal(size=(8, n)),
+                                          jnp.float32))
+        y = jnp.asarray(rng.normal(size=8), jnp.float32)
+        obj = RegressionObjective(X, y, kmax=n)
+        res = lazy_greedy(obj, n + 3)
+        picks = np.asarray(res.sel_idx)
+        assert picks.shape == (n,)
+        assert len(set(picks.tolist())) == n
+        assert res.values.shape == (n,)
+
+    def test_batch_must_be_positive(self, reg):
+        obj, k = reg
+        with pytest.raises(ValueError, match="batch"):
+            lazy_greedy(obj, k, batch=0)
+
+    def test_gains_subset_matches_gains(self):
+        """The batched re-check oracle must equal gains(state)[idx] for
+        every objective that implements it."""
+        obj, k = make_regression(seed=1)
+        rng = np.random.default_rng(0)
+        aobj = AOptimalityObjective(
+            jnp.asarray(rng.normal(size=(16, 24)), jnp.float32), kmax=6)
+        for o in (obj, aobj):
+            st = o.add_set(o.init(), jnp.arange(3, dtype=jnp.int32),
+                           jnp.ones((3,), bool))
+            idx = jnp.asarray([0, 2, 7, o.n - 1], jnp.int32)
+            np.testing.assert_allclose(
+                np.asarray(o.gains_subset(st, idx)),
+                np.asarray(o.gains(st))[np.asarray(idx)],
+                rtol=1e-5, atol=1e-7)
+
+
+class TestCapacityEdges:
+    def test_topk_k_exceeds_n(self, reg):
+        """k > n used to crash lax.top_k; it must clamp and report the
+        committed count."""
+        obj, _ = reg
+        res = top_k_select(obj, obj.n + 5)
+        assert int(res.sel_count) == int(jnp.sum(res.sel_mask))
+        assert int(jnp.sum(res.sel_mask)) == obj.n
+
+    def test_random_k_exceeds_n(self, reg):
+        obj, _ = reg
+        res = random_select(obj, obj.n + 5, KEY)
+        assert int(res.sel_count) == obj.n
+
+    def test_random_reports_committed_count(self, reg):
+        obj, k = reg
+        res = random_select(obj, k, KEY)
+        assert int(res.sel_count) == int(jnp.sum(res.sel_mask)) == k
+
+    def test_topk_small_k(self, reg):
+        obj, _ = reg
+        res = top_k_select(obj, 1)
+        assert int(res.sel_count) == 1
+        # the singleton with the largest gain
+        g = obj.gains(obj.init())
+        assert bool(res.sel_mask[int(jnp.argmax(g))])
+
+
+@pytest.mark.slow
+class TestQualityOrdering:
+    """Seed-sweep harness enforcing the §5 qualitative ordering on
+    synthetic data: DASH ≥ stochastic-greedy ≥ RANDOM and greedy ≥
+    TOP-k, in seed-mean objective value, for regression and
+    A-optimality.  This turns the benchmark tables' claims into a
+    regression test instead of a plot.
+
+    Orderings are asserted with multiplicative SLACK on the means (the
+    means, not every seed, must be ordered).  A-optimality compresses
+    the value range (RANDOM lands within a few percent of greedy), so
+    DASH-vs-stochastic-greedy is additionally pinned on the
+    greedy−random SPREAD: DASH must keep ≥ 30% of the spread above the
+    RANDOM floor — loose enough for the few-sample Monte-Carlo
+    estimates, tight enough that a DASH collapse to the floor (the
+    failure mode seen with bad (OPT, α) guesses) fails loudly."""
+
+    SEEDS = range(5)
+    SLACK = 0.05
+    MIN_SPREAD_FRAC = 0.3
+
+    def _means(self, make_obj, k, algos):
+        vals = {a: [] for a in algos}
+        for seed in self.SEEDS:
+            obj = make_obj(seed)
+            key = jax.random.PRNGKey(seed)
+            for a in algos:
+                if a == "dash":
+                    r = dash_auto(obj, k, key, n_samples=8, n_guesses=6,
+                                  eps=0.2, alphas=[0.3, 0.5, 0.7])
+                else:
+                    r = select(a, obj, k, key=key)
+                vals[a].append(float(r.value))
+        return {a: float(np.mean(v)) for a, v in vals.items()}
+
+    def _assert_ordering(self, m):
+        slack = self.SLACK
+        spread = m["greedy"] - m["random"]
+        assert spread > 0, m
+        assert m["dash"] >= m["stochastic_greedy"] * (1 - slack), m
+        assert m["dash"] >= m["random"] + self.MIN_SPREAD_FRAC * spread, m
+        assert m["stochastic_greedy"] >= m["random"] * (1 - slack), m
+        assert m["greedy"] >= m["topk"] * (1 - slack), m
+        # and the floor really is the floor
+        assert m["greedy"] >= m["random"] * (1 - slack), m
+
+    def test_regression_ordering(self):
+        def make_obj(seed):
+            obj, _ = make_regression(seed=seed, d=64, n=48, k=8)
+            return obj
+
+        self._assert_ordering(self._means(
+            make_obj, 8,
+            ("dash", "greedy", "stochastic_greedy", "topk", "random")))
+
+    def test_aopt_ordering(self):
+        def make_obj(seed):
+            rng = np.random.default_rng(seed)
+            X = rng.normal(size=(24, 48))
+            X = jnp.asarray(X / np.linalg.norm(X, axis=0, keepdims=True),
+                            jnp.float32)
+            return AOptimalityObjective(X, kmax=8)
+
+        self._assert_ordering(self._means(
+            make_obj, 8,
+            ("dash", "greedy", "stochastic_greedy", "topk", "random")))

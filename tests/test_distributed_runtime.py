@@ -33,6 +33,10 @@ from repro.core import (
     dash,
     greedy,
     normalize_columns,
+    random_select,
+    select,
+    stochastic_greedy,
+    top_k_select,
 )
 from repro.core.distributed import (
     dash_auto_distributed,
@@ -231,6 +235,126 @@ class TestPodGuessLattice:
         with pytest.raises(AssertionError):
             dash_auto_distributed(obj, cfg.k, jax.random.PRNGKey(0),
                                   pod_mesh, n_guesses=3)
+
+
+@pytest.fixture(scope="module")
+def aopt_obj():
+    rng = np.random.default_rng(2)
+    d, n = 24, 48
+    X = rng.normal(size=(d, n))
+    X = jnp.asarray(X / np.linalg.norm(X, axis=0, keepdims=True), jnp.float32)
+    return AOptimalityObjective(X, kmax=8)
+
+
+@pytest.fixture(scope="module")
+def logi_obj():
+    rng = np.random.default_rng(3)
+    d, n, k = 120, 32, 6
+    X0 = rng.normal(size=(d, n))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32)) * np.sqrt(d)
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, k)
+    y = jnp.asarray((1 / (1 + np.exp(-X0 @ w)) > 0.5).astype(np.float32))
+    return ClassificationObjective(X, y, kmax=k, newton_steps=4,
+                                   newton_gain_steps=2)
+
+
+class TestDistributedBaselines:
+    """Every §5 competitor's distributed twin vs its single-device
+    implementation, through the one ``select()`` entry point.
+
+    The twins are CONSTRUCTED for set-identical picks: greedy's
+    all_gather argmax resolves ties in global index order, and the
+    stochastic/random samplers draw the same replicated Gumbel noise
+    the single-device Gumbel-top-k uses.  So the parity assertion is
+    sel_mask equality plus value agreement — bitwise for the one-shot
+    selectors (identical column order into identical dense math),
+    ≤ 1e-3 relative where f32 summation order may differ (the greedy
+    family's incremental state updates).
+    """
+
+    ALGOS = ("greedy", "stochastic_greedy", "topk", "random")
+
+    def _single(self, algo, obj, k, key):
+        return {
+            "greedy": lambda: greedy(obj, k),
+            "stochastic_greedy": lambda: stochastic_greedy(obj, k, key),
+            "topk": lambda: top_k_select(obj, k),
+            "random": lambda: random_select(obj, k, key),
+        }[algo]()
+
+    def _parity(self, algo, obj, k, mesh, *, rtol=1e-3):
+        key = jax.random.PRNGKey(0)
+        s = self._single(algo, obj, k, key)
+        d = select(algo, obj, k, key=key, mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(d.sel_mask),
+                                      np.asarray(s.sel_mask))
+        assert int(d.sel_count) == int(jnp.sum(s.sel_mask))
+        np.testing.assert_allclose(float(d.value), float(s.value),
+                                   rtol=rtol, atol=1e-6)
+        return s, d
+
+    @pytest.mark.parametrize("algo", ALGOS)
+    def test_regression_parity(self, algo, reg_setup, mesh):
+        obj, cfg, _ = reg_setup
+        s, d = self._parity(algo, obj, cfg.k, mesh)
+        if algo in ("greedy", "stochastic_greedy"):
+            # per-pick value traces agree (f32 summation order only)
+            np.testing.assert_allclose(np.asarray(d.values),
+                                       np.asarray(s.values),
+                                       rtol=1e-3, atol=1e-6)
+
+    @pytest.mark.parametrize("algo", ALGOS)
+    def test_aopt_parity(self, algo, aopt_obj, mesh):
+        self._parity(algo, aopt_obj, 8, mesh)
+
+    @pytest.mark.parametrize("algo", ALGOS)
+    def test_logistic_parity(self, algo, logi_obj, mesh):
+        self._parity(algo, logi_obj, 6, mesh)
+
+    def test_deterministic(self, reg_setup, mesh):
+        obj, cfg, _ = reg_setup
+        key = jax.random.PRNGKey(7)
+        for algo in self.ALGOS:
+            r1 = select(algo, obj, cfg.k, key=key, mesh=mesh)
+            r2 = select(algo, obj, cfg.k, key=key, mesh=mesh)
+            assert float(r1.value) == float(r2.value), algo
+            assert bool(jnp.all(r1.sel_mask == r2.sel_mask)), algo
+
+    @pytest.mark.parametrize("algo", ALGOS)
+    def test_capacity_k_exceeds_n(self, algo, aopt_obj, mesh):
+        """k > n must clamp (one-shot selectors) / saturate (greedy
+        family) at the ground-set size instead of crashing top_k or
+        burning duplicate slots."""
+        n = aopt_obj.n
+        res = select(algo, aopt_obj, n + 16, key=jax.random.PRNGKey(0),
+                     mesh=mesh)
+        assert int(res.sel_count) == n
+        assert int(jnp.sum(res.sel_mask)) == n
+
+    def test_padding_never_selected(self, reg_setup, mesh):
+        """Zero pad columns are dead for every distributed baseline."""
+        obj, cfg, _ = reg_setup
+        Xp, n_real = pad_ground_set(obj.X, 80)          # 64 → 80 columns
+        obj_p = RegressionObjective(Xp, obj.y, kmax=cfg.k)
+        for algo in self.ALGOS:
+            res = select(algo, obj_p, cfg.k, key=jax.random.PRNGKey(0),
+                         mesh=mesh)
+            assert not bool(jnp.any(res.sel_mask[n_real:])), algo
+            assert int(res.sel_count) <= cfg.k, algo
+
+    def test_select_dispatches_sharded_dash(self, reg_setup, mesh):
+        """select('dash', ..., mesh, opt=...) routes to dash_distributed
+        and matches the direct call bitwise."""
+        obj, cfg, g = reg_setup
+        key = jax.random.PRNGKey(0)
+        via_select = select("dash", obj, cfg.k, key=key, mesh=mesh,
+                            opt=g * 1.05, eps=cfg.eps, alpha=cfg.alpha,
+                            n_samples=cfg.n_samples)
+        direct = dash_distributed(obj, cfg, key, g * 1.05, mesh)
+        assert float(via_select.value) == float(direct.value)
+        np.testing.assert_array_equal(np.asarray(via_select.sel_mask),
+                                      np.asarray(direct.sel_mask))
 
 
 def test_capacity_edge_fills_to_k_and_stops(reg_setup, mesh):
