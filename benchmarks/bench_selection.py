@@ -566,6 +566,67 @@ def run_baselines(full: bool = False):
              f"{times['greedy'] / max(times['stochastic_greedy'], 1e-12):.2f}x")
 
 
+#: --suite train roster: selection policies A/B'd at equal step count.
+_TRAIN_ALGOS = (
+    ("dash", {"n_samples": 4}),
+    ("stochastic_greedy", {}),
+    ("random", {}),
+    ("none", None),
+)
+
+
+def run_train(full: bool = False):
+    """--suite train: tokens-to-loss for selection-in-the-loop.
+
+    Trains the reduced smollm config from the SAME init and token
+    stream under each selection policy (dash / stochastic_greedy /
+    random coreset picks, plus the no-selection stream baseline) and
+    reports the tail loss at equal step count — i.e. equal *trained*
+    tokens, the honest axis for data selection: a selection win means
+    better loss from the same token budget.  Selection-step overhead is
+    recorded per row (``selection_s`` / ``selection_frac``) so the
+    quality-vs-overhead tradeoff lands in the same artifact, and the
+    summary row carries the dash-vs-random gap the acceptance criterion
+    asks for.
+    """
+    from repro.configs import TrainConfig, get_reduced_config
+    from repro.data.pipeline import TokenPipeline
+    from repro.data.selection import BatchSelector
+    from repro.data.synthetic import make_lm_tokens
+    from repro.models import build_model
+    from repro.train.loop import train_loop
+
+    steps = 60 if full else 30
+    batch, seq = 8, 32
+    cfg = get_reduced_config("smollm-135m")
+    model = build_model(cfg)
+    tokens = make_lm_tokens(0, 400_000, cfg.vocab_size)
+    tcfg = TrainConfig(total_steps=steps, learning_rate=3e-3,
+                       warmup_steps=max(steps // 10, 1))
+    finals = {}
+    for algo, opts in _TRAIN_ALGOS:
+        selector = None if opts is None else BatchSelector(
+            k=batch, algo=algo, feature_mode="grad", embed_dim_cap=32,
+            **opts)
+        with TokenPipeline(tokens, batch, seq) as pipeline:
+            t0 = time.perf_counter()
+            res = train_loop(model, tcfg, pipeline, selector=selector,
+                             selection_every=2, selection_pool_factor=4,
+                             log_every=10 ** 9)
+            t = time.perf_counter() - t0
+        tail = max(steps // 5, 1)
+        finals[algo] = float(np.mean(res.losses[-tail:]))
+        emit(f"train/{algo}/tokens_to_loss", t * 1e6,
+             f"final_loss={finals[algo]:.4f};tokens={steps * batch * seq};"
+             f"selection_s={res.selection_time_s:.2f};"
+             f"selection_frac={res.selection_time_s / max(t, 1e-9):.2f}")
+    emit("train/dash_vs_random", 0.0,
+         f"random_minus_dash={finals['random'] - finals['dash']:+.4f};"
+         f"dash={finals['dash']:.4f};random={finals['random']:.4f};"
+         f"none={finals['none']:.4f}")
+    return finals
+
+
 def run(full: bool = False):
     scale = 1 if full else 4
 
@@ -632,17 +693,19 @@ def main() -> None:
     ap.add_argument(
         "--suite", default="all",
         help="comma-separated subset of {paper, distributed, lattice, "
-             "baselines} or 'all'.  'paper' = Fig 2/3/4 analogues; "
-             "'distributed' = dash_distributed vs dash for all three "
-             "objectives; 'lattice' = loop vs batched vs pod-sharded "
-             "(OPT, α) guess lattice; 'baselines' = the full select() "
-             "registry (§5 competitors), value-vs-k / single-vs-sharded "
-             "/ time-vs-n (the distributed CI job runs "
-             "'distributed,lattice,baselines' with 8 forced host "
-             "devices)",
+             "baselines, train} or 'all'.  'paper' = Fig 2/3/4 "
+             "analogues; 'distributed' = dash_distributed vs dash for "
+             "all three objectives; 'lattice' = loop vs batched vs "
+             "pod-sharded (OPT, α) guess lattice; 'baselines' = the "
+             "full select() registry (§5 competitors), value-vs-k / "
+             "single-vs-sharded / time-vs-n; 'train' = tokens-to-loss "
+             "for coreset selection-in-the-loop, dash vs stochastic "
+             "greedy vs random vs no selection (the distributed CI job "
+             "runs 'distributed,lattice,baselines,train' with 8 forced "
+             "host devices)",
     )
     args = ap.parse_args()
-    known = {"paper", "distributed", "lattice", "baselines"}
+    known = {"paper", "distributed", "lattice", "baselines", "train"}
     suites = (known if args.suite == "all"
               else {s.strip() for s in args.suite.split(",")})
     unknown = suites - known
@@ -656,6 +719,8 @@ def main() -> None:
         run_lattice(full=args.full)
     if "baselines" in suites:
         run_baselines(full=args.full)
+    if "train" in suites:
+        run_train(full=args.full)
     if args.json:
         payload = {"suite": f"bench_selection/{args.suite}",
                    "backend": jax.default_backend(),

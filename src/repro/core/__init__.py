@@ -2,8 +2,8 @@
 
 Public API:
     objectives: RegressionObjective, ClassificationObjective,
-                AOptimalityObjective, DiversityObjective,
-                DiversifiedObjective
+                AOptimalityObjective, CoresetObjective,
+                DiversityObjective, DiversifiedObjective
     algorithms: select (registry entry point), dash, dash_auto,
                 DashConfig, greedy, lazy_greedy, stochastic_greedy,
                 adaptive_sequencing, top_k_select, random_select,
@@ -16,6 +16,7 @@ from repro.core.objectives import (
     AOptimalityObjective,
     ClassificationObjective,
     ClusterDiversity,
+    CoresetObjective,
     DiversifiedObjective,
     DiversityObjective,
     RegressionObjective,
@@ -54,6 +55,7 @@ __all__ = [
     "AOptimalityObjective",
     "ClassificationObjective",
     "ClusterDiversity",
+    "CoresetObjective",
     "DiversifiedObjective",
     "DiversityObjective",
     "RegressionObjective",

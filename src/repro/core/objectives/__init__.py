@@ -8,6 +8,11 @@ from repro.core.objectives.base import (
 from repro.core.objectives.regression import RegressionObjective
 from repro.core.objectives.classification import ClassificationObjective
 from repro.core.objectives.a_optimal import AOptimalityObjective
+from repro.core.objectives.coreset import (
+    CoresetObjective,
+    coreset_features,
+    prepare_feature_columns,
+)
 from repro.core.objectives.diversity import (
     ClusterDiversity,
     DiversifiedObjective,
@@ -24,6 +29,9 @@ __all__ = [
     "RegressionObjective",
     "ClassificationObjective",
     "AOptimalityObjective",
+    "CoresetObjective",
+    "coreset_features",
+    "prepare_feature_columns",
     "ClusterDiversity",
     "DiversifiedObjective",
     "DiversityObjective",

@@ -1,0 +1,130 @@
+"""Training-batch coreset selection as Bayesian A-optimal design — the
+repo's fourth first-class ``DistributedObjective``.
+
+Theory hook: Elenberg et al. ("RSC implies weak submodularity") and
+Khanna et al.'s weakly submodular feature selection license exactly the
+gradient/embedding-feature objectives a training loop needs for data
+pruning (PAPERS.md).  Each candidate example is a stimulus column — its
+pooled embedding or last-layer gradient under the current model — and
+picking the batch that maximally reduces posterior variance over a
+linear probe of that feature space is Bayesian A-optimal design (paper
+Cor. 9).  The objective therefore *is* ``AOptimalityObjective`` on a
+prepared feature matrix: rank-1 extensible state (Sherman–Morrison /
+Woodbury), ``filter_gains_batch`` through the fused filter engine, and
+the full column-based distributed contract come from the parent — this
+module owns the feature preparation (``prepare_feature_columns``,
+``coreset_features``) and the real-vs-padded bookkeeping a sharded
+training mesh needs.
+
+This is the "adding a fourth objective" recipe of docs/distributed.md,
+exercised: tests/test_objectives.py checks the dist_* oracles against
+their index forms and tests/test_distributed_runtime.py asserts
+single-vs-sharded parity for ``select("dash", CoresetObjective(...),
+k, key, mesh=mesh)`` on the trainer's (data, model) mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objectives.a_optimal import AOptimalityObjective
+
+#: Feature extraction modes for :func:`coreset_features` —
+#: "embed"  : mean-pooled embedding-table lookup (no forward pass; the
+#:            cheap frozen-backbone proxy),
+#: "hidden" : mean-pooled final hidden states (one forward pass),
+#: "grad"   : mean-pooled last-layer CE gradient w.r.t. the pre-head
+#:            hidden state, (softmax(logits) − onehot) @ headᵀ — the
+#:            CRAIG/GradMatch-style signal that tracks what the model
+#:            currently gets wrong (one forward pass + the analytic
+#:            last-layer backward, no full backprop).
+FEATURE_MODES = ("embed", "hidden", "grad")
+
+
+def prepare_feature_columns(feats, *, dim_cap: int = 64, key=None):
+    """(pool, feat_dim) per-example features → (d, n) stimulus columns.
+
+    Random-projects to ≤ ``dim_cap`` dims (the A-opt state is d×d, so
+    selection cost is decoupled from the model width) and L2-normalizes
+    each example's column so the design objective scores directional
+    coverage rather than feature magnitude.
+    """
+    E = jnp.asarray(feats, jnp.float32)
+    p, d = E.shape
+    if d > dim_cap:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        R = jax.random.normal(key, (d, dim_cap)) / jnp.sqrt(d)
+        E = E @ R
+    E = E / jnp.maximum(jnp.linalg.norm(E, axis=1, keepdims=True), 1e-9)
+    return E.T
+
+
+def coreset_features(model, params, batch, *, mode: str = "grad"):
+    """Per-example feature vectors (B, feat) for coreset selection.
+
+    Runs under the caller's jit/mesh context — the training loop jits
+    this once next to its train step so candidate scoring shards over
+    the same batch axes as training itself.
+    """
+    if mode not in FEATURE_MODES:
+        raise ValueError(f"mode must be one of {FEATURE_MODES}, got {mode!r}")
+    tokens = batch["tokens"]
+    if mode == "embed":
+        emb = jnp.take(params["embed"], tokens, axis=0)     # (B, S, D)
+        return jnp.mean(emb.astype(jnp.float32), axis=1)
+    cfg = model.cfg
+    if cfg.vision is not None or cfg.is_encdec:
+        raise NotImplementedError(
+            "forward-pass coreset features support plain decoder LMs; "
+            "use mode='embed' for vision/enc-dec batches")
+    x = model._embed_tokens(params, tokens)
+    h, _, _ = model._backbone(params, x, impl="full", collect_cache=False)
+    if mode == "hidden":
+        return jnp.mean(h.astype(jnp.float32), axis=1)
+    # mode == "grad": analytic dCE/dh of the tied/untied LM head, pooled
+    # over the supervised positions (the same shift/mask as model.loss).
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    head = head.astype(jnp.float32)                          # (D, V)
+    logits = (h.astype(jnp.float32)) @ head                  # (B, S, V)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    lmask = jnp.ones(labels.shape, jnp.float32).at[:, -1].set(0.0)
+    err = jax.nn.softmax(logits, axis=-1) - jax.nn.one_hot(
+        labels, logits.shape[-1], dtype=jnp.float32)
+    g = jnp.einsum("bsv,dv->bsd", err, head)                 # dCE/dh
+    denom = jnp.maximum(jnp.sum(lmask, axis=1, keepdims=True), 1.0)
+    return jnp.sum(g * lmask[:, :, None], axis=1) / denom
+
+
+class CoresetObjective(AOptimalityObjective):
+    """A-optimal design over per-example feature columns.
+
+    Inherits every oracle — init/gains/set_gain/add_set, the fused
+    filter engine, and the six dist_* methods — from
+    :class:`AOptimalityObjective`; adds ``n_real`` so callers that pad
+    the candidate axis to a mesh's model-axis multiple
+    (``pad_ground_set``) can map the selected mask back to real pool
+    rows without re-deriving the pre-pad count.
+    """
+
+    def __init__(self, X, kmax: int, *, beta2: float = 1.0,
+                 sigma2: float = 1.0, n_real: int | None = None, **kw):
+        super().__init__(X, kmax, beta2=beta2, sigma2=sigma2, **kw)
+        self.n_real = self.n if n_real is None else int(n_real)
+
+    @classmethod
+    def from_features(cls, feats, kmax: int, *, dim_cap: int = 64, key=None,
+                      beta2: float = 1.0, sigma2: float = 1.0,
+                      pad_multiple: int = 1, **kw) -> "CoresetObjective":
+        """Build from raw (pool, feat_dim) features: project + normalize
+        via :func:`prepare_feature_columns`, then zero-pad the candidate
+        axis to ``pad_multiple`` (a mesh's model-axis size) — zero
+        columns are never selected."""
+        X = prepare_feature_columns(feats, dim_cap=dim_cap, key=key)
+        n_real = X.shape[1]
+        if pad_multiple > 1:
+            from repro.core.distributed import pad_ground_set
+
+            X, _ = pad_ground_set(X, pad_multiple)
+        return cls(X, kmax, beta2=beta2, sigma2=sigma2, n_real=n_real, **kw)

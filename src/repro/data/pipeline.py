@@ -2,11 +2,19 @@
 
 ``TokenPipeline`` cuts a token stream into (batch, seq) examples with a
 deterministic per-step mapping (so restart from checkpoint step N replays
-the exact same data order — a fault-tolerance requirement), and a
-background prefetch thread.
+the exact same data order — a fault-tolerance requirement), a pool mode
+that over-provisions selection candidates from a provably disjoint RNG
+stream, and a background prefetch thread with deterministic shutdown
+(``close()`` joins; the pipeline is a context manager).
 
 ``shard_batch`` places a host batch onto the mesh with batch-axis
 sharding (pod+data).
+
+RNG streams: every draw is seeded with a ``np.random.SeedSequence`` over
+``(seed, stream_tag, step)`` — the host-side analogue of
+``jax.random.fold_in`` — so the per-step batch stream and the selection
+pool stream can never collide (unlike arithmetic on the seed such as
+the old ``step * 7919 + j``, where distinct (step, j) pairs alias).
 """
 
 from __future__ import annotations
@@ -22,13 +30,20 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.sharding.partitioning import batch_axes_for_mesh
 
+#: Stream tags for the (seed, tag, step) SeedSequence entropy — distinct
+#: tags give statistically independent streams for the same step.
+BATCH_STREAM = 0
+POOL_STREAM = 1
+
 
 class TokenPipeline:
     def __init__(self, tokens: np.ndarray, batch: int, seq: int,
-                 *, start_step: int = 0, prefetch: int = 2):
+                 *, start_step: int = 0, prefetch: int = 2,
+                 seed: int = 1234):
         self.tokens = tokens
         self.batch = batch
         self.seq = seq
+        self.seed = int(seed)
         self.step = start_step
         n_per_example = seq
         self.examples_total = len(tokens) // n_per_example
@@ -38,13 +53,33 @@ class TokenPipeline:
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
+    def _rng(self, stream: int, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence((self.seed, stream, step)))
+
+    def _rows(self, idx) -> np.ndarray:
+        return np.stack(
+            [self.tokens[i * self.seq:(i + 1) * self.seq] for i in idx]
+        ).astype(np.int32)
+
     def batch_for_step(self, step: int) -> dict:
         """Deterministic batch for a global step (restart-replayable)."""
-        rng = np.random.default_rng(1234 + step)
-        idx = rng.choice(self.examples_total, size=self.batch, replace=False)
-        rows = np.stack(
-            [self.tokens[i * self.seq:(i + 1) * self.seq] for i in idx])
-        return {"tokens": rows.astype(np.int32)}
+        idx = self._rng(BATCH_STREAM, step).choice(
+            self.examples_total, size=self.batch, replace=False)
+        return {"tokens": self._rows(idx)}
+
+    def pool_for_step(self, step: int, size: int) -> tuple[dict, np.ndarray]:
+        """Over-provisioned selection-candidate pool for the period
+        starting at ``step``: ``size`` distinct examples from the
+        POOL_STREAM (disjoint from every ``batch_for_step`` draw).
+
+        Returns ``(batch_dict, example_ids)`` — ids index the underlying
+        token stream, so selections can be logged/compared across runs.
+        """
+        size = int(min(size, self.examples_total))
+        idx = self._rng(POOL_STREAM, step).choice(
+            self.examples_total, size=size, replace=False)
+        return {"tokens": self._rows(idx)}, idx.astype(np.int64)
 
     def _worker(self):
         step = self.step
@@ -64,7 +99,48 @@ class TokenPipeline:
         return b
 
     def close(self):
+        """Deterministic shutdown: stop AND join the prefetch thread
+        (idempotent).  The queue is drained first so a ``put`` blocked
+        on a full queue observes the stop event within one timeout."""
         self._stop.set()
+        if self._thread.is_alive():
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "TokenPipeline":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+def pool_from_callable(batch_for_step, step: int,
+                       n_batches: int) -> tuple[dict, np.ndarray]:
+    """Candidate pool for legacy callable batch sources.
+
+    Draws ``n_batches`` batches at pseudo-steps carved out of a disjoint
+    region of the step space (the same fold-in idea as
+    ``TokenPipeline``'s POOL_STREAM, for sources seeded only by their
+    step argument): pool batch j of period-start ``step`` reads
+    pseudo-step ``(1 << 30) + step * n_batches + j`` — distinct across
+    (step, j) and disjoint from any realistic training-step range.
+
+    Returns ``(pooled_batch, example_ids)``; ids are pool-local (the
+    callable does not expose stable example identities).
+    """
+    base = (1 << 30) + step * n_batches
+    parts = [batch_for_step(base + j) for j in range(n_batches)]
+    pooled = {
+        k: np.concatenate([np.asarray(p[k]) for p in parts], axis=0)
+        for k in parts[0]
+    }
+    n = next(iter(pooled.values())).shape[0]
+    return pooled, np.arange(n, dtype=np.int64)
 
 
 def shard_batch(batch, mesh):

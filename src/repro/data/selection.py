@@ -1,85 +1,118 @@
-"""DASH-driven training-batch selection — the paper's technique as a
-first-class data-engine feature (DESIGN.md §4).
+"""Training-batch coreset selection through the selection stack.
 
-Experimental-design view: each candidate example is a stimulus vector
-(its pooled embedding under the current/frozen model).  Selecting the
-batch that maximally reduces posterior variance over a linear probe of
-the embedding space is exactly Bayesian A-optimal design (paper Cor. 9),
-so we run DASH on ``AOptimalityObjective`` over the pool.
+Experimental-design view: each candidate example is a stimulus column
+(its pooled-embedding or last-layer-gradient features under the current
+model), and selecting the batch that maximally reduces posterior
+variance over a linear probe of that feature space is Bayesian
+A-optimal design (paper Cor. 9) — ``CoresetObjective``.
 
-On a mesh, the candidate pool is sharded over the model axis via the
-generic ``core.distributed.dash_distributed`` runtime (the
-``AOptimalityObjective`` implements the ``DistributedObjective``
-contract); here we expose the single-controller API used by the
-training loop and examples.
+Every selection algorithm flows through the one registry entry point
+``core.algorithms.select``: ``algo="dash" | "greedy" | "lazy_greedy" |
+"stochastic_greedy" | "topk" | "random"`` is a one-string config swap,
+and a trainer-held ``(data, model)`` mesh dispatches the distributed
+twin (candidate columns sharded over the model axis, the fused filter
+engine underneath) instead of host-side selection.  This module
+deliberately has NO direct ``core.dash`` / ``core.greedy`` imports —
+the registry owns the roster.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.dash import DashConfig, dash
-from repro.core.greedy import greedy
-from repro.core.objectives.a_optimal import AOptimalityObjective
+from repro.core.algorithms import get_algorithm, select
+from repro.core.objectives.coreset import CoresetObjective, coreset_features
+
+_UNSET = object()
 
 
-class DashBatchSelector:
-    """Select k of a candidate pool by A-optimal design over embeddings."""
+class BatchSelector:
+    """Select ``k`` of a candidate pool with any registry algorithm.
 
-    def __init__(self, k: int, *, alpha: float = 0.5, eps: float = 0.25,
-                 n_samples: int = 6, beta2: float = 1.0, sigma2: float = 1.0,
-                 embed_dim_cap: int = 256, method: str = "dash"):
-        self.k = k
-        self.alpha = alpha
-        self.eps = eps
-        self.n_samples = n_samples
-        self.beta2 = beta2
-        self.sigma2 = sigma2
-        self.embed_dim_cap = embed_dim_cap
-        assert method in ("dash", "greedy", "random")
+    ``select(embeds, key)`` builds a :class:`CoresetObjective` from the
+    (pool, feat) candidate features and runs
+    ``core.algorithms.select(self.algo, obj, k, key, mesh=...)``.
+    ``mesh`` (held here or passed per call — the trainer's mesh wins)
+    pads the candidate axis to the mesh's model-axis multiple and runs
+    the distributed twin.
+
+    ``feature_mode`` ("embed" | "hidden" | "grad") is carried for the
+    training loop, which owns the jitted ``coreset_features`` call so
+    candidate scoring runs under the same jit/mesh as the train step.
+
+    For ``algo="dash"`` without an explicit ``opt=`` the OPT guess is
+    derived registry-natively: one ``topk`` sweep (a single adaptive
+    round, distributed-twin capable) bounds the value DASH must match,
+    scaled by ``opt_margin``.  This keeps (data, model) meshes working —
+    the pod-axis guess lattice needs a 3-axis mesh, which a trainer
+    doesn't hold.
+
+    Extra ``**algo_opts`` pass through to the algorithm (e.g.
+    ``n_samples=`` for dash, ``subsample=`` for stochastic greedy).
+    """
+
+    def __init__(self, k: int, *, algo: str = "dash", mesh=None,
+                 feature_mode: str = "grad", embed_dim_cap: int = 64,
+                 beta2: float = 1.0, sigma2: float = 1.0,
+                 opt_margin: float = 1.25, **algo_opts):
+        get_algorithm(algo)            # fail fast on unknown names
+        self.k = int(k)
+        self.algo = algo
+        self.mesh = mesh
+        self.feature_mode = feature_mode
+        self.embed_dim_cap = int(embed_dim_cap)
+        self.beta2 = float(beta2)
+        self.sigma2 = float(sigma2)
+        self.opt_margin = float(opt_margin)
+        self.algo_opts = dict(algo_opts)
+
+    def objective(self, embeds, key, *, k: int | None = None,
+                  mesh=_UNSET) -> CoresetObjective:
+        """The CoresetObjective this selector would run on ``embeds``
+        (exposed for parity tests and diagnostics)."""
+        mesh = self.mesh if mesh is _UNSET else mesh
+        return CoresetObjective.from_features(
+            embeds, kmax=self.k if k is None else int(k),
+            dim_cap=self.embed_dim_cap, key=key,
+            beta2=self.beta2, sigma2=self.sigma2,
+            pad_multiple=mesh.shape["model"] if mesh is not None else 1,
+        )
+
+    def select(self, embeds, key, *, k: int | None = None, mesh=_UNSET):
+        """embeds: (pool, feat) candidate features → (k,) pool indices."""
+        mesh = self.mesh if mesh is _UNSET else mesh
+        k = self.k if k is None else int(k)
+        kp, kd = jax.random.split(jnp.asarray(key))
+        obj = self.objective(embeds, kp, k=k, mesh=mesh)
+        opts = dict(self.algo_opts)
+        if self.algo == "dash" and "opt" not in opts:
+            ref = select("topk", obj, k, mesh=mesh)
+            opts["opt"] = float(ref.value) * self.opt_margin
+            opts.setdefault("n_samples", 4)
+        res = select(self.algo, obj, k, key=kd, mesh=mesh, **opts)
+        mask = jnp.asarray(res.sel_mask)[: obj.n_real]
+        idx = jnp.nonzero(mask, size=k, fill_value=-1)[0]
+        # backfill: DASH may select < k under a bad OPT guess
+        filler = jnp.nonzero(~mask, size=k, fill_value=0)[0]
+        return jnp.where(idx < 0, filler, idx)
+
+
+class DashBatchSelector(BatchSelector):
+    """Back-compat shim for the pre-registry API: ``method=`` maps onto
+    ``algo=`` and the old dash knobs are forwarded only when dash runs."""
+
+    def __init__(self, k: int, *, method: str = "dash", alpha: float = 0.5,
+                 eps: float = 0.25, n_samples: int = 6,
+                 embed_dim_cap: int = 256, **kw):
+        opts = ({"alpha": alpha, "eps": eps, "n_samples": n_samples}
+                if method == "dash" else {})
+        super().__init__(k, algo=method, feature_mode="embed",
+                         embed_dim_cap=embed_dim_cap, **opts, **kw)
         self.method = method
-
-    def _project(self, embeds, key):
-        """Random projection to ≤ embed_dim_cap dims (A-opt state is d×d)."""
-        p, d = embeds.shape
-        if d <= self.embed_dim_cap:
-            return embeds
-        R = jax.random.normal(key, (d, self.embed_dim_cap)) / jnp.sqrt(d)
-        return embeds @ R
-
-    def select(self, embeds, key):
-        """embeds: (pool, d) pooled example embeddings → (k,) indices."""
-        if self.method == "random":
-            return jax.random.choice(
-                key, embeds.shape[0], shape=(self.k,), replace=False)
-        kp, kd = jax.random.split(key)
-        E = self._project(jnp.asarray(embeds, jnp.float32), kp)
-        E = E / jnp.maximum(
-            jnp.linalg.norm(E, axis=1, keepdims=True), 1e-9)
-        obj = AOptimalityObjective(
-            E.T, kmax=self.k, beta2=self.beta2, sigma2=self.sigma2)
-        if self.method == "greedy":
-            res = greedy(obj, self.k)
-            return jnp.nonzero(res.sel_mask, size=self.k, fill_value=0)[0]
-        gres = greedy(obj, self.k)   # cheap OPT estimate for the guess
-        cfg = DashConfig(k=self.k, eps=self.eps, alpha=self.alpha,
-                         n_samples=self.n_samples)
-        res = dash(obj, cfg, kd, opt=gres.value * 1.05)
-        idx = jnp.nonzero(res.sel_mask, size=self.k, fill_value=-1)[0]
-        # backfill (DASH may select < k under a bad OPT guess)
-        need = idx < 0
-        filler = jnp.nonzero(~res.sel_mask, size=self.k, fill_value=0)[0]
-        return jnp.where(need, filler, idx)
 
 
 def pool_embeddings(model, params, batch):
-    """Mean-pooled pre-head hidden states as selection embeddings.
-
-    Uses the model's embedding table on tokens (cheap, frozen-backbone
-    proxy); swap in a full forward for higher-fidelity scoring.
-    """
-    tokens = batch["tokens"]
-    emb = jnp.take(params["embed"], tokens, axis=0)   # (B, S, D)
-    return jnp.mean(emb.astype(jnp.float32), axis=1)  # (B, D)
+    """Mean-pooled embedding-table features (the cheap frozen-backbone
+    proxy) — thin wrapper over ``coreset_features(mode="embed")``."""
+    return coreset_features(model, params, batch, mode="embed")

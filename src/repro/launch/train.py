@@ -3,8 +3,11 @@
 Single-host entry point: reduced configs run directly on CPU/GPU; on a
 TPU pod the same loop runs with ``--mesh`` (the per-host mesh slice comes
 from jax.distributed initialization, which the cluster scheduler
-provides).  The dry-run (launch/dryrun.py) is the no-hardware proof that
-the full configs lower on the production mesh.
+provides).  With ``--mesh`` AND ``--selection``, batch selection runs the
+distributed twin of the chosen algorithm on the trainer's (data, model)
+mesh — candidate columns sharded over the model axis.  The dry-run
+(launch/dryrun.py) is the no-hardware proof that the full configs lower
+on the production mesh.
 """
 
 from __future__ import annotations
@@ -12,10 +15,9 @@ from __future__ import annotations
 import argparse
 import logging
 
-import numpy as np
-
 from repro.configs import TrainConfig, get_config, get_reduced_config
-from repro.data.selection import DashBatchSelector
+from repro.data.pipeline import TokenPipeline
+from repro.data.selection import BatchSelector
 from repro.data.synthetic import make_lm_tokens
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
@@ -38,7 +40,16 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--mesh", action="store_true",
                     help="build a mesh from the host's devices")
-    ap.add_argument("--dash-selection", action="store_true")
+    ap.add_argument("--selection", "--dash-selection", action="store_true",
+                    dest="selection",
+                    help="coreset batch selection through the selection "
+                         "stack (--algo picks the registry algorithm)")
+    ap.add_argument("--algo", default="dash",
+                    help="any core.algorithms registry name")
+    ap.add_argument("--feature-mode", default="grad",
+                    choices=["embed", "hidden", "grad"])
+    ap.add_argument("--selection-every", type=int, default=2)
+    ap.add_argument("--pool-factor", type=int, default=4)
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO, format="%(message)s")
@@ -47,14 +58,6 @@ def main():
     model = build_model(cfg)
     tokens = make_lm_tokens(0, max(2_000_000, 4 * args.batch * args.seq),
                             cfg.vocab_size)
-    n_examples = len(tokens) // args.seq
-
-    def batch_for_step(step):
-        rng = np.random.default_rng(1234 + step)
-        idx = rng.choice(n_examples, size=args.batch, replace=False)
-        rows = np.stack([tokens[i * args.seq:(i + 1) * args.seq]
-                         for i in idx])
-        return {"tokens": rows.astype(np.int32)}
 
     tcfg = TrainConfig(
         total_steps=args.steps, learning_rate=args.lr, warmup_steps=20,
@@ -62,15 +65,25 @@ def main():
         grad_compression=args.grad_compression,
         checkpoint_every=max(args.steps // 4, 1),
     )
-    selector = DashBatchSelector(k=args.batch, method="dash") \
-        if args.dash_selection else None
+    if args.selection:
+        opts = {"n_samples": 4} if args.algo == "dash" else {}
+        selector = BatchSelector(k=args.batch, algo=args.algo,
+                                 feature_mode=args.feature_mode,
+                                 embed_dim_cap=32, **opts)
+    else:
+        selector = None
     mesh = make_host_mesh() if args.mesh else None
 
-    result = train_loop(model, tcfg, batch_for_step, mesh=mesh,
-                        ckpt_dir=args.ckpt_dir, selector=selector,
-                        log_every=max(args.steps // 20, 1))
+    with TokenPipeline(tokens, args.batch, args.seq) as pipeline:
+        result = train_loop(model, tcfg, pipeline, mesh=mesh,
+                            ckpt_dir=args.ckpt_dir, selector=selector,
+                            selection_every=args.selection_every,
+                            selection_pool_factor=args.pool_factor,
+                            log_every=max(args.steps // 20, 1))
     print(f"done: {result.steps_run} steps, "
-          f"loss {result.losses[0]:.3f} → {result.losses[-1]:.3f}")
+          f"loss {result.losses[0]:.3f} → {result.losses[-1]:.3f}"
+          + (f", selection {result.selection_time_s:.1f}s"
+             if selector is not None else ""))
 
 
 if __name__ == "__main__":

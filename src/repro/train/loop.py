@@ -1,5 +1,18 @@
 """Training loop: jit'd train_step on a mesh + checkpoint/restart +
-optional DASH batch selection.
+periodic coreset selection through the selection stack.
+
+Selection-in-the-loop (docs/training.md): every ``selection_every``
+steps the loop over-provisions a candidate pool
+(``selection_pool_factor`` × the examples it will actually train on),
+scores the candidates with ``coreset_features`` under the SAME jit/mesh
+as the train step, and keeps the best coreset by running the configured
+registry algorithm (``BatchSelector`` → ``core.algorithms.select``,
+distributed twin when the trainer holds a mesh).  The selection PRNG
+key and the current period's selected indices live inside the
+checkpointed :class:`LoopState`, so kill-and-resume replays
+bitwise-identical selected batches (tests/test_train_ckpt.py asserts
+it) — a restore mid-period reuses the stored indices instead of
+re-selecting with drifted parameters.
 
 This is the single-controller driver used by examples/ and
 launch/train.py; the same step functions lower unchanged on the
@@ -10,8 +23,8 @@ from __future__ import annotations
 
 import logging
 import time
-from dataclasses import dataclass
-from typing import Callable
+from dataclasses import dataclass, field
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -19,17 +32,28 @@ import numpy as np
 
 from repro.ckpt import CheckpointManager, restore_checkpoint
 from repro.configs.base import TrainConfig
-from repro.data.pipeline import shard_batch
-from repro.data.selection import DashBatchSelector, pool_embeddings
+from repro.core.objectives.coreset import coreset_features
+from repro.data.pipeline import pool_from_callable, shard_batch
+from repro.data.selection import BatchSelector
 from repro.runtime.fault_tolerance import FailureInjector, run_with_restart
-from repro.sharding import (
-    activation_sharding_ctx,
-    batch_axes_for_mesh,
-    param_partition_specs,
-)
+from repro.sharding import activation_sharding_ctx, batch_axes_for_mesh
 from repro.train.step import TrainState, init_train_state, make_train_step
 
 log = logging.getLogger(__name__)
+
+
+class LoopState(NamedTuple):
+    """THE checkpointed tree: model/optimizer + selection replay state.
+
+    ``cur_sel`` has static shape (k · selection_every,) so the
+    checkpoint manifest stays shape-stable across saves; ``cur_period``
+    = −1 marks "no selection computed yet".
+    """
+
+    train: TrainState
+    sel_key: jnp.ndarray     # (2,) uint32 — base selection key
+    cur_period: jnp.ndarray  # ()   int32  — period ``cur_sel`` belongs to
+    cur_sel: jnp.ndarray     # (k·selection_every,) int32 pool-local indices
 
 
 @dataclass
@@ -38,22 +62,42 @@ class LoopResult:
     losses: list
     steps_run: int
     restarts: int
+    # period → selected example ids (stream-stable for TokenPipeline
+    # sources, pool-local for legacy callables) — the restart-determinism
+    # tests compare these bitwise across runs.
+    selections: dict = field(default_factory=dict)
+    selection_time_s: float = 0.0
 
 
 def train_loop(
     model,
     tcfg: TrainConfig,
-    batch_for_step: Callable[[int], dict],
+    batch_source,
     *,
     mesh=None,
     ckpt_dir: str | None = None,
-    selector: DashBatchSelector | None = None,
+    selector: BatchSelector | None = None,
+    selection_every: int = 1,
     selection_pool_factor: int = 4,
     failure_injector: FailureInjector | None = None,
     log_every: int = 10,
 ) -> LoopResult:
-    """Run tcfg.total_steps steps.  ``batch_for_step`` must be a pure
-    function of the step (determinism across restarts)."""
+    """Run tcfg.total_steps steps.
+
+    ``batch_source`` is either a ``TokenPipeline`` (anything with
+    ``batch_for_step`` + ``pool_for_step``) or a bare
+    ``step -> batch`` callable; both must be pure functions of the step
+    (determinism across restarts).  With a ``selector``, each selection
+    period (``selection_every`` steps) trains on a coreset of
+    ``selector.k × selection_every`` examples picked from a pool
+    ``selection_pool_factor`` × that size.
+    """
+    has_pool = hasattr(batch_source, "pool_for_step")
+    batch_for_step: Callable[[int], dict] = (
+        batch_source.batch_for_step if has_pool else batch_source)
+    selection_every = max(int(selection_every), 1)
+    k_sel = (selector.k * selection_every) if selector is not None else 0
+
     train_step = make_train_step(model, tcfg)
     manager = (
         CheckpointManager(ckpt_dir, every=tcfg.checkpoint_every)
@@ -61,6 +105,11 @@ def train_loop(
     )
     losses: list = []
     restarts = [0]
+    sel_time = [0.0]
+    selections: dict[int, np.ndarray] = {}
+    # One pool per period, rebuilt deterministically on demand (also
+    # after a restore, so mid-period resume re-reads the same rows).
+    pool_cache: dict[str, Any] = {"period": None, "batch": None, "ids": None}
 
     if mesh is not None:
         axes = batch_axes_for_mesh(mesh)
@@ -74,45 +123,86 @@ def train_loop(
         jstep = jax.jit(train_step, donate_argnums=(0,))
         key = jax.random.PRNGKey(tcfg.seed)
         skey = jax.random.PRNGKey(tcfg.seed + 1)
+        if selector is not None:
+            # Jitted next to the train step: candidate scoring lowers
+            # under the same mesh/sharding context as training itself.
+            feat_fn = jax.jit(lambda p, b: coreset_features(
+                model, p, b, mode=selector.feature_mode))
+
+        def fresh_state() -> LoopState:
+            return LoopState(
+                train=init_train_state(model, key, tcfg),
+                sel_key=skey,
+                cur_period=jnp.asarray(-1, jnp.int32),
+                cur_sel=jnp.zeros((k_sel,), jnp.int32),
+            )
 
         def make_state():
-            return TrainState(*init_train_state(model, key, tcfg)), 0
+            return fresh_state(), 0
 
         def restore():
             if manager is None or manager.latest() is None:
                 return None
             restarts[0] += 1 if losses else 0
-            like = init_train_state(model, key, tcfg)
-            state, step = restore_checkpoint(manager.directory, like)
+            state, step = restore_checkpoint(manager.directory, fresh_state())
             log.info("restored checkpoint at step %d", step)
             return state, step + 1
 
-        def select_batch(state, step):
-            batch = batch_for_step(step)
-            if selector is None:
-                return batch
-            # build an over-provisioned pool and keep the DASH-selected rows
-            pool = [batch_for_step(step)]
-            for j in range(1, selection_pool_factor):
-                pool.append(batch_for_step(step * 7919 + j))
-            pooled = {
-                k: np.concatenate([p[k] for p in pool], axis=0)
-                for k in batch
-            }
-            emb = pool_embeddings(model, state.params, pooled)
-            idx = selector.select(emb, jax.random.fold_in(skey, step))
-            return {k: v[np.asarray(idx)] for k, v in pooled.items()}
+        def pool_for_period(period: int):
+            if pool_cache["period"] != period:
+                pstep = period * selection_every
+                if has_pool:
+                    pb, ids = batch_source.pool_for_step(
+                        pstep, k_sel * selection_pool_factor)
+                else:
+                    pb, ids = pool_from_callable(
+                        batch_for_step, pstep,
+                        selection_pool_factor * selection_every)
+                assert next(iter(pb.values())).shape[0] >= k_sel, \
+                    "candidate pool smaller than the coreset"
+                pool_cache.update(period=period, batch=pb, ids=ids)
+            return pool_cache["batch"], pool_cache["ids"]
 
-        def step_fn(state, step):
+        def ensure_selection(state: LoopState, period: int) -> LoopState:
+            pb, ids = pool_for_period(period)
+            if int(state.cur_period) != period:
+                t0 = time.perf_counter()
+                dev = (shard_batch(pb, mesh) if mesh is not None
+                       else jax.tree_util.tree_map(jnp.asarray, pb))
+                feats = np.asarray(feat_fn(state.train.params, dev))
+                pkey = jax.random.fold_in(state.sel_key, period)
+                idx = selector.select(feats, pkey, k=k_sel, mesh=mesh)
+                state = state._replace(
+                    cur_period=jnp.asarray(period, jnp.int32),
+                    cur_sel=jnp.asarray(idx, jnp.int32),
+                )
+                sel_time[0] += time.perf_counter() - t0
+            # Recorded from the (possibly checkpoint-restored) state, so
+            # a resumed run logs the identical selection it trains on.
+            selections[period] = np.asarray(ids)[np.asarray(state.cur_sel)]
+            return state
+
+        def batch_at(state: LoopState, step: int):
+            if selector is None:
+                return batch_for_step(step), state
+            period = step // selection_every
+            state = ensure_selection(state, period)
+            pb, _ = pool_for_period(period)
+            off = (step % selection_every) * selector.k
+            rows = np.asarray(state.cur_sel)[off:off + selector.k]
+            return {k: np.asarray(v)[rows] for k, v in pb.items()}, state
+
+        def step_fn(state: LoopState, step: int) -> LoopState:
             if failure_injector is not None:
                 failure_injector.check(step)
-            batch = select_batch(state, step)
+            batch, state = batch_at(state, step)
             if mesh is not None:
                 batch = shard_batch(batch, mesh)
             else:
                 batch = jax.tree_util.tree_map(jnp.asarray, batch)
             t0 = time.perf_counter()
-            state, metrics = jstep(state, batch)
+            new_train, metrics = jstep(state.train, batch)
+            state = state._replace(train=new_train)
             loss = float(metrics["loss"])
             losses.append(loss)
             if step % log_every == 0:
@@ -130,5 +220,7 @@ def train_loop(
         )
         if manager is not None:
             manager.wait()
-    return LoopResult(state=state, losses=losses, steps_run=len(losses),
-                      restarts=restarts[0])
+    return LoopResult(state=state.train, losses=losses,
+                      steps_run=len(losses), restarts=restarts[0],
+                      selections=selections,
+                      selection_time_s=sel_time[0])

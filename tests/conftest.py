@@ -76,3 +76,17 @@ def aopt_problem():
 def aopt_obj(aopt_problem):
     X, k = aopt_problem
     return AOptimalityObjective(X, kmax=2 * k, beta2=1.0, sigma2=1.0), k
+
+
+@pytest.fixture(scope="session")
+def coreset_obj():
+    """CoresetObjective from raw (pool, feat) features — the fourth
+    first-class objective (training-batch coreset selection)."""
+    from repro.core.objectives import CoresetObjective
+
+    rng = np.random.default_rng(7)
+    feats = rng.normal(size=(40, 48)).astype(np.float32)
+    k = 8
+    obj = CoresetObjective.from_features(
+        feats, kmax=2 * k, dim_cap=16, key=jax.random.PRNGKey(0))
+    return obj, k

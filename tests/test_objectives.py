@@ -298,3 +298,103 @@ class TestDistributedContract:
         assert int(jnp.sum(ds2.sup_k.astype(jnp.int32))) == 0
         np.testing.assert_array_equal(np.asarray(ds2.eta),
                                       np.asarray(ds.eta))
+
+    def test_coreset_dist_matches_index_oracles(self, coreset_obj):
+        """The fourth objective honors the full column-based contract:
+        dist_* oracles == index oracles with X_local = X, including the
+        fused filter-engine sweep."""
+        import numpy as np
+
+        from repro.core.objectives.base import gather_columns
+
+        obj, k = coreset_obj
+        idx, mask = self._sets(obj.n, seed=4)
+        C = gather_columns(obj.X, idx, mask)
+
+        st = obj.init()
+        ds = obj.dist_init(obj.X)
+        np.testing.assert_allclose(
+            float(obj.dist_set_gain(ds, C, mask)),
+            float(obj.set_gain(st, idx, mask)), rtol=1e-5, atol=1e-6)
+
+        st2 = obj.add_set(st, idx, mask)
+        ds2 = obj.dist_add_set(ds, C, mask, obj.X)
+        np.testing.assert_allclose(float(obj.dist_value(ds2)),
+                                   float(st2.value), rtol=1e-5, atol=1e-6)
+        g_idx = np.asarray(obj.gains(st2))
+        g_col = np.asarray(obj.dist_gains(ds2, obj.X))
+        sel = np.asarray(st2.sel_mask)
+        np.testing.assert_allclose(g_col[~sel], g_idx[~sel],
+                                   rtol=1e-4, atol=1e-5)
+
+        # filter-engine sweep: stacked samples, gains at S ∪ R_i
+        idx2, mask2 = self._sets(obj.n, seed=5)
+        Cs = jnp.stack([C, gather_columns(obj.X, idx2, mask2)])
+        masks = jnp.stack([mask, mask2])
+        gb = np.asarray(obj.dist_filter_gains_batch(ds, Cs, masks, obj.X))
+        ref = np.asarray(obj.filter_gains_batch(
+            st, jnp.stack([idx, idx2]), masks))
+        for i, (ii, mm) in enumerate(((idx, mask), (idx2, mask2))):
+            outside = ~np.asarray(
+                st.sel_mask.at[ii].set(st.sel_mask[ii] | mm))
+            np.testing.assert_allclose(gb[i][outside], ref[i][outside],
+                                       rtol=1e-4, atol=1e-5)
+
+
+class TestCoreset:
+    """CoresetObjective feature preparation + real/padded bookkeeping
+    (the A-opt oracle math itself is covered by the parent's tests and
+    the contract suite above)."""
+
+    def test_prepare_feature_columns_projects_and_normalizes(self):
+        from repro.core.objectives import prepare_feature_columns
+
+        rng = np.random.default_rng(0)
+        feats = rng.normal(size=(20, 100)).astype(np.float32)
+        X = prepare_feature_columns(feats, dim_cap=16,
+                                    key=jax.random.PRNGKey(0))
+        assert X.shape == (16, 20)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(X), axis=0), 1.0, rtol=1e-5)
+        # below the cap: no projection, just normalization
+        X2 = prepare_feature_columns(feats[:, :8], dim_cap=16)
+        assert X2.shape == (8, 20)
+
+    def test_from_features_pads_to_multiple(self):
+        from repro.core.objectives import CoresetObjective
+
+        rng = np.random.default_rng(1)
+        feats = rng.normal(size=(30, 12)).astype(np.float32)
+        obj = CoresetObjective.from_features(feats, kmax=8, dim_cap=12,
+                                             pad_multiple=8)
+        assert obj.n == 32 and obj.n_real == 30
+        # padded columns are zero → zero gains, never selected
+        g = np.asarray(obj.gains(obj.init()))
+        np.testing.assert_array_equal(g[30:], 0.0)
+        res = greedy(obj, 8)
+        assert not bool(jnp.any(res.sel_mask[30:]))
+
+    def test_value_matches_brute_force(self, coreset_obj):
+        obj, k = coreset_obj
+        res = greedy(obj, k)
+        sel = np.nonzero(np.asarray(res.sel_mask))[0]
+        brute = float(obj.brute_value(jnp.asarray(sel)))
+        assert abs(float(res.value) - brute) < 1e-3
+
+    def test_feature_modes_shapes(self):
+        from repro.configs import get_reduced_config
+        from repro.core.objectives import coreset_features
+        from repro.models import build_model
+
+        cfg = get_reduced_config("smollm-135m")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(2)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)}
+        for mode in ("embed", "hidden", "grad"):
+            f = coreset_features(model, params, batch, mode=mode)
+            assert f.shape == (4, cfg.d_model), mode
+            assert bool(jnp.all(jnp.isfinite(f))), mode
+        with pytest.raises(ValueError):
+            coreset_features(model, params, batch, mode="nope")

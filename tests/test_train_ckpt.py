@@ -159,17 +159,99 @@ def test_pipeline_determinism():
     p1.close()
 
 
+def test_pipeline_pool_mode_deterministic_and_disjoint():
+    toks = make_lm_tokens(0, 20000, 128)
+    with TokenPipeline(toks, batch=4, seq=32) as p:
+        pool_a, ids_a = p.pool_for_step(3, 12)
+        pool_b, ids_b = p.pool_for_step(3, 12)
+        np.testing.assert_array_equal(ids_a, ids_b)
+        np.testing.assert_array_equal(pool_a["tokens"], pool_b["tokens"])
+        assert pool_a["tokens"].shape == (12, 32)
+        assert len(np.unique(ids_a)) == 12          # without replacement
+        # the pool stream is disjoint from the per-step batch stream:
+        # same step, different draw
+        batch = p.batch_for_step(3)
+        assert not np.array_equal(pool_a["tokens"][:4], batch["tokens"])
+
+
+def test_pipeline_close_joins_prefetch_thread():
+    toks = make_lm_tokens(0, 20000, 128)
+    p = TokenPipeline(toks, batch=4, seq=32)
+    assert p._thread.is_alive()
+    p.close()
+    assert not p._thread.is_alive()
+    p.close()                                       # idempotent
+    with TokenPipeline(toks, batch=4, seq=32) as p2:
+        next(iter(p2))
+    assert not p2._thread.is_alive()                # context manager joins
+
+
+def test_restart_with_selection_replays_identical_batches(tmp_path,
+                                                          small_model):
+    """Kill-and-resume with selection ON: the selection key + current
+    coreset live in the checkpointed LoopState, so the selected example
+    ids after restore must match an uninterrupted run BITWISE."""
+    from repro.data.selection import BatchSelector
+
+    cfg, model = small_model
+    toks = make_lm_tokens(1, 60_000, cfg.vocab_size)
+    tcfg = TrainConfig(total_steps=8, learning_rate=1e-3, warmup_steps=1,
+                       checkpoint_every=2)
+
+    def run(ckpt, inject):
+        with TokenPipeline(toks, batch=4, seq=32) as pipe:
+            sel = BatchSelector(k=4, algo="greedy", feature_mode="embed",
+                                embed_dim_cap=16)
+            return train_loop(model, tcfg, pipe, ckpt_dir=ckpt,
+                              selector=sel, selection_every=2,
+                              selection_pool_factor=3,
+                              failure_injector=inject)
+
+    clean = run(str(tmp_path / "clean"), None)
+    # step 5 is mid-period (period 2 = steps 4-5): the resume must reuse
+    # the checkpointed coreset, not re-select with drifted params
+    faulty = run(str(tmp_path / "faulty"), FailureInjector(fail_at=(5,)))
+    assert faulty.restarts == 1
+    assert clean.selections.keys() == faulty.selections.keys()
+    for period in clean.selections:
+        np.testing.assert_array_equal(clean.selections[period],
+                                      faulty.selections[period])
+    np.testing.assert_allclose(clean.losses[:4], faulty.losses[:4],
+                               rtol=1e-5)
+    assert abs(clean.losses[-1] - faulty.losses[-1]) < 5e-2
+
+
 def test_selector_picks_diverse_examples():
-    from repro.data.selection import DashBatchSelector
+    from repro.data.selection import BatchSelector
 
     rng = np.random.default_rng(0)
     # two clusters; A-optimal design should cover both
     a = rng.normal(size=(20, 16)) + np.array([5.0] + [0] * 15)
     b = rng.normal(size=(20, 16)) - np.array([5.0] + [0] * 15)
     pool = jnp.asarray(np.concatenate([a, b]), jnp.float32)
-    sel = DashBatchSelector(k=8, method="greedy")
+    sel = BatchSelector(k=8, algo="greedy", embed_dim_cap=16)
     idx = np.asarray(sel.select(pool, jax.random.PRNGKey(0)))
     assert (idx < 20).any() and (idx >= 20).any()
+
+
+def test_selector_algo_swap_and_legacy_alias():
+    """Any registry algorithm is a one-string swap; the pre-registry
+    DashBatchSelector API keeps working."""
+    from repro.data.selection import BatchSelector, DashBatchSelector
+
+    rng = np.random.default_rng(1)
+    pool = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    for algo in ("dash", "greedy", "lazy_greedy", "stochastic_greedy",
+                 "topk", "random"):
+        sel = BatchSelector(k=4, algo=algo, embed_dim_cap=8)
+        idx = np.asarray(sel.select(pool, jax.random.PRNGKey(1)))
+        assert idx.shape == (4,), algo
+        assert len(np.unique(idx)) == 4, algo
+    legacy = DashBatchSelector(k=4, method="greedy")
+    assert np.asarray(legacy.select(pool, jax.random.PRNGKey(0))).shape \
+        == (4,)
+    with pytest.raises(ValueError):
+        BatchSelector(k=4, algo="not_an_algorithm")
 
 
 def test_generate_runs(small_model):
