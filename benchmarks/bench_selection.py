@@ -396,6 +396,101 @@ def run_distributed(full: bool = False):
         Xc, kc, alpha=0.4, eps=0.3, n_samples=3)
 
 
+def run_resilience(full: bool = False):
+    """Resilient-runtime costs: the price of round snapshots and the
+    restore → reshard → continue path (docs/resilience.md).
+
+    Rows (prefix ``resilience/``):
+      * ``fused`` / ``stepped``   — one-launch vs host-stepped run,
+      * ``ckpt_blocking`` / ``ckpt_async`` — per-round snapshots; the
+        derived field records ``overhead_per_round`` (seconds) and
+        ``overhead_frac`` (fraction of a stepped round) — the number the
+        compare-vs-main summary watches,
+      * ``resume`` — kill at mid-run, restore + replay to completion.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core import ResilienceConfig
+    from repro.core.distributed import dash_distributed, pad_ground_set
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime.fault_tolerance import FailureInjector
+
+    scale = 1 if full else 2
+    rng = np.random.default_rng(0)
+    d, n, k = 192 // scale, 128 // scale, 16 // scale
+    X0 = rng.normal(size=(d, n)) + 0.4 * rng.normal(size=(d, 1))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32))
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, k)
+    y = jnp.asarray(X0 @ w + 0.1 * rng.normal(size=d), jnp.float32)
+
+    mesh = make_host_mesh()
+    Xp, _ = pad_ground_set(X, mesh.shape["model"])
+    obj = RegressionObjective(Xp, y, kmax=k)
+    cfg = DashConfig(k=k, eps=0.25, alpha=0.6, n_samples=4)
+    opt = float(greedy(obj, k).value) * 1.05
+    r = cfg.resolve(obj.n).r
+
+    t_fused, rf = wall_time(
+        lambda: jax.block_until_ready(
+            dash_distributed(obj, cfg, KEY, opt, mesh)),
+        warmup=1, iters=1)
+    t_step, rs = wall_time(
+        lambda: jax.block_until_ready(
+            dash_distributed(obj, cfg, KEY, opt, mesh,
+                             resilience=ResilienceConfig())),
+        warmup=1, iters=1)
+    emit(f"resilience/regression/k={k}/fused", t_fused * 1e6,
+         f"value={float(rf.value):.4f};rounds={r}")
+    emit(f"resilience/regression/k={k}/stepped", t_step * 1e6,
+         f"value={float(rs.value):.4f};"
+         f"stepped_over_fused={t_step / max(t_fused, 1e-9):.2f}")
+
+    def timed_ckpt(async_save):
+        tmp = tempfile.mkdtemp(prefix="bench_resilience_")
+        try:
+            t, _ = wall_time(
+                lambda: jax.block_until_ready(dash_distributed(
+                    obj, cfg, KEY, opt, mesh,
+                    resilience=ResilienceConfig(
+                        ckpt_dir=tmp, every=1, keep_last=2,
+                        async_save=async_save))),
+                warmup=1, iters=1)
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+        return t
+
+    for label, async_save in (("ckpt_blocking", False),
+                              ("ckpt_async", True)):
+        t_ck = timed_ckpt(async_save)
+        over = max(t_ck - t_step, 0.0) / r
+        frac = over / max(t_step / r, 1e-9)
+        emit(f"resilience/regression/k={k}/{label}", t_ck * 1e6,
+             f"overhead_per_round={over * 1e6:.1f}us;"
+             f"overhead_frac={frac:.3f}")
+
+    # kill at round r//2, then time restore + replay-to-completion
+    tmp = tempfile.mkdtemp(prefix="bench_resilience_")
+    try:
+        res = ResilienceConfig(ckpt_dir=tmp, every=1, async_save=False)
+        try:
+            dash_distributed(obj, cfg, KEY, opt, mesh, resilience=res,
+                             failure_injector=FailureInjector(
+                                 fail_at=(max(r // 2, 1),)))
+        except RuntimeError:
+            pass
+        t_rs, rr = wall_time(
+            lambda: jax.block_until_ready(dash_distributed(
+                obj, cfg, KEY, opt, mesh, resilience=res, resume=True)),
+            warmup=0, iters=1)
+        emit(f"resilience/regression/k={k}/resume", t_rs * 1e6,
+             f"value={float(rr.value):.4f};from_round={max(r // 2, 1)};"
+             f"bitwise={bool(np.all(np.asarray(rr.sel_mask) == np.asarray(rs.sel_mask)))}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def _baseline_datasets(scale: int):
     """The three paper objectives at baseline-suite sizes, as
     ``(name, make_obj(X) factory, X, k_grid, select-opts)`` tuples —
@@ -693,7 +788,7 @@ def main() -> None:
     ap.add_argument(
         "--suite", default="all",
         help="comma-separated subset of {paper, distributed, lattice, "
-             "baselines, train} or 'all'.  'paper' = Fig 2/3/4 "
+             "baselines, train, resilience} or 'all'.  'paper' = Fig 2/3/4 "
              "analogues; 'distributed' = dash_distributed vs dash for "
              "all three objectives; 'lattice' = loop vs batched vs "
              "pod-sharded (OPT, α) guess lattice; 'baselines' = the "
@@ -701,11 +796,15 @@ def main() -> None:
              "single-vs-sharded / time-vs-n; 'train' = tokens-to-loss "
              "for coreset selection-in-the-loop, dash vs stochastic "
              "greedy vs random vs no selection (the distributed CI job "
-             "runs 'distributed,lattice,baselines,train' with 8 forced "
-             "host devices)",
+             "greedy vs random vs no selection; 'resilience' = round-"
+             "snapshot overhead + kill/restore/replay costs (the "
+             "distributed CI job runs "
+             "'distributed,lattice,baselines,train,resilience' with 8 "
+             "forced host devices)",
     )
     args = ap.parse_args()
-    known = {"paper", "distributed", "lattice", "baselines", "train"}
+    known = {"paper", "distributed", "lattice", "baselines", "train",
+             "resilience"}
     suites = (known if args.suite == "all"
               else {s.strip() for s in args.suite.split(",")})
     unknown = suites - known
@@ -721,6 +820,8 @@ def main() -> None:
         run_baselines(full=args.full)
     if "train" in suites:
         run_train(full=args.full)
+    if "resilience" in suites:
+        run_resilience(full=args.full)
     if args.json:
         payload = {"suite": f"bench_selection/{args.suite}",
                    "backend": jax.default_backend(),

@@ -1,7 +1,23 @@
 from repro.ckpt.checkpoint import (
     CheckpointManager,
+    checkpoint_steps,
+    is_complete,
+    latest_complete_step,
+    latest_step,
+    prune_checkpoints,
+    read_manifest,
     restore_checkpoint,
     save_checkpoint,
 )
 
-__all__ = ["CheckpointManager", "restore_checkpoint", "save_checkpoint"]
+__all__ = [
+    "CheckpointManager",
+    "checkpoint_steps",
+    "is_complete",
+    "latest_complete_step",
+    "latest_step",
+    "prune_checkpoints",
+    "read_manifest",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

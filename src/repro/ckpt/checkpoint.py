@@ -4,13 +4,23 @@ Design (DESIGN.md §9):
   * atomic:   write to ``<dir>/tmp.<step>`` then ``os.replace`` — a crash
               mid-write can never corrupt the latest checkpoint;
   * manifest: JSON with the flattened tree paths, shapes, dtypes and the
-              framework version — restores validate structure before
-              touching device memory;
-  * async:    ``save_async`` hands the (host-fetched) arrays to a writer
-              thread so the training loop's bubble is one device→host copy;
+              framework version — restores validate the WHOLE manifest
+              against the expected structure before touching device
+              memory (a corrupt/mismatched checkpoint is a clear
+              ``ValueError``, never a device-side crash);
+  * async:    ``CheckpointManager`` hands the (host-fetched) arrays to a
+              writer thread so the training loop's bubble is one
+              device→host copy;
   * reshard:  ``restore_checkpoint(..., mesh=..., specs=...)`` device_puts
               every leaf with the *target* sharding, so restoring onto a
-              different mesh shape (elastic restart) is the same code path.
+              different mesh shape (elastic restart) is the same code path
+              (``runtime/elastic.py::reshard_tree`` is the equivalent
+              post-restore helper when the host tree is already in hand);
+  * prune:    ``prune_checkpoints(dir, keep_last=N)`` retires old
+              checkpoints but NEVER the newest complete one — a
+              half-written or truncated directory (detected via the
+              manifest/npz cross-check) can't count as "newest" and
+              shadow the last good snapshot.
 
 Format: one ``.npz`` per checkpoint + ``manifest.json``.  Keys are
 ``/``-joined tree paths (stable across runs).
@@ -50,8 +60,18 @@ def _flatten_with_paths(tree):
     return {path_str(path): leaf for path, leaf in flat}
 
 
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
 def save_checkpoint(directory: str, step: int, tree: Any, *,
-                    extra: dict | None = None) -> str:
+                    extra: dict | None = None,
+                    keep_last: int | None = None) -> str:
+    """Atomically write checkpoint ``step``; optionally prune old ones.
+
+    ``keep_last`` (when given) runs :func:`prune_checkpoints` after the
+    rename, so callers get retention without a second helper.
+    """
     os.makedirs(directory, exist_ok=True)
     flat = _flatten_with_paths(tree)
     host = {k: np.asarray(v) for k, v in flat.items()}
@@ -69,50 +89,139 @@ def save_checkpoint(directory: str, step: int, tree: Any, *,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
-    final = os.path.join(directory, f"step_{step:08d}")
+    final = _step_dir(directory, step)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    if keep_last is not None:
+        prune_checkpoints(directory, keep_last)
     return final
 
 
-def latest_step(directory: str) -> int | None:
+def checkpoint_steps(directory: str) -> list[int]:
+    """All step numbers with a ``step_*`` directory, ascending."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(name.split("_")[1])
         for name in os.listdir(directory)
         if name.startswith("step_")
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(directory: str) -> int | None:
+    steps = checkpoint_steps(directory)
+    return steps[-1] if steps else None
+
+
+def read_manifest(directory: str, step: int) -> dict:
+    with open(os.path.join(_step_dir(directory, step), "manifest.json")) as f:
+        return json.load(f)
+
+
+def is_complete(directory: str, step: int) -> bool:
+    """True iff checkpoint ``step`` survives the manifest/npz cross-check.
+
+    A checkpoint is complete when its manifest parses AND ``arrays.npz``
+    opens as a valid archive whose members cover every manifest leaf —
+    a mid-write crash or truncation fails one of the three.
+    """
+    path = _step_dir(directory, step)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            return set(manifest["leaves"]) <= set(data.files)
+    except Exception:       # missing file, truncated zip, bad JSON, …
+        return False
+
+
+def latest_complete_step(directory: str) -> int | None:
+    """Newest step that passes :func:`is_complete` (restore target)."""
+    for step in reversed(checkpoint_steps(directory)):
+        if is_complete(directory, step):
+            return step
+    return None
+
+
+def prune_checkpoints(directory: str, keep_last: int) -> list[int]:
+    """Retire old checkpoints, keeping the newest ``max(1, keep_last)``
+    COMPLETE ones.  Returns the deleted step numbers.
+
+    Invariant: the newest complete checkpoint is NEVER deleted (even
+    with ``keep_last=0``) — it is the restore target.  Incomplete
+    directories older than it are garbage and removed; anything at or
+    beyond it is left alone (it may be a concurrent writer's rename
+    landing).
+    """
+    keep = max(1, int(keep_last))
+    steps = checkpoint_steps(directory)
+    complete = [s for s in steps if is_complete(directory, s)]
+    if not complete:
+        return []
+    newest = complete[-1]
+    keep_set = set(complete[-keep:])
+    dropped = []
+    for s in steps:
+        if s >= newest or s in keep_set:
+            continue
+        shutil.rmtree(_step_dir(directory, s), ignore_errors=True)
+        dropped.append(s)
+    return dropped
+
+
+def _validate_manifest(manifest: dict, flat_like: dict, npz_files,
+                       where: str) -> None:
+    """Every ``like`` leaf must exist in both manifest and archive with
+    the expected shape AND dtype — checked up front, before any leaf is
+    rebuilt or device_put (satisfying "corrupt checkpoint → clear host
+    error, not a device-side crash")."""
+    leaves = manifest.get("leaves", {})
+    missing = sorted(set(flat_like) - (set(leaves) & set(npz_files)))
+    if missing:
+        raise ValueError(
+            f"{where}: checkpoint missing leaves: {missing[:5]}…")
+    problems = []
+    for key, ref in flat_like.items():
+        meta = leaves[key]
+        if list(meta["shape"]) != list(ref.shape):
+            problems.append(
+                f"{key}: shape {tuple(meta['shape'])} != "
+                f"expected {tuple(ref.shape)}")
+        elif np.dtype(meta["dtype"]) != np.dtype(ref.dtype):
+            problems.append(
+                f"{key}: dtype {meta['dtype']} != expected "
+                f"{np.dtype(ref.dtype).name}")
+    if problems:
+        raise ValueError(
+            f"{where}: manifest/structure mismatch — " + "; ".join(problems))
 
 
 def restore_checkpoint(directory: str, like: Any, *, step: int | None = None,
                        mesh=None, specs=None) -> tuple[Any, int]:
     """Restore into the structure of ``like``.  With (mesh, specs) the
-    leaves are device_put with the target sharding → elastic resharding."""
+    leaves are device_put with the target sharding → elastic resharding.
+
+    ``step=None`` restores the newest COMPLETE checkpoint: a truncated
+    or half-written newest directory is skipped in favour of the last
+    good one (the atomicity contract's host-side counterpart).
+    """
     if step is None:
-        step = latest_step(directory)
+        step = latest_complete_step(directory)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    path = os.path.join(directory, f"step_{step:08d}")
+            raise FileNotFoundError(f"no complete checkpoints in {directory}")
+    path = _step_dir(directory, step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
 
     flat_like = _flatten_with_paths(like)
-    missing = set(flat_like) - set(data.files)
-    if missing:
-        raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:5]}…")
+    _validate_manifest(manifest, flat_like, data.files, where=path)
 
     spec_map = _flatten_with_paths(specs) if specs is not None else None
 
     def rebuild(key, ref):
         arr = data[key]
-        if list(arr.shape) != list(ref.shape):
-            raise ValueError(
-                f"{key}: checkpoint shape {arr.shape} != expected {ref.shape}")
-        arr = arr.astype(ref.dtype)
         if mesh is not None and spec_map is not None and key in spec_map:
             from jax.sharding import NamedSharding
 
@@ -146,8 +255,8 @@ class CheckpointManager:
 
         def work():
             try:
-                save_checkpoint(self.directory, step, host, extra=extra)
-                self._gc()
+                save_checkpoint(self.directory, step, host, extra=extra,
+                                keep_last=self.keep)
             except Exception as e:   # surfaced on next maybe_save/wait
                 self._error = e
 
@@ -162,16 +271,6 @@ class CheckpointManager:
             self._thread = None
         if self._error:
             raise self._error
-
-    def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1])
-            for n in os.listdir(self.directory)
-            if n.startswith("step_")
-        )
-        for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
-                          ignore_errors=True)
 
     def latest(self) -> int | None:
         return latest_step(self.directory)

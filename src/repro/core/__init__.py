@@ -22,7 +22,14 @@ from repro.core.objectives import (
     RegressionObjective,
     normalize_columns,
 )
-from repro.core.dash import DashConfig, DashResult, dash, dash_auto
+from repro.core.dash import (
+    DashConfig,
+    DashResult,
+    dash,
+    dash_auto,
+    dash_checkpointed,
+)
+from repro.core.selection_loop import ResilienceConfig
 from repro.core.greedy import (
     greedy,
     greedy_parallel_cost,
@@ -62,8 +69,10 @@ __all__ = [
     "normalize_columns",
     "DashConfig",
     "DashResult",
+    "ResilienceConfig",
     "dash",
     "dash_auto",
+    "dash_checkpointed",
     "greedy",
     "lazy_greedy",
     "stochastic_greedy",

@@ -56,8 +56,13 @@ from repro.core.estimators import (
 from repro.core.selection_loop import (  # noqa: F401  (re-exported API)
     DashConfig,
     DashTrace,
+    ResilienceConfig,
+    SelectionCarry,
     SelectionHooks,
     cached_runner,
+    drive_checkpointed_rounds,
+    initial_carry,
+    make_round_body,
     run_selection_rounds,
 )
 
@@ -154,6 +159,70 @@ def dash(obj, cfg: DashConfig, key, opt: float | jnp.ndarray,
         hooks, cfg, opt, key, obj.init(), jnp.ones((obj.n,), bool),
         alpha=alpha,
     )
+    return DashResult(
+        sel_mask=state.sel_mask,
+        sel_count=count,
+        value=obj.value(state),
+        rounds=jnp.sum(trace.filter_iters) + cfg.r,
+        trace=trace,
+        state=state,
+    )
+
+
+def _checkpointed_step_runner(obj, cfg: DashConfig):
+    """One jitted DASH round with (ρ, OPT, α) as runtime inputs — a
+    single compilation serves every round of every resumed run."""
+    def build():
+        body = make_round_body(_single_device_hooks(obj, cfg), cfg)
+        return jax.jit(body)
+
+    return cached_runner(obj, ("ckpt_step", cfg), build)
+
+
+def dash_checkpointed(
+    obj, cfg: DashConfig, key, opt: float | jnp.ndarray,
+    *, resilience: ResilienceConfig, alpha: jnp.ndarray | None = None,
+    resume: bool = False, failure_injector=None,
+) -> DashResult:
+    """Single-device DASH stepped round-by-round from the host, with the
+    :class:`SelectionCarry` snapshotted at every round boundary.
+
+    Semantically :func:`dash` (same hooks, same per-round body — the
+    host ``for`` replaces the ``fori_loop``), traded for restartability:
+    kill the process anywhere and ``resume=True`` replays from the
+    newest complete snapshot in ``resilience.ckpt_dir`` to the SAME
+    selected set the uninterrupted run commits (each round is a pure
+    function of the carry, and the carry is exactly what's saved).
+    Straggler simulation (``resilience.drop_rate``) only affects the
+    distributed runtime; here the responder mask is ignored.
+    """
+    cfg = cfg.resolve(obj.n)
+    step = _checkpointed_step_runner(obj, cfg)
+    alpha_v = jnp.asarray(cfg.alpha if alpha is None else alpha, jnp.float32)
+    opt_v = jnp.asarray(opt, jnp.float32)
+    carry = initial_carry(cfg, key, obj.init(), jnp.ones((obj.n,), bool))
+    start_round = 0
+    if resume and resilience.ckpt_dir:
+        from repro.ckpt.checkpoint import (
+            latest_complete_step,
+            read_manifest,
+            restore_checkpoint,
+        )
+
+        snap = latest_complete_step(resilience.ckpt_dir)
+        if snap is not None:
+            carry, _ = restore_checkpoint(resilience.ckpt_dir, carry,
+                                          step=snap)
+            start_round = int(
+                read_manifest(resilience.ckpt_dir, snap)["extra"]["round"])
+
+    carry = drive_checkpointed_rounds(
+        lambda rho, c, arrived: step(rho, c, opt_v, alpha_v),
+        carry, cfg, resilience=resilience, start_round=start_round,
+        failure_injector=failure_injector,
+        snapshot_extra={"algo": "dash", "n": int(obj.n)},
+    )
+    state, _, count, _, trace = carry
     return DashResult(
         sel_mask=state.sel_mask,
         sel_count=count,

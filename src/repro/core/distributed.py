@@ -19,13 +19,28 @@ Layout:
     evaluates the batched gain oracle for its own candidate block
     (the paper's "one oracle query per core", scaled to a pod),
   * Monte-Carlo expectation replicas over the ``data`` axis — each data
-    row draws its own R ~ U(X) and the estimate is a ``pmean``
-    (straggler-robust trimming happens host-side, runtime/straggler.py),
+    row draws its own R ~ U(X) and the estimate is a ``pmean`` (under a
+    straggler deadline the reduction switches to the trimmed
+    responders-only ``runtime/straggler.py::robust_estimate``),
   * independent (OPT, α) guesses map onto the ``pod`` axis:
     ``dash_auto_distributed`` runs the WHOLE App.-G guess lattice in one
     ``shard_map`` launch — each pod slice drives its guesses through the
     same single-guess body ``dash_distributed`` uses, and the winner is
     committed with one ``all_gather``/argmax/``psum`` over ``pod``.
+
+Resilience (docs/resilience.md): the same entry points also run in a
+round-STEPPED mode (``resilience=`` / ``resume=`` / ``failure_injector=``)
+— one compiled launch per adaptive round, with the between-round
+``SelectionCarry`` snapshotted atomically at round boundaries
+(``ckpt/checkpoint.py``), restorable onto a mesh with a different
+model-axis width (``runtime/elastic.py``), and per-round straggler
+deadlines simulated with responder-robust estimators
+(``runtime/straggler.py``).  ``dash_distributed_restartable`` composes
+the whole story under ``runtime/fault_tolerance.py::run_with_restart``.
+Because the candidate draw uses replicated Gumbel noise over the GLOBAL
+ground set, the selection is invariant to the model-axis partition —
+resumed runs (even elastically reshaped ones) are bitwise the
+uninterrupted run.
 
 Collectives per adaptive round (n = ground set, P = model shards,
 b = block size ⌈k/r⌉, d = feature dim):
@@ -57,13 +72,22 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.estimators import gumbel_noise
 from repro.core.selection_loop import (
     DashConfig,
     DashTrace,
+    ResilienceConfig,
+    RoundCheckpointer,
+    SelectionCarry,
     SelectionHooks,
     cached_runner,
+    drive_checkpointed_rounds,
+    initial_carry,
+    make_round_body,
+    round_arrivals,
     run_selection_rounds,
 )
 
@@ -96,18 +120,22 @@ class LatticeDistResult(NamedTuple):
 # distributed primitives (run inside shard_map; `axis` is the mesh axis name)
 # ---------------------------------------------------------------------------
 
-def _dist_sample(key, alive_local, m, n_local, axis):
+def _dist_sample(key, alive_local, m, n_local, n_global, axis):
     """Globally-uniform without-replacement sample of ≤ m alive elements.
 
-    Every shard draws Gumbel noise for its own block (key folded with the
-    shard rank), publishes its local top-m via all_gather, and all shards
-    deterministically reduce to the same global top-m.  Returns the local
-    view: (idx_local, owned&valid, valid_global).
+    Every shard evaluates the SAME replicated (n,) Gumbel draw
+    (``estimators.gumbel_noise`` from the replicated key — the PR-5
+    layout the baselines use) and slices its contiguous block, publishes
+    its local top-m via all_gather, and all shards deterministically
+    reduce to the same global top-m.  Because the noise is a function of
+    (key, n) alone — NOT of the shard count — the sampled set is
+    invariant to the mesh's model-axis width, which is what lets a
+    checkpoint taken on 8 devices resume on 4 with a bitwise-identical
+    selection (docs/resilience.md).  Returns the local view:
+    (idx_local, owned&valid, valid_global).
     """
     rank = jax.lax.axis_index(axis)
-    kl = jax.random.fold_in(key, rank)
-    u = jax.random.uniform(kl, (n_local,), minval=1e-9, maxval=1.0 - 1e-9)
-    g = -jnp.log(-jnp.log(u))
+    g = _local_noise_slice(gumbel_noise(key, n_global), rank, n_local)
     scores = jnp.where(alive_local, g, -jnp.inf)
     loc_vals, loc_idx = jax.lax.top_k(scores, m)
 
@@ -133,7 +161,159 @@ def _dist_gather_columns(X_local, idx_local, owned, axis):
 # the generic sharded runner
 # ---------------------------------------------------------------------------
 
-def _make_guess_runner(obj, cfg: DashConfig, n_local: int,
+def _make_hooks(obj, cfg: DashConfig, X_local, n_global: int,
+                model_axis: str, data_axis: str | None,
+                use_filter_engine: bool, *,
+                arrived=None, policy=None) -> SelectionHooks:
+    """Bind the shared selection loop to a shard of a
+    ``DistributedObjective`` — called INSIDE ``shard_map`` with the
+    traced ``X_local`` shard.
+
+    ``arrived`` (optional, (n_samples,) bool) is the round's
+    Monte-Carlo-replica responder mask: with it the two estimators
+    become straggler-aware — non-responder replicas contribute nothing
+    (their leave-one-out weights are zeroed; the set-gain reduction
+    switches to ``runtime/straggler.py::robust_estimate`` under
+    ``policy``), while a fully-arrived round short-circuits to the plain
+    mean, bitwise identical to the deadline-free path.  The COMMIT draw
+    (``pick_and_add``) never consults ``arrived``: committing is a
+    collective the round barrier waits out, which is what keeps the
+    selected set deterministic per key regardless of stragglers.
+    """
+    block = cfg.block
+    n_local = X_local.shape[1]
+
+    def draw(kk, alive, allowed):
+        """One global sample: local indices/ownership + gathered cols.
+
+        Collectives (all_gather / psum over the model axis) stay in
+        this stage; every oracle call on the result is shard-local.
+        """
+        idx_l, owned, validg = _dist_sample(
+            kk, alive, block, n_local, n_global, model_axis
+        )
+        slot_ok = validg & (jnp.arange(block) < allowed)
+        C = _dist_gather_columns(X_local, idx_l, owned & slot_ok,
+                                 model_axis)
+        return idx_l, owned, slot_ok, C
+
+    def fold_data(key):
+        # Each data-axis replica evaluates its own samples; the
+        # estimators pmean/psum the results back together.  (Folding
+        # with the data index means the data-axis SIZE is part of the
+        # sampling determinism — elastic restores must preserve it.)
+        didx = jax.lax.axis_index(data_axis) if data_axis else 0
+        return jax.random.fold_in(key, didx)
+
+    def gains_local(ds, sel_local):
+        return jnp.where(sel_local, 0.0, obj.dist_gains(ds, X_local))
+
+    def estimate_set_gain(state, alive, allowed, key):
+        ds, _ = state
+
+        def one(kk):
+            _, _, slot_ok, C = draw(kk, alive, allowed)
+            return obj.dist_set_gain(ds, C, slot_ok)
+
+        vals = jax.vmap(one)(
+            jax.random.split(fold_data(key), cfg.n_samples)
+        )
+        if arrived is None:
+            est = jnp.mean(vals)
+        else:
+            from repro.runtime.straggler import robust_estimate
+
+            # All replicas made the deadline → the exact plain mean
+            # (bitwise the deadline-free estimate); otherwise the
+            # robust deadline reduction over the responders.
+            est = jnp.where(jnp.all(arrived), jnp.mean(vals),
+                            robust_estimate(vals, arrived, policy))
+        if data_axis:
+            est = jax.lax.pmean(est, data_axis)
+        return est
+
+    def estimate_elem_gains(state, alive, allowed, key):
+        ds, sel_local = state
+        keys = jax.random.split(fold_data(key), cfg.n_samples)
+
+        def one_draw(kk):
+            idx_l, owned, slot_ok, C = draw(kk, alive, allowed)
+            w = jnp.ones((n_local,)).at[idx_l].add(
+                jnp.where(owned & slot_ok, -1.0, 0.0)
+            )
+            return C, slot_ok, w
+
+        Cs, slot_oks, ws = jax.vmap(one_draw)(keys)
+        if use_filter_engine:
+            # Shared state + per-sample deltas: one fused engine
+            # sweep of the local candidate shard for all samples.
+            gs = obj.dist_filter_gains_batch(ds, Cs, slot_oks, X_local)
+        else:
+            gs = jax.vmap(
+                lambda C, v: obj.dist_gains(
+                    obj.dist_add_set(ds, C, v, X_local), X_local
+                )
+            )(Cs, slot_oks)
+        gs = jnp.where(sel_local[None, :], 0.0, gs)
+
+        if arrived is not None:
+            # A replica that missed the deadline contributes no weight:
+            # its gains can never be attributed to any candidate.  With
+            # every replica arrived this multiplies by 1.0 — bitwise
+            # the deadline-free weights.
+            ws = ws * arrived.astype(ws.dtype)[:, None]
+        gsum, wsum = jnp.sum(gs * ws, axis=0), jnp.sum(ws, axis=0)
+        if data_axis:
+            gsum = jax.lax.psum(gsum, data_axis)
+            wsum = jax.lax.psum(wsum, data_axis)
+        est = gsum / jnp.maximum(wsum, 1.0)
+        return jnp.where(wsum > 0, est, gains_local(ds, sel_local))
+
+    def pick_and_add(state, alive, allowed, key):
+        ds, sel_local = state
+        idx_l, owned, slot_ok, C = draw(key, alive, allowed)
+        ds = obj.dist_add_set(ds, C, slot_ok, X_local)
+        # Scatter ONLY the owned slots: idx_l entries for slots owned
+        # by other shards are foreign local indices that can collide
+        # with an owned slot's index, and a duplicate-index .set()
+        # could then drop the True write.  Routing non-owned slots to
+        # an out-of-bounds index (mode="drop") makes the scatter
+        # collision-free.
+        idx_safe = jnp.where(owned & slot_ok, idx_l, n_local)
+        sel_local = sel_local.at[idx_safe].set(True, mode="drop")
+        added = jax.lax.psum(
+            jnp.sum((owned & slot_ok).astype(jnp.int32)), model_axis
+        )
+        return (ds, sel_local), added
+
+    return SelectionHooks(
+        value=lambda state: obj.dist_value(state[0]),
+        sel_mask=lambda state: state[1],
+        estimate_set_gain=estimate_set_gain,
+        estimate_elem_gains=estimate_elem_gains,
+        pick_and_add=pick_and_add,
+        count_alive=lambda alive: jax.lax.psum(
+            jnp.sum(alive.astype(jnp.int32)), model_axis
+        ),
+    )
+
+
+def _init_state_alive(obj, X_local):
+    """Round-0 ``(state, alive)`` for one shard of the ground set."""
+    state0 = (
+        obj.dist_init(X_local),
+        jnp.zeros((X_local.shape[1],), bool),     # shard-local sel mask
+    )
+    # Zero columns (pad_ground_set padding, or genuinely empty
+    # candidates) start dead: they can contribute nothing, and the
+    # commit step samples uniformly from `alive`, so leaving them in
+    # would let padding burn capacity and pollute sel_mask whenever a
+    # round commits without filtering.
+    alive0 = jnp.sum(X_local * X_local, axis=0) > 0
+    return state0, alive0
+
+
+def _make_guess_runner(obj, cfg: DashConfig, n_local: int, n_global: int,
                        model_axis: str, data_axis: str | None,
                        use_filter_engine: bool):
     """Build the shard-local single-guess DASH body.
@@ -146,116 +326,10 @@ def _make_guess_runner(obj, cfg: DashConfig, n_local: int,
     only ``model_axis`` / ``data_axis``, so the caller is free to lay a
     ``pod`` axis on top.
     """
-    block = cfg.block
-
     def run_one(X_local, key_rep, opt_rep, alpha_rep=None):
-        def draw(kk, alive, allowed):
-            """One global sample: local indices/ownership + gathered cols.
-
-            Collectives (all_gather / psum over the model axis) stay in
-            this stage; every oracle call on the result is shard-local.
-            """
-            idx_l, owned, validg = _dist_sample(
-                kk, alive, block, n_local, model_axis
-            )
-            slot_ok = validg & (jnp.arange(block) < allowed)
-            C = _dist_gather_columns(X_local, idx_l, owned & slot_ok,
-                                     model_axis)
-            return idx_l, owned, slot_ok, C
-
-        def fold_data(key):
-            # Each data-axis replica evaluates its own samples; the
-            # estimators pmean/psum the results back together.
-            didx = jax.lax.axis_index(data_axis) if data_axis else 0
-            return jax.random.fold_in(key, didx)
-
-        def gains_local(ds, sel_local):
-            return jnp.where(sel_local, 0.0, obj.dist_gains(ds, X_local))
-
-        def estimate_set_gain(state, alive, allowed, key):
-            ds, _ = state
-
-            def one(kk):
-                _, _, slot_ok, C = draw(kk, alive, allowed)
-                return obj.dist_set_gain(ds, C, slot_ok)
-
-            vals = jax.vmap(one)(
-                jax.random.split(fold_data(key), cfg.n_samples)
-            )
-            est = jnp.mean(vals)
-            if data_axis:
-                est = jax.lax.pmean(est, data_axis)
-            return est
-
-        def estimate_elem_gains(state, alive, allowed, key):
-            ds, sel_local = state
-            keys = jax.random.split(fold_data(key), cfg.n_samples)
-
-            def one_draw(kk):
-                idx_l, owned, slot_ok, C = draw(kk, alive, allowed)
-                w = jnp.ones((n_local,)).at[idx_l].add(
-                    jnp.where(owned & slot_ok, -1.0, 0.0)
-                )
-                return C, slot_ok, w
-
-            Cs, slot_oks, ws = jax.vmap(one_draw)(keys)
-            if use_filter_engine:
-                # Shared state + per-sample deltas: one fused engine
-                # sweep of the local candidate shard for all samples.
-                gs = obj.dist_filter_gains_batch(ds, Cs, slot_oks, X_local)
-            else:
-                gs = jax.vmap(
-                    lambda C, v: obj.dist_gains(
-                        obj.dist_add_set(ds, C, v, X_local), X_local
-                    )
-                )(Cs, slot_oks)
-            gs = jnp.where(sel_local[None, :], 0.0, gs)
-
-            gsum, wsum = jnp.sum(gs * ws, axis=0), jnp.sum(ws, axis=0)
-            if data_axis:
-                gsum = jax.lax.psum(gsum, data_axis)
-                wsum = jax.lax.psum(wsum, data_axis)
-            est = gsum / jnp.maximum(wsum, 1.0)
-            return jnp.where(wsum > 0, est, gains_local(ds, sel_local))
-
-        def pick_and_add(state, alive, allowed, key):
-            ds, sel_local = state
-            idx_l, owned, slot_ok, C = draw(key, alive, allowed)
-            ds = obj.dist_add_set(ds, C, slot_ok, X_local)
-            # Scatter ONLY the owned slots: idx_l entries for slots owned
-            # by other shards are foreign local indices that can collide
-            # with an owned slot's index, and a duplicate-index .set()
-            # could then drop the True write.  Routing non-owned slots to
-            # an out-of-bounds index (mode="drop") makes the scatter
-            # collision-free.
-            idx_safe = jnp.where(owned & slot_ok, idx_l, n_local)
-            sel_local = sel_local.at[idx_safe].set(True, mode="drop")
-            added = jax.lax.psum(
-                jnp.sum((owned & slot_ok).astype(jnp.int32)), model_axis
-            )
-            return (ds, sel_local), added
-
-        hooks = SelectionHooks(
-            value=lambda state: obj.dist_value(state[0]),
-            sel_mask=lambda state: state[1],
-            estimate_set_gain=estimate_set_gain,
-            estimate_elem_gains=estimate_elem_gains,
-            pick_and_add=pick_and_add,
-            count_alive=lambda alive: jax.lax.psum(
-                jnp.sum(alive.astype(jnp.int32)), model_axis
-            ),
-        )
-
-        state0 = (
-            obj.dist_init(X_local),
-            jnp.zeros((n_local,), bool),     # shard-local sel mask
-        )
-        # Zero columns (pad_ground_set padding, or genuinely empty
-        # candidates) start dead: they can contribute nothing, and the
-        # commit step samples uniformly from `alive`, so leaving them in
-        # would let padding burn capacity and pollute sel_mask whenever a
-        # round commits without filtering.
-        alive0 = jnp.sum(X_local * X_local, axis=0) > 0
+        hooks = _make_hooks(obj, cfg, X_local, n_global, model_axis,
+                            data_axis, use_filter_engine)
+        state0, alive0 = _init_state_alive(obj, X_local)
         (ds, sel_local), _, count, _, trace = run_selection_rounds(
             hooks, cfg, opt_rep, key_rep, state0, alive0, alpha=alpha_rep
         )
@@ -298,8 +372,10 @@ def _dist_runner(obj, cfg: DashConfig, mesh, n_local: int, model_axis: str,
     jit(shard_map) closure per call would retrace and recompile on EVERY
     invocation — guess sweeps and benchmarks call this repeatedly."""
     def build():
-        run_one = _make_guess_runner(obj, cfg, n_local, model_axis,
-                                     data_axis, engine)
+        run_one = _make_guess_runner(
+            obj, cfg, n_local, n_local * mesh.shape[model_axis],
+            model_axis, data_axis, engine,
+        )
         in_specs = (P(None, model_axis), P(), P())
         out_specs = (
             P(model_axis), P(), P(), P(),
@@ -318,6 +394,9 @@ def dash_distributed(
     obj, cfg: DashConfig, key, opt, mesh,
     *, model_axis: str = "model", data_axis: str | None = "data",
     use_filter_engine: bool | None = None,
+    resilience: ResilienceConfig | None = None,
+    resume: str | bool | None = None,
+    failure_injector=None,
 ):
     """Run DASH for any ``DistributedObjective`` on a device mesh.
 
@@ -332,6 +411,19 @@ def dash_distributed(
     ``False`` forces the per-sample ``dist_add_set`` + ``dist_gains``
     path, which re-evaluates the full local shard once per sample.
 
+    Resilience (docs/resilience.md): passing any of ``resilience`` /
+    ``resume`` / ``failure_injector`` switches to the host-stepped
+    runtime — one compiled launch per round instead of one per run —
+    which snapshots the carry at round boundaries, simulates straggler
+    deadlines, and can ``resume`` (a checkpoint directory, or ``True``
+    for ``resilience.ckpt_dir``) onto THIS mesh even when the snapshot
+    was taken on a mesh with a different model-axis width: the carry is
+    re-sharded via ``runtime/elastic.py::reshard_tree`` and the
+    replicated-Gumbel sampling is partition-invariant, so the resumed
+    selection is bitwise the uninterrupted one.  (The data-axis size
+    must be preserved — it is folded into the sample keys — and is
+    validated against the snapshot manifest.)
+
     This runs ONE (OPT, α) guess; :func:`dash_auto_distributed` sweeps
     the whole guess lattice over the ``pod`` mesh axis in one launch.
     """
@@ -340,9 +432,14 @@ def dash_distributed(
     cfg = cfg.resolve(n)
     Pm = mesh.shape[model_axis]
     assert n % Pm == 0, f"pad ground set: n={n} % model={Pm}"
+    engine = _resolve_engine_flag(obj, use_filter_engine)
+    if resilience is not None or resume or failure_injector is not None:
+        return _dash_distributed_stepped(
+            obj, cfg, key, opt, mesh, model_axis, data_axis, engine,
+            resilience, resume, failure_injector,
+        )
     run_sharded = _dist_runner(
-        obj, cfg, mesh, n // Pm, model_axis, data_axis,
-        _resolve_engine_flag(obj, use_filter_engine),
+        obj, cfg, mesh, n // Pm, model_axis, data_axis, engine,
     )
     sel, nsel, value, rounds, trace = run_sharded(
         X, key, jnp.asarray(opt, jnp.float32)
@@ -351,6 +448,325 @@ def dash_distributed(
         sel_mask=sel, sel_count=nsel, value=value, rounds=rounds,
         values_trace=trace.values, trace=trace,
     )
+
+
+# ---------------------------------------------------------------------------
+# resilient (round-stepped) runtime: snapshot / elastic resume / stragglers
+# ---------------------------------------------------------------------------
+
+def _dist_state_specs(obj, n_local: int, model_axis: str):
+    """PartitionSpecs for an objective's dist-state pytree, inferred
+    without extending the ``DistributedObjective`` contract: evaluate
+    ``dist_init``'s shape structure for a LOCAL shard and for the GLOBAL
+    ground set — dimensions that scale with the shard width are
+    column-sharded (``model_axis``), identical ones are replicated."""
+    d, n = obj.X.shape
+    dt = obj.X.dtype
+    local = jax.eval_shape(
+        obj.dist_init, jax.ShapeDtypeStruct((d, n_local), dt))
+    glob = jax.eval_shape(obj.dist_init, jax.ShapeDtypeStruct((d, n), dt))
+
+    def one(loc, glo):
+        return P(*[model_axis if int(ls) != int(gs) else None
+                   for ls, gs in zip(loc.shape, glo.shape)])
+
+    return jax.tree_util.tree_map(one, local, glob)
+
+
+def _carry_specs(obj, n_local: int, model_axis: str) -> SelectionCarry:
+    """PartitionSpecs for the full :class:`SelectionCarry`.  Used as the
+    stepped runners' in/out specs — which makes the host-side carry a
+    GLOBAL view (shard-local leaves reassembled along ``model_axis``),
+    i.e. the snapshot format is mesh-shape-agnostic by construction."""
+    return SelectionCarry(
+        state=(_dist_state_specs(obj, n_local, model_axis), P(model_axis)),
+        alive=P(model_axis), count=P(), key=P(),
+        trace=DashTrace(values=P(), alive=P(), filter_iters=P(),
+                        est_set_gain=P()),
+    )
+
+
+def _round_step_runner(obj, cfg: DashConfig, mesh, n_local: int,
+                       model_axis: str, data_axis: str | None, engine: bool,
+                       policy):
+    """Jitted ONE-ROUND sharded executor (weak-cached).  ``rho``, OPT, α
+    and the responder mask are runtime inputs, so a single compilation
+    serves every round of every (resumed) run.  ``policy`` non-None
+    builds the straggler-aware estimators."""
+    def build():
+        n_glob = n_local * mesh.shape[model_axis]
+        cspecs = _carry_specs(obj, n_local, model_axis)
+
+        def step(X_local, rho, opt, alpha, arrived, carry):
+            hooks = _make_hooks(
+                obj, cfg, X_local, n_glob, model_axis, data_axis, engine,
+                arrived=arrived if policy is not None else None,
+                policy=policy,
+            )
+            return make_round_body(hooks, cfg)(rho, carry, opt, alpha)
+
+        in_specs = (P(None, model_axis), P(), P(), P(), P(), cspecs)
+        return jax.jit(_shard_mapped(step, mesh, in_specs, cspecs))
+
+    return cached_runner(
+        obj,
+        ("dist_step", cfg, mesh, n_local, model_axis, data_axis, engine,
+         policy),
+        build,
+    )
+
+
+def _init_carry_runner(obj, cfg: DashConfig, mesh, n_local: int,
+                       model_axis: str):
+    def build():
+        cspecs = _carry_specs(obj, n_local, model_axis)
+
+        def init(X_local, key):
+            state0, alive0 = _init_state_alive(obj, X_local)
+            return initial_carry(cfg, key, state0, alive0)
+
+        return jax.jit(
+            _shard_mapped(init, mesh, (P(None, model_axis), P()), cspecs))
+
+    return cached_runner(
+        obj, ("dist_init_carry", cfg, mesh, n_local, model_axis), build)
+
+
+def _finalize_runner(obj, cfg: DashConfig, mesh, n_local: int,
+                     model_axis: str):
+    def build():
+        cspecs = _carry_specs(obj, n_local, model_axis)
+
+        def fin(carry):
+            (ds, sel_local), _, count, _, trace = carry
+            rounds = (jnp.sum(trace.filter_iters)
+                      + jnp.asarray(cfg.r, jnp.int32))
+            return sel_local, count, obj.dist_value(ds), rounds, trace
+
+        out_specs = (P(model_axis), P(), P(), P(), cspecs.trace)
+        return jax.jit(_shard_mapped(fin, mesh, (cspecs,), out_specs))
+
+    return cached_runner(
+        obj, ("dist_finalize", cfg, mesh, n_local, model_axis), build)
+
+
+def _snapshot_meta(algo: str, cfg: DashConfig, n: int,
+                   data_size: int) -> dict:
+    """Manifest `extra` for round snapshots: everything a resume target
+    must agree on.  The model-axis width is deliberately ABSENT — that
+    is the degree of freedom elastic restore exercises."""
+    return {"algo": algo, "n": int(n), "k": int(cfg.k), "r": int(cfg.r),
+            "n_samples": int(cfg.n_samples), "data_axis_size": int(data_size)}
+
+
+def _restore_carry(resume_dir: str, like, specs, mesh, expect_meta: dict):
+    """Latest complete snapshot → carry RE-SHARDED onto ``mesh``.
+
+    Returns ``(carry, start_round)`` or None when the directory has no
+    complete snapshot (cold start).  The manifest's compatibility meta
+    is validated against ``expect_meta`` first — resuming onto a
+    different data-axis size (or a different problem entirely) fails
+    loudly instead of silently diverging.
+    """
+    from repro.ckpt.checkpoint import (
+        latest_complete_step,
+        read_manifest,
+        restore_checkpoint,
+    )
+    from repro.runtime.elastic import reshard_tree
+
+    snap = latest_complete_step(resume_dir)
+    if snap is None:
+        return None
+    meta = read_manifest(resume_dir, snap).get("extra", {})
+    for name, want in expect_meta.items():
+        got = meta.get(name)
+        if got is not None and got != want:
+            raise ValueError(
+                f"snapshot {resume_dir} step {snap}: {name}={got!r} is "
+                f"incompatible with the resume target ({name}={want!r})")
+    carry_host, _ = restore_checkpoint(resume_dir, like, step=snap)
+    return reshard_tree(carry_host, specs, mesh), int(meta["round"])
+
+
+def _carry_like(init_runner, X, key):
+    """Global ShapeDtypeStructs of the carry — the restore `like` tree."""
+    return jax.eval_shape(
+        init_runner,
+        jax.ShapeDtypeStruct(X.shape, X.dtype),
+        jax.ShapeDtypeStruct(key.shape, key.dtype),
+    )
+
+
+def _dash_distributed_stepped(obj, cfg: DashConfig, key, opt, mesh,
+                              model_axis: str, data_axis: str | None,
+                              engine: bool,
+                              resilience: ResilienceConfig | None,
+                              resume, failure_injector):
+    """Host-stepped :func:`dash_distributed` body (resolved cfg)."""
+    d, n = obj.X.shape
+    n_local = n // mesh.shape[model_axis]
+    res = resilience if resilience is not None else ResilienceConfig()
+    policy = res.resolved_policy() if res.straggler else None
+    step = _round_step_runner(obj, cfg, mesh, n_local, model_axis,
+                              data_axis, engine, policy)
+    init = _init_carry_runner(obj, cfg, mesh, n_local, model_axis)
+    fin = _finalize_runner(obj, cfg, mesh, n_local, model_axis)
+    data_size = mesh.shape[data_axis] if data_axis else 1
+    meta = _snapshot_meta("dash_distributed", cfg, n, data_size)
+
+    carry, start_round = None, 0
+    if resume:
+        resume_dir = res.ckpt_dir if resume is True else resume
+        restored = _restore_carry(
+            resume_dir, _carry_like(init, obj.X, key),
+            _carry_specs(obj, n_local, model_axis), mesh, meta)
+        if restored is not None:
+            carry, start_round = restored
+    if carry is None:
+        carry = init(obj.X, key)
+
+    opt_v = jnp.asarray(opt, jnp.float32)
+    alpha_v = jnp.asarray(cfg.alpha, jnp.float32)
+    carry = drive_checkpointed_rounds(
+        lambda rho, c, arrived: step(obj.X, rho, opt_v, alpha_v, arrived, c),
+        carry, cfg, resilience=resilience, start_round=start_round,
+        failure_injector=failure_injector, snapshot_extra=meta,
+    )
+    sel, nsel, value, rounds, trace = fin(carry)
+    return DistDashResult(
+        sel_mask=sel, sel_count=nsel, value=value, rounds=rounds,
+        values_trace=trace.values, trace=trace,
+    )
+
+
+def dash_distributed_restartable(
+    obj, cfg: DashConfig, key, opt,
+    *, resilience: ResilienceConfig, mesh_provider,
+    model_axis: str = "model", data_axis: str | None = "data",
+    use_filter_engine: bool | None = None, failure_injector=None,
+    max_failures: int = 3, backoff_s: float = 0.0, sleep_fn=None,
+) -> DistDashResult:
+    """The full resilience composition: ``run_with_restart`` driving
+    restore → (elastic) reshard → continue.
+
+    ``mesh_provider()`` is consulted at every (re)start and may return a
+    DIFFERENT mesh than the previous attempt ran on — a device loss
+    shrinks the fleet, ``runtime/elastic.py::elastic_mesh`` builds the
+    survivor mesh, and the restored carry is re-sharded onto it.  Every
+    attempt replays from the newest complete round snapshot in
+    ``resilience.ckpt_dir``; ``failure_injector`` (checked before each
+    round) turns this into the kill-and-resume chaos test.  Snapshot
+    writes ride ``run_with_restart``'s at-most-once ``on_step`` hook, so
+    replayed rounds never double-save.
+    """
+    from repro.ckpt.checkpoint import latest_complete_step
+    from repro.runtime.fault_tolerance import run_with_restart
+
+    if not resilience.ckpt_dir:
+        raise ValueError(
+            "dash_distributed_restartable needs resilience.ckpt_dir")
+    d, n = obj.X.shape
+    cfg = cfg.resolve(n)
+    engine = _resolve_engine_flag(obj, use_filter_engine)
+    policy = resilience.resolved_policy() if resilience.straggler else None
+    ctx: dict = {}
+
+    def activate():
+        mesh = mesh_provider()
+        Pm = mesh.shape[model_axis]
+        assert n % Pm == 0, f"pad ground set: n={n} % model={Pm}"
+        n_local = n // Pm
+        ctx.update(
+            mesh=mesh, n_local=n_local,
+            data_size=mesh.shape[data_axis] if data_axis else 1,
+            specs=_carry_specs(obj, n_local, model_axis),
+            step=_round_step_runner(obj, cfg, mesh, n_local, model_axis,
+                                    data_axis, engine, policy),
+            init=_init_carry_runner(obj, cfg, mesh, n_local, model_axis),
+            fin=_finalize_runner(obj, cfg, mesh, n_local, model_axis),
+        )
+
+    def meta():
+        return _snapshot_meta("dash_distributed", cfg, n, ctx["data_size"])
+
+    def make_state():
+        activate()
+        return ctx["init"](obj.X, key), 0
+
+    def restore():
+        if latest_complete_step(resilience.ckpt_dir) is None:
+            return None        # nothing saved yet → cold restart
+        activate()             # fresh (possibly shrunken) mesh
+        return _restore_carry(
+            resilience.ckpt_dir, _carry_like(ctx["init"], obj.X, key),
+            ctx["specs"], ctx["mesh"], meta())
+
+    ckpt = RoundCheckpointer(resilience)
+    opt_v = jnp.asarray(opt, jnp.float32)
+    alpha_v = jnp.asarray(cfg.alpha, jnp.float32)
+
+    def step_fn(carry, rho):
+        if failure_injector is not None:
+            failure_injector.check(rho)
+        arrived = round_arrivals(resilience, cfg, rho)
+        return ctx["step"](obj.X, rho, opt_v, alpha_v, arrived, carry)
+
+    def on_step(carry, rho):
+        if (rho + 1) % resilience.every == 0:
+            ckpt.save(rho + 1, carry, extra=meta())
+
+    kw = {} if sleep_fn is None else {"sleep_fn": sleep_fn}
+    carry = run_with_restart(
+        total_steps=cfg.r, make_state=make_state, restore=restore,
+        step_fn=step_fn, on_step=on_step, max_failures=max_failures,
+        backoff_s=backoff_s, **kw,
+    )
+    ckpt.wait()
+    sel, nsel, value, rounds, trace = ctx["fin"](carry)
+    return DistDashResult(
+        sel_mask=sel, sel_count=nsel, value=value, rounds=rounds,
+        values_trace=trace.values, trace=trace,
+    )
+
+
+def _commit_lattice_winner(res, g_local: int, pod_axis: str):
+    """Winner commit shared by the fused and the round-stepped lattice
+    runtimes.  ``res`` is the per-guess stacked result tuple
+    ``(sel_local, count, value, rounds, trace)`` with a leading
+    ``g_local`` axis (shard-local view, inside ``shard_map``).
+
+    Local best of this pod slice's guesses, then the global commit:
+    all_gather (pod,) values → replicated argmax → psum broadcast.  NaN
+    lanes are masked out of both argmaxes (nan_to_neginf) so a
+    degenerate guess can never win the lattice."""
+    from repro.core.dash import nan_to_neginf
+
+    def commit_winner(tree, win):
+        # Broadcast the winning pod's pytree to every pod (exactly one
+        # pod has ``win=True``, so the psum IS the winner's value).
+        def pick(x):
+            masked = jnp.where(win, x, jnp.zeros_like(x))
+            if x.dtype == jnp.bool_:
+                return jax.lax.psum(masked.astype(jnp.int32), pod_axis) > 0
+            return jax.lax.psum(masked, pod_axis)
+        return jax.tree_util.tree_map(pick, tree)
+
+    value_s = res[2]
+    bi = jnp.argmax(nan_to_neginf(value_s))
+    local_best = jax.tree_util.tree_map(
+        lambda x: jnp.take(x, bi, axis=0), res
+    )
+    vals_pod = jax.lax.all_gather(local_best[2], pod_axis)         # (Pp,)
+    gbi = jnp.argmax(nan_to_neginf(vals_pod))
+    win = jax.lax.axis_index(pod_axis) == gbi
+    sel_b, count_b, value_b, rounds_b, trace_b = commit_winner(
+        local_best, win
+    )
+    best_guess = gbi.astype(jnp.int32) * g_local + bi.astype(jnp.int32)
+    best_guess = commit_winner(best_guess, win)
+    return (sel_b, count_b, value_b, rounds_b, trace_b, value_s,
+            best_guess)
 
 
 def _lattice_dist_runner(obj, cfg: DashConfig, mesh, n_local: int,
@@ -364,20 +780,10 @@ def _lattice_dist_runner(obj, cfg: DashConfig, mesh, n_local: int,
     numerics are bitwise those of the per-guess runs), picks its local
     best, and the winner is committed with an ``all_gather`` of per-pod
     best values + replicated argmax + ``psum`` broadcast."""
-    from repro.core.dash import nan_to_neginf
-
-    run_one = _make_guess_runner(obj, cfg, n_local, model_axis, data_axis,
-                                 engine)
-
-    def commit_winner(tree, win):
-        """Broadcast the winning pod's pytree to every pod (exactly one
-        pod has ``win=True``, so the psum IS the winner's value)."""
-        def pick(x):
-            masked = jnp.where(win, x, jnp.zeros_like(x))
-            if x.dtype == jnp.bool_:
-                return jax.lax.psum(masked.astype(jnp.int32), pod_axis) > 0
-            return jax.lax.psum(masked, pod_axis)
-        return jax.tree_util.tree_map(pick, tree)
+    run_one = _make_guess_runner(
+        obj, cfg, n_local, n_local * mesh.shape[model_axis], model_axis,
+        data_axis, engine,
+    )
 
     def run(X_local, keys_l, opts_l, alphas_l):
         if g_local == 1:
@@ -389,26 +795,7 @@ def _lattice_dist_runner(obj, cfg: DashConfig, mesh, n_local: int,
             res = jax.vmap(
                 lambda kk, g, a: run_one(X_local, kk, g, a)
             )(keys_l, opts_l, alphas_l)
-        value_s = res[2]
-
-        # Local best of this pod slice's guesses, then the global commit:
-        # all_gather (pod,) values → replicated argmax → psum broadcast.
-        # NaN lanes are masked out of both argmaxes (nan_to_neginf) so a
-        # degenerate guess can never win the lattice.
-        bi = jnp.argmax(nan_to_neginf(value_s))
-        local_best = jax.tree_util.tree_map(
-            lambda x: jnp.take(x, bi, axis=0), res
-        )
-        vals_pod = jax.lax.all_gather(local_best[2], pod_axis)     # (Pp,)
-        gbi = jnp.argmax(nan_to_neginf(vals_pod))
-        win = jax.lax.axis_index(pod_axis) == gbi
-        sel_b, count_b, value_b, rounds_b, trace_b = commit_winner(
-            local_best, win
-        )
-        best_guess = gbi.astype(jnp.int32) * g_local + bi.astype(jnp.int32)
-        best_guess = commit_winner(best_guess, win)
-        return (sel_b, count_b, value_b, rounds_b, trace_b, value_s,
-                best_guess)
+        return _commit_lattice_winner(res, g_local, pod_axis)
 
     trace_spec = DashTrace(values=P(), alive=P(), filter_iters=P(),
                            est_set_gain=P())
@@ -422,12 +809,153 @@ def _lattice_dist_runner(obj, cfg: DashConfig, mesh, n_local: int,
     )
 
 
+def _lattice_carry_specs(obj, n_local: int, pod_axis: str,
+                         model_axis: str) -> SelectionCarry:
+    """Per-guess carry specs: the single-guess specs with the lattice's
+    leading guess axis sharded over ``pod``."""
+    base = _carry_specs(obj, n_local, model_axis)
+    return jax.tree_util.tree_map(lambda s: P(pod_axis, *s), base)
+
+
+def _lattice_step_runner(obj, cfg: DashConfig, mesh, n_local: int,
+                         g_local: int, pod_axis: str, model_axis: str,
+                         data_axis: str | None, engine: bool, policy):
+    """One lattice ROUND: every pod slice advances its ``g_local``
+    per-guess carries through the shared round body (vmapped)."""
+    def build():
+        n_glob = n_local * mesh.shape[model_axis]
+        cspecs = _lattice_carry_specs(obj, n_local, pod_axis, model_axis)
+
+        def step(X_local, rho, opts_l, alphas_l, arrived, carry):
+            hooks = _make_hooks(
+                obj, cfg, X_local, n_glob, model_axis, data_axis, engine,
+                arrived=arrived if policy is not None else None,
+                policy=policy,
+            )
+            body = make_round_body(hooks, cfg)
+            return jax.vmap(
+                lambda c, g, a: body(rho, c, g, a)
+            )(carry, opts_l, alphas_l)
+
+        in_specs = (P(None, model_axis), P(), P(pod_axis), P(pod_axis),
+                    P(), cspecs)
+        return jax.jit(_shard_mapped(step, mesh, in_specs, cspecs))
+
+    return cached_runner(
+        obj,
+        ("lattice_step", cfg, mesh, n_local, g_local, pod_axis, model_axis,
+         data_axis, engine, policy),
+        build,
+    )
+
+
+def _lattice_init_runner(obj, cfg: DashConfig, mesh, n_local: int,
+                         g_local: int, pod_axis: str, model_axis: str):
+    def build():
+        cspecs = _lattice_carry_specs(obj, n_local, pod_axis, model_axis)
+
+        def init(X_local, keys_l):
+            def one(kk):
+                state0, alive0 = _init_state_alive(obj, X_local)
+                return initial_carry(cfg, kk, state0, alive0)
+            return jax.vmap(one)(keys_l)
+
+        return jax.jit(_shard_mapped(
+            init, mesh, (P(None, model_axis), P(pod_axis)), cspecs))
+
+    return cached_runner(
+        obj,
+        ("lattice_init_carry", cfg, mesh, n_local, g_local, pod_axis,
+         model_axis),
+        build,
+    )
+
+
+def _lattice_finalize_runner(obj, cfg: DashConfig, mesh, n_local: int,
+                             g_local: int, pod_axis: str, model_axis: str):
+    def build():
+        cspecs = _lattice_carry_specs(obj, n_local, pod_axis, model_axis)
+
+        def fin(carry):
+            def one(c):
+                (ds, sel_local), _, count, _, trace = c
+                rounds = (jnp.sum(trace.filter_iters)
+                          + jnp.asarray(cfg.r, jnp.int32))
+                return sel_local, count, obj.dist_value(ds), rounds, trace
+            res = jax.vmap(one)(carry)
+            return _commit_lattice_winner(res, g_local, pod_axis)
+
+        trace_spec = DashTrace(values=P(), alive=P(), filter_iters=P(),
+                               est_set_gain=P())
+        out_specs = (P(model_axis), P(), P(), P(), trace_spec,
+                     P(pod_axis), P())
+        return jax.jit(_shard_mapped(fin, mesh, (cspecs,), out_specs))
+
+    return cached_runner(
+        obj,
+        ("lattice_finalize", cfg, mesh, n_local, g_local, pod_axis,
+         model_axis),
+        build,
+    )
+
+
+def _dash_auto_distributed_stepped(obj, cfg: DashConfig, keys, opts,
+                                   alphas_arr, mesh, g_local: int,
+                                   pod_axis: str, model_axis: str,
+                                   data_axis: str | None, engine: bool,
+                                   resilience: ResilienceConfig | None,
+                                   resume, failure_injector):
+    """Host-stepped lattice body: snapshot/resume the whole pod sweep."""
+    d, n = obj.X.shape
+    n_local = n // mesh.shape[model_axis]
+    res = resilience if resilience is not None else ResilienceConfig()
+    policy = res.resolved_policy() if res.straggler else None
+    step = _lattice_step_runner(obj, cfg, mesh, n_local, g_local, pod_axis,
+                                model_axis, data_axis, engine, policy)
+    init = _lattice_init_runner(obj, cfg, mesh, n_local, g_local, pod_axis,
+                                model_axis)
+    fin = _lattice_finalize_runner(obj, cfg, mesh, n_local, g_local,
+                                   pod_axis, model_axis)
+    data_size = mesh.shape[data_axis] if data_axis else 1
+    meta = _snapshot_meta("dash_auto_distributed", cfg, n, data_size)
+    # The guess→pod layout is part of the key stream: both the lattice
+    # width and the pod-axis size must be preserved across a resume.
+    meta["n_runs"] = int(opts.shape[0])
+    meta["pod_axis_size"] = int(mesh.shape[pod_axis])
+
+    carry, start_round = None, 0
+    if resume:
+        resume_dir = res.ckpt_dir if resume is True else resume
+        restored = _restore_carry(
+            resume_dir, _carry_like(init, obj.X, keys),
+            _lattice_carry_specs(obj, n_local, pod_axis, model_axis),
+            mesh, meta)
+        if restored is not None:
+            carry, start_round = restored
+    if carry is None:
+        carry = init(obj.X, keys)
+
+    carry = drive_checkpointed_rounds(
+        lambda rho, c, arrived: step(obj.X, rho, opts, alphas_arr,
+                                     arrived, c),
+        carry, cfg, resilience=resilience, start_round=start_round,
+        failure_injector=failure_injector, snapshot_extra=meta,
+    )
+    sel, nsel, value, rounds, trace, lattice_values, best_guess = fin(carry)
+    return LatticeDistResult(
+        sel_mask=sel, sel_count=nsel, value=value, rounds=rounds,
+        trace=trace, lattice_values=lattice_values, best_guess=best_guess,
+    )
+
+
 def dash_auto_distributed(
     obj, k: int, key, mesh,
     *, eps: float = 0.2, alpha: float = 0.5, r: int = 0,
     n_samples: int = 8, n_guesses: int = 8, trim_frac: float = 0.0,
     alphas=None, pod_axis: str = "pod", model_axis: str = "model",
     data_axis: str | None = "data", use_filter_engine: bool | None = None,
+    resilience: ResilienceConfig | None = None,
+    resume: str | bool | None = None, failure_injector=None,
 ) -> LatticeDistResult:
     """Distributed DASH over the WHOLE (OPT, α) guess lattice — one
     compiled ``shard_map`` launch instead of ``n_guesses`` sequential
@@ -449,6 +977,12 @@ def dash_auto_distributed(
     Requires ``pod_axis`` in the mesh and the total number of joint
     guesses divisible by its size.  Returns :class:`LatticeDistResult`;
     ``lattice_values`` holds every guess's final f(S) in lattice order.
+
+    ``resilience`` / ``resume`` / ``failure_injector`` switch to the
+    round-stepped runtime (see :func:`dash_distributed`), which
+    snapshots ALL per-guess carries each round; a resume must preserve
+    the lattice width, pod-axis size and data-axis size (validated
+    against the snapshot manifest) but may change the model-axis width.
     """
     from repro.core.dash import lattice_grid, opt_guess_lattice
 
@@ -469,9 +1003,16 @@ def dash_auto_distributed(
     )
     g_local = n_runs // Pp
     keys = jax.random.split(key, n_runs)
+    engine = _resolve_engine_flag(obj, use_filter_engine)
+    if resilience is not None or resume or failure_injector is not None:
+        return _dash_auto_distributed_stepped(
+            obj, cfg, keys, opts, alphas_arr, mesh, g_local, pod_axis,
+            model_axis, data_axis, engine, resilience, resume,
+            failure_injector,
+        )
     run_sharded = _lattice_dist_runner(
         obj, cfg, mesh, n // Pm, g_local, pod_axis, model_axis, data_axis,
-        _resolve_engine_flag(obj, use_filter_engine),
+        engine,
     )
     sel, nsel, value, rounds, trace, lattice_values, best_guess = run_sharded(
         X, keys, opts, alphas_arr

@@ -26,6 +26,17 @@ Per round (t = (1−ε)(OPT − f(S)), block b = ⌈k/r⌉):
 
 The iteration cap keeps the compiled while loop total even for
 non-differentially-submodular inputs (paper App. A.2's failure mode).
+
+Resilience (docs/resilience.md): the round boundary is the natural
+snapshot point — the full loop state is one :class:`SelectionCarry`
+pytree, and one round is a pure function of ``(carry, round, OPT, α)``.
+:func:`make_round_body` exposes that per-round function so a host driver
+(:func:`drive_checkpointed_rounds`) can step rounds one compiled call at
+a time, snapshotting the carry through ``ckpt/checkpoint.py`` after each
+boundary (:class:`RoundCheckpointer`, atomic + async) and regenerating
+the straggler simulator's per-round responder masks
+(``runtime/straggler.py::simulate_arrivals``) as a pure function of
+``(seed, round)`` — which together make kill-and-resume replay exact.
 """
 
 from __future__ import annotations
@@ -36,6 +47,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = Any
 
@@ -78,6 +90,23 @@ class DashTrace(NamedTuple):
     est_set_gain: jnp.ndarray  # (r,) final Ê[f_S(R)] per round
 
 
+class SelectionCarry(NamedTuple):
+    """The complete between-round loop state — ALSO the snapshot format.
+
+    Everything a resumed run needs is here: the runtime's opaque oracle
+    ``state`` (distributed: the replicated dist-state + selection mask),
+    the survivor mask, |S|, the threaded PRNG key, and the trace.  A
+    NamedTuple so it unpacks like the historical 5-tuple AND flattens to
+    a stable pytree for ``ckpt/checkpoint.py``.
+    """
+
+    state: Any
+    alive: Array
+    count: Array
+    key: Array
+    trace: DashTrace
+
+
 @dataclass(frozen=True)
 class DashConfig:
     k: int                     # cardinality constraint
@@ -103,6 +132,99 @@ class DashConfig:
     def block(self) -> int:
         """⌈k/r⌉ — elements committed per outer round (resolved cfg only)."""
         return max(1, -(-self.k // max(self.r, 1)))
+
+
+@dataclass(frozen=True)
+class ResilienceConfig:
+    """How a selection run snapshots, resumes and rides out stragglers.
+
+    Checkpointing: with ``ckpt_dir`` set, the host-stepped drivers save
+    the :class:`SelectionCarry` through ``ckpt/checkpoint.py`` every
+    ``every`` completed rounds (atomic rename; ``async_save`` hands the
+    write to a background thread so the device keeps stepping), pruning
+    to the ``keep_last`` newest complete snapshots.
+
+    Straggler simulation: ``drop_rate > 0`` makes each round's
+    Monte-Carlo replica fleet miss the deadline independently with that
+    probability (mask from ``runtime/straggler.py::simulate_arrivals``,
+    a pure function of ``(straggler_seed, round)`` so interrupted and
+    resumed runs see identical arrivals).  ``policy`` (a
+    ``StragglerPolicy``; default constructed when None) sets the
+    robust reduction for incomplete rounds — complete rounds
+    short-circuit to the plain mean and stay bitwise deterministic.
+    """
+
+    ckpt_dir: str | None = None
+    every: int = 1
+    keep_last: int = 3
+    async_save: bool = True
+    drop_rate: float = 0.0
+    straggler_seed: int = 0
+    min_arrived: int = 1
+    policy: Any = None
+
+    @property
+    def straggler(self) -> bool:
+        return self.drop_rate > 0.0
+
+    def resolved_policy(self):
+        if self.policy is not None:
+            return self.policy
+        from repro.runtime.straggler import StragglerPolicy
+
+        return StragglerPolicy()
+
+
+class RoundCheckpointer:
+    """Async round-boundary snapshot writer over ``ckpt/checkpoint.py``.
+
+    ``save`` fetches the carry to host synchronously (the only bubble
+    the device sees) and, in async mode, writes/prunes on a background
+    thread — one write in flight at a time, errors surfaced on the next
+    ``save``/``wait``.  The atomic tmp→rename in ``save_checkpoint``
+    means a kill at ANY point leaves the newest complete snapshot
+    restorable.
+    """
+
+    def __init__(self, cfg: ResilienceConfig):
+        if not cfg.ckpt_dir:
+            raise ValueError("RoundCheckpointer needs ResilienceConfig.ckpt_dir")
+        self.cfg = cfg
+        self._thread = None
+        self._error: Exception | None = None
+
+    def save(self, rounds_done: int, carry, *, extra: dict | None = None,
+             blocking: bool = False):
+        from repro.ckpt.checkpoint import save_checkpoint
+
+        self.wait()
+        host = jax.tree_util.tree_map(np.asarray, jax.device_get(carry))
+        meta = dict(extra or {})
+        meta["round"] = int(rounds_done)
+
+        def work():
+            try:
+                save_checkpoint(self.cfg.ckpt_dir, rounds_done, host,
+                                extra=meta, keep_last=self.cfg.keep_last)
+            except Exception as e:     # surfaced on next save/wait
+                self._error = e
+
+        if self.cfg.async_save and not blocking:
+            import threading
+
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            self.wait()
+
+    def wait(self, *, raise_errors: bool = True):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error and raise_errors:
+            err, self._error = self._error, None
+            raise err
 
 
 def _count_alive_local(alive) -> Array:
@@ -140,38 +262,35 @@ class SelectionHooks:
     count_alive: Callable[[Array], Array] = _count_alive_local
 
 
-def run_selection_rounds(
-    hooks: SelectionHooks,
-    cfg: DashConfig,
-    opt: Array,
-    key: Array,
-    state0: Any,
-    alive0: Array,
-    alpha: Array | None = None,
-):
-    """Drive the r DASH rounds.  ``cfg`` must already be ``resolve``-d.
-
-    ``alpha`` optionally overrides ``cfg.alpha`` with a *traced* value —
-    this is what lets the OPT-guess lattice vmap over (OPT, α) pairs
-    under ONE compilation instead of retracing per α.
-
-    Returns ``(state, alive, count, key, trace)`` — the final oracle
-    state, survivor mask, global |S|, threaded PRNG key and the
-    per-round :class:`DashTrace`.
-    """
-    k, r = cfg.k, cfg.r
-    alpha = jnp.asarray(
-        cfg.alpha if alpha is None else alpha, jnp.float32
-    )
-    alpha2 = alpha * alpha
-    opt = jnp.asarray(opt, jnp.float32)
+def initial_carry(cfg: DashConfig, key, state0: Any,
+                  alive0: Array) -> SelectionCarry:
+    """Round-0 carry for a ``resolve``-d config (zeroed trace/count)."""
+    r = cfg.r
     trace0 = DashTrace(
         values=jnp.zeros((r,)), alive=jnp.zeros((r,), jnp.int32),
         filter_iters=jnp.zeros((r,), jnp.int32), est_set_gain=jnp.zeros((r,)),
     )
+    return SelectionCarry(state=state0, alive=alive0,
+                          count=jnp.zeros((), jnp.int32), key=key,
+                          trace=trace0)
 
-    def round_body(rho, carry):
+
+def make_round_body(hooks: SelectionHooks, cfg: DashConfig):
+    """One DASH round as a pure function — the unit both drivers step.
+
+    Returns ``round_body(rho, carry, opt, alpha) -> SelectionCarry``
+    with every argument traced: :func:`run_selection_rounds` folds it
+    into a ``fori_loop``, while the checkpointed drivers jit it once
+    (``rho``/``opt``/``alpha`` as runtime inputs) and call it per round
+    from the host — ONE compilation serves every round of every guess.
+    """
+    k, r = cfg.k, cfg.r
+
+    def round_body(rho, carry: SelectionCarry, opt, alpha) -> SelectionCarry:
         state, alive, count, key, trace = carry
+        alpha = jnp.asarray(alpha, jnp.float32)
+        alpha2 = alpha * alpha
+        opt = jnp.asarray(opt, jnp.float32)
         key, k_est, k_pick = jax.random.split(key, 3)
         value = hooks.value(state)
         t = jnp.maximum((1.0 - cfg.eps) * (opt - value), 0.0)
@@ -209,9 +328,89 @@ def run_selection_rounds(
             filter_iters=trace.filter_iters.at[rho].set(iters),
             est_set_gain=trace.est_set_gain.at[rho].set(est),
         )
-        return state, alive, count + added, key, trace
+        return SelectionCarry(state=state, alive=alive, count=count + added,
+                              key=key, trace=trace)
 
+    return round_body
+
+
+def run_selection_rounds(
+    hooks: SelectionHooks,
+    cfg: DashConfig,
+    opt: Array,
+    key: Array,
+    state0: Any,
+    alive0: Array,
+    alpha: Array | None = None,
+) -> SelectionCarry:
+    """Drive the r DASH rounds.  ``cfg`` must already be ``resolve``-d.
+
+    ``alpha`` optionally overrides ``cfg.alpha`` with a *traced* value —
+    this is what lets the OPT-guess lattice vmap over (OPT, α) pairs
+    under ONE compilation instead of retracing per α.
+
+    Returns the final :class:`SelectionCarry` (unpacks like the
+    historical ``(state, alive, count, key, trace)`` tuple).
+    """
+    alpha = jnp.asarray(cfg.alpha if alpha is None else alpha, jnp.float32)
+    opt = jnp.asarray(opt, jnp.float32)
+    body = make_round_body(hooks, cfg)
     return jax.lax.fori_loop(
-        0, r, round_body,
-        (state0, alive0, jnp.zeros((), jnp.int32), key, trace0),
+        0, cfg.r, lambda rho, c: body(rho, c, opt, alpha),
+        initial_carry(cfg, key, state0, alive0),
     )
+
+
+def round_arrivals(resilience: ResilienceConfig | None, cfg: DashConfig,
+                   rho: int) -> np.ndarray:
+    """The round's (n_samples,) responder mask — all-ones unless the
+    resilience config simulates deadline misses.  Pure in (config, ρ)."""
+    if resilience is not None and resilience.straggler:
+        from repro.runtime.straggler import simulate_arrivals
+
+        return simulate_arrivals(
+            resilience.straggler_seed, rho, cfg.n_samples,
+            resilience.drop_rate, min_arrived=resilience.min_arrived,
+        )
+    return np.ones((cfg.n_samples,), bool)
+
+
+def drive_checkpointed_rounds(
+    step_fn: Callable[[int, SelectionCarry, np.ndarray], SelectionCarry],
+    carry: SelectionCarry,
+    cfg: DashConfig,
+    *,
+    resilience: ResilienceConfig | None = None,
+    start_round: int = 0,
+    failure_injector=None,
+    snapshot_extra: dict | None = None,
+) -> SelectionCarry:
+    """Host-driven round loop with snapshots — the resilient twin of
+    :func:`run_selection_rounds`.
+
+    ``step_fn(rho, carry, arrived)`` is one compiled round (the runtimes
+    build it from :func:`make_round_body`); ``carry`` between calls is a
+    HOST-visible global view, which is exactly what gets snapshotted —
+    and why a snapshot taken on one mesh restores onto another.
+    ``failure_injector.check(rho)`` runs before each round, so an
+    injected kill loses at most the rounds since the last snapshot.
+    """
+    ckpt = (RoundCheckpointer(resilience)
+            if resilience is not None and resilience.ckpt_dir else None)
+    try:
+        for rho in range(start_round, cfg.r):
+            if failure_injector is not None:
+                failure_injector.check(rho)
+            arrived = round_arrivals(resilience, cfg, rho)
+            carry = step_fn(rho, carry, arrived)
+            if ckpt is not None and (rho + 1) % resilience.every == 0:
+                ckpt.save(rho + 1, carry, extra=snapshot_extra)
+    finally:
+        if ckpt is not None:
+            # Let an in-flight write land (so an injected failure's
+            # restore sees a deterministic newest snapshot) without
+            # masking the propagating exception with a writer error.
+            ckpt.wait(raise_errors=False)
+    if ckpt is not None:
+        ckpt.wait()
+    return carry

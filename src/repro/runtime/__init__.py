@@ -1,6 +1,11 @@
 from repro.runtime.fault_tolerance import run_with_restart, FailureInjector
 from repro.runtime.elastic import elastic_mesh, reshard_tree
-from repro.runtime.straggler import StragglerPolicy, robust_estimate
+from repro.runtime.straggler import (
+    StragglerPolicy,
+    arrivals_for_rounds,
+    robust_estimate,
+    simulate_arrivals,
+)
 
 __all__ = [
     "run_with_restart",
@@ -9,4 +14,6 @@ __all__ = [
     "reshard_tree",
     "StragglerPolicy",
     "robust_estimate",
+    "simulate_arrivals",
+    "arrivals_for_rounds",
 ]

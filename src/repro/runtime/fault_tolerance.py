@@ -6,11 +6,19 @@ pipeline's batches are a pure function of the global step
 (data/pipeline.py).  ``FailureInjector`` provides deterministic failure
 injection for the integration tests (and doubles as the documented
 chaos-testing hook for real deployments).
+
+``on_step`` is the side-effect hook (checkpoint saves, metric emission);
+its contract is AT-MOST-ONCE per step index: after a restore rewinds the
+loop to an earlier step, replayed steps recompute state but do NOT
+re-fire the hook — a restore must never double-write a checkpoint or
+double-count a metric.  (Steps the hook never reached — e.g. the step
+that failed — fire normally once re-executed.)
 """
 
 from __future__ import annotations
 
 import logging
+import time
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -23,6 +31,10 @@ class FailureInjector:
 
     fail_at: tuple = ()
     _fired: set = field(default_factory=set)
+
+    def __post_init__(self):
+        if isinstance(self.fail_at, int):
+            self.fail_at = (self.fail_at,)
 
     def check(self, step: int):
         if step in self.fail_at and step not in self._fired:
@@ -38,16 +50,30 @@ def run_with_restart(
     step_fn: Callable[[object, int], object],   # (state, step) → state
     on_step: Callable[[object, int], None] | None = None,
     max_failures: int = 3,
+    backoff_s: float = 0.0,
+    sleep_fn: Callable[[float], None] = time.sleep,
 ):
-    """Generic restartable loop.  Returns the final state."""
+    """Generic restartable loop.  Returns the final state.
+
+    ``restore() is None`` (no checkpoint yet) falls back to
+    ``make_state()`` — the cold-restart path, both at entry and after a
+    failure that precedes the first save.  ``backoff_s`` spaces restarts
+    exponentially (``backoff_s · 2^(failures−1)`` before the n-th
+    restart) so a crash-looping fleet doesn't hammer the restore path;
+    ``sleep_fn`` is injectable for tests.
+    """
     failures = 0
     restored = restore()
     state, step = restored if restored is not None else make_state()
+    # At-most-once side effects: everything strictly below `fired_through`
+    # already fired in a previous life of this loop.
+    fired_through = step
     while step < total_steps:
         try:
             state = step_fn(state, step)
-            if on_step:
+            if on_step and step >= fired_through:
                 on_step(state, step)
+                fired_through = step + 1
             step += 1
         except Exception as e:  # noqa: BLE001 — any step failure
             failures += 1
@@ -55,6 +81,8 @@ def run_with_restart(
                         step, e, failures, max_failures)
             if failures > max_failures:
                 raise
+            if backoff_s > 0.0:
+                sleep_fn(backoff_s * (2.0 ** (failures - 1)))
             restored = restore()
             if restored is None:
                 state, step = make_state()

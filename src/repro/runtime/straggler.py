@@ -6,23 +6,26 @@ stale (retry storms).  The policy:
 
   * over-provision: request ``n_samples × overprovision`` replicas,
   * deadline: use whatever arrived by the deadline (simulated here by a
-    host-side arrival mask; on a real fleet the collective would run on
-    the arrived subset's sub-mesh),
+    host-side arrival mask — ``simulate_arrivals`` — on a real fleet the
+    collective would run on the arrived subset's sub-mesh),
   * trim: reduce with the symmetric trimmed mean
     (core/estimators.trimmed_mean), which bounds the influence of any
     single replica — covering both stragglers-turned-stale and outliers.
 
-``robust_estimate`` is the host-facing helper used by the benchmarks to
-quantify the estimator's bias/variance under drop rates; the in-graph
-estimator path is ``DashConfig(trim_frac=...)``.
+``robust_estimate`` is the deadline-mode reduction the distributed
+selection loop applies when a round's responder set is incomplete
+(``core/distributed.py`` straggler-aware estimators; the all-arrived
+case short-circuits to the plain mean so full rounds stay bitwise
+deterministic per key).  The in-graph outlier-trimming path is
+``DashConfig(trim_frac=...)``.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.estimators import trimmed_mean
 
@@ -42,11 +45,57 @@ def robust_estimate(values, arrived_mask, policy: StragglerPolicy):
 
     values: (R,) per-replica estimates; arrived_mask: (R,) bool.
     Missing replicas are imputed with the median of arrived ones before
-    trimming (keeps the reduction shape static for jit).
+    trimming (keeps the reduction shape static for jit).  Only arrived
+    values influence the result: the imputation median and the trimmed
+    mean are both functions of the arrived multiset alone, so the
+    estimate is invariant to whatever garbage a non-responder slot
+    holds, and to any permutation of the replica axis.
     """
     values = jnp.asarray(values, jnp.float32)
     arrived = jnp.asarray(arrived_mask, bool)
-    med = jnp.median(jnp.where(arrived, values, jnp.nan))
-    med = jnp.nan_to_num(med)
+    # nanmedian, NOT median-of-where: jnp.median over an array with NaN
+    # placeholders is itself NaN as soon as one replica is missing,
+    # which nan_to_num then turned into a spurious 0.0 imputation.
+    med = jnp.nanmedian(jnp.where(arrived, values, jnp.nan))
+    med = jnp.nan_to_num(med)          # no replica arrived at all → 0
     filled = jnp.where(arrived, values, med)
     return trimmed_mean(jnp.sort(filled), policy.trim_frac)
+
+
+def simulate_arrivals(seed: int, round_idx: int, n_replicas: int,
+                      drop_rate: float, *, min_arrived: int = 1) -> np.ndarray:
+    """Deterministic per-round deadline-miss mask for the simulator.
+
+    Pure function of ``(seed, round_idx)`` — a resumed run regenerates
+    exactly the masks the interrupted run saw, which is what lets the
+    kill-and-resume parity tests cover straggler mode too.  At least
+    ``min_arrived`` replicas always make the deadline (a round with zero
+    responders has no estimate to form).
+    """
+    n_replicas = int(n_replicas)
+    rng = np.random.default_rng([int(seed), int(round_idx)])
+    arrived = rng.random(n_replicas) >= float(drop_rate)
+    if int(arrived.sum()) < min_arrived:
+        # Force the first slots: deterministic, and harmless to the
+        # permutation-invariance property (the mask is data, not order).
+        arrived[:min_arrived] = True
+    return arrived
+
+
+def arrivals_for_rounds(seed: int, n_rounds: int, n_replicas: int,
+                        drop_rate: float, *,
+                        min_arrived: int = 1) -> np.ndarray:
+    """(n_rounds, n_replicas) stacked :func:`simulate_arrivals` masks."""
+    return np.stack([
+        simulate_arrivals(seed, r, n_replicas, drop_rate,
+                          min_arrived=min_arrived)
+        for r in range(int(n_rounds))
+    ])
+
+
+__all__ = [
+    "StragglerPolicy",
+    "robust_estimate",
+    "simulate_arrivals",
+    "arrivals_for_rounds",
+]

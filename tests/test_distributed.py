@@ -180,9 +180,11 @@ def test_generic_runner_all_objectives_parity():
         out["aopt"] = [float(ga.value), float(ae.value), float(ap.value),
                        float(sa.value), int(ae.sel_count)]
 
-        # seed 3: single-guess dash is healthy on both runtimes here (on
-        # most seeds the single-device run collapses under one OPT guess)
-        rngc = np.random.default_rng(3)
+        # seed 7: single-guess dash is healthy on both runtimes here under
+        # the partition-invariant replicated-Gumbel draw (on most seeds the
+        # run collapses under one OPT guess — that would test guess luck,
+        # not runtime parity)
+        rngc = np.random.default_rng(7)
         dc, nc, kc = 120, 32, 6
         Xc0 = rngc.normal(size=(dc, nc))
         Xc = normalize_columns(jnp.asarray(Xc0, jnp.float32)) * np.sqrt(dc)

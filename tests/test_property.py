@@ -152,3 +152,104 @@ def test_dash_never_exceeds_k(seed, k):
     res = dash(obj, cfg, jax.random.PRNGKey(seed), opt=0.8)
     assert int(res.sel_count) <= k
     assert int(jnp.sum(res.sel_mask)) == int(res.sel_count)
+
+
+# --- resilience subsystem invariants (runtime/straggler.py, ckpt/) ------
+
+
+@given(seed=st.integers(0, 100), n=st.integers(4, 24),
+       drop=st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_robust_estimate_permutation_invariant(seed, n, drop):
+    """The deadline reduction is a function of the arrived MULTISET: any
+    permutation of the replica axis gives the identical estimate."""
+    from repro.runtime.straggler import StragglerPolicy, robust_estimate
+
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=n).astype(np.float32)
+    arrived = rng.random(n) >= drop
+    arrived[0] = True                      # at least one responder
+    perm = rng.permutation(n)
+    pol = StragglerPolicy(trim_frac=0.125)
+    a = float(robust_estimate(jnp.asarray(vals), jnp.asarray(arrived), pol))
+    b = float(robust_estimate(jnp.asarray(vals[perm]),
+                              jnp.asarray(arrived[perm]), pol))
+    assert a == pytest.approx(b, rel=1e-6, abs=1e-6)
+
+
+@given(seed=st.integers(0, 100), n=st.integers(4, 24))
+@settings(**SETTINGS)
+def test_robust_estimate_ignores_non_responders(seed, n):
+    """Garbage in a missing replica's slot never reaches the estimate —
+    replacing non-responder values with anything (huge, NaN) is a no-op."""
+    from repro.runtime.straggler import StragglerPolicy, robust_estimate
+
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=n).astype(np.float32)
+    arrived = rng.random(n) >= 0.5
+    arrived[0] = True
+    garbage = vals.copy()
+    garbage[~arrived] = np.float32(1e30)
+    pol = StragglerPolicy(trim_frac=0.125)
+    a = float(robust_estimate(jnp.asarray(vals), jnp.asarray(arrived), pol))
+    b = float(robust_estimate(jnp.asarray(garbage), jnp.asarray(arrived),
+                              pol))
+    assert a == b
+    nan_garbage = vals.copy()
+    nan_garbage[~arrived] = np.nan
+    c = float(robust_estimate(jnp.asarray(nan_garbage),
+                              jnp.asarray(arrived), pol))
+    assert a == c
+
+
+@given(seed=st.integers(0, 100), n=st.integers(1, 16))
+@settings(**SETTINGS)
+def test_robust_estimate_all_arrived_bounded_by_extremes(seed, n):
+    from repro.runtime.straggler import StragglerPolicy, robust_estimate
+
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=n).astype(np.float32)
+    pol = StragglerPolicy(trim_frac=0.25)
+    est = float(robust_estimate(jnp.asarray(vals),
+                                jnp.ones(n, bool), pol))
+    assert float(vals.min()) - 1e-6 <= est <= float(vals.max()) + 1e-6
+
+
+@given(seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_checkpoint_round_trip_identity(seed, tmp_path_factory):
+    """save → restore is the identity on value, shape AND dtype for
+    every leaf dtype the selection carry uses (f32, i32, bool, u32)."""
+    from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(seed)
+    tree = {
+        "f32": jnp.asarray(rng.normal(size=(3, rng.integers(1, 9))),
+                           jnp.float32),
+        "i32": jnp.asarray(rng.integers(-5, 5, size=rng.integers(1, 9)),
+                           jnp.int32),
+        "bool": jnp.asarray(rng.random(rng.integers(1, 9)) > 0.5),
+        "u32": jax.random.PRNGKey(int(seed)),
+        "scalar": jnp.asarray(float(rng.normal()), jnp.float32),
+    }
+    directory = str(tmp_path_factory.mktemp("ckpt"))
+    save_checkpoint(directory, 0, tree, extra={"round": 0})
+    restored, step = restore_checkpoint(directory, tree)
+    assert step == 0
+    for name in tree:
+        assert restored[name].dtype == tree[name].dtype, name
+        assert restored[name].shape == tree[name].shape, name
+        np.testing.assert_array_equal(np.asarray(restored[name]),
+                                      np.asarray(tree[name]))
+
+
+@given(seed=st.integers(0, 500), n=st.integers(2, 16),
+       drop=st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_simulate_arrivals_deterministic_and_floored(seed, n, drop):
+    from repro.runtime.straggler import simulate_arrivals
+
+    a = simulate_arrivals(seed, 3, n, drop, min_arrived=2)
+    b = simulate_arrivals(seed, 3, n, drop, min_arrived=2)
+    np.testing.assert_array_equal(a, b)
+    assert int(a.sum()) >= 2

@@ -1,0 +1,585 @@
+"""Resilient selection runtime — the kill-and-resume test lane.
+
+Two tiers in one file:
+
+  * host-level tests (checkpoint atomicity/validation/pruning, the
+    ``run_with_restart`` at-most-once contract, straggler simulation,
+    single-device ``dash_checkpointed`` kill-and-resume) run under the
+    plain tier-1 invocation;
+  * ``TestDistributedResilience`` needs the 8-forced-device environment
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the CI
+    distributed job) and proves the acceptance criterion: a selection
+    killed mid-run and resumed — on the SAME mesh or on a SMALLER one
+    (8-device snapshot → 4-device restore) — commits the bitwise-
+    identical selected set and value as the uninterrupted run under the
+    same key, for every objective family and for the pod guess lattice.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (
+    checkpoint_steps,
+    is_complete,
+    latest_complete_step,
+    prune_checkpoints,
+    read_manifest,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.core import (
+    AOptimalityObjective,
+    ClassificationObjective,
+    DashConfig,
+    RegressionObjective,
+    ResilienceConfig,
+    dash,
+    dash_checkpointed,
+    greedy,
+    normalize_columns,
+)
+from repro.runtime.fault_tolerance import FailureInjector, run_with_restart
+from repro.runtime.straggler import (
+    StragglerPolicy,
+    arrivals_for_rounds,
+    robust_estimate,
+    simulate_arrivals,
+)
+
+NEEDS_8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 host devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(5, 3)), jnp.float32),
+        "mask": jnp.asarray(rng.random(7) > 0.5),
+        "count": jnp.asarray(4, jnp.int32),
+        "key": jax.random.PRNGKey(9),
+        "nested": (jnp.arange(6, dtype=jnp.int32),
+                   jnp.asarray(rng.normal(size=(2,)), jnp.float32)),
+    }
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestCheckpointLayer:
+    def test_round_trip_identity(self, tmp_path):
+        tree = _tree()
+        save_checkpoint(str(tmp_path), 3, tree, extra={"round": 3})
+        restored, step = restore_checkpoint(str(tmp_path), tree)
+        assert step == 3
+        _assert_trees_equal(tree, restored)
+        for x, y in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            assert x.dtype == y.dtype
+
+    def test_validation_before_restore_shape(self, tmp_path):
+        tree = _tree()
+        save_checkpoint(str(tmp_path), 0, tree)
+        bad = dict(tree, w=jnp.zeros((4, 3), jnp.float32))
+        with pytest.raises(ValueError, match="shape"):
+            restore_checkpoint(str(tmp_path), bad)
+
+    def test_validation_before_restore_dtype(self, tmp_path):
+        tree = _tree()
+        save_checkpoint(str(tmp_path), 0, tree)
+        bad = dict(tree, count=jnp.asarray(4, jnp.float32))
+        with pytest.raises(ValueError, match="dtype"):
+            restore_checkpoint(str(tmp_path), bad)
+
+    def test_validation_missing_leaf(self, tmp_path):
+        tree = _tree()
+        save_checkpoint(str(tmp_path), 0, {"w": tree["w"]})
+        with pytest.raises(ValueError, match="missing"):
+            restore_checkpoint(str(tmp_path), tree)
+
+    def test_truncated_npz_is_incomplete(self, tmp_path):
+        """The atomicity contract's host-side check: a truncated archive
+        (simulated crash mid-write after the rename, or disk trouble)
+        must never be picked as the restore target."""
+        tree = _tree()
+        save_checkpoint(str(tmp_path), 1, tree, extra={"round": 1})
+        save_checkpoint(str(tmp_path), 2, tree, extra={"round": 2})
+        npz = tmp_path / "step_00000002" / "arrays.npz"
+        raw = npz.read_bytes()
+        npz.write_bytes(raw[: len(raw) // 2])
+        assert not is_complete(str(tmp_path), 2)
+        assert is_complete(str(tmp_path), 1)
+        assert latest_complete_step(str(tmp_path)) == 1
+        restored, step = restore_checkpoint(str(tmp_path), tree)
+        assert step == 1
+        _assert_trees_equal(tree, restored)
+
+    def test_prune_keeps_newest_complete(self, tmp_path):
+        tree = _tree()
+        for s in range(5):
+            save_checkpoint(str(tmp_path), s, tree)
+        dropped = prune_checkpoints(str(tmp_path), keep_last=2)
+        assert dropped == [0, 1, 2]
+        assert checkpoint_steps(str(tmp_path)) == [3, 4]
+        # keep_last=0 still refuses to delete the newest complete one
+        assert prune_checkpoints(str(tmp_path), keep_last=0) == [3]
+        assert checkpoint_steps(str(tmp_path)) == [4]
+
+    def test_prune_never_drops_restore_target_when_newest_truncated(
+            self, tmp_path):
+        tree = _tree()
+        for s in range(4):
+            save_checkpoint(str(tmp_path), s, tree)
+        npz = tmp_path / "step_00000003" / "arrays.npz"
+        npz.write_bytes(npz.read_bytes()[:50])
+        dropped = prune_checkpoints(str(tmp_path), keep_last=1)
+        # newest COMPLETE (2) survives; the truncated 3 is left alone
+        # (could be a concurrent writer landing); older ones retire.
+        assert 2 not in dropped and 3 not in dropped
+        assert latest_complete_step(str(tmp_path)) == 2
+
+    def test_save_with_keep_last_prunes_inline(self, tmp_path):
+        tree = _tree()
+        for s in range(6):
+            save_checkpoint(str(tmp_path), s, tree, keep_last=3)
+        assert checkpoint_steps(str(tmp_path)) == [3, 4, 5]
+
+    def test_manifest_extra_round_trips(self, tmp_path):
+        save_checkpoint(str(tmp_path), 7, _tree(),
+                        extra={"round": 7, "algo": "dash", "n": 64})
+        m = read_manifest(str(tmp_path), 7)
+        assert m["extra"] == {"round": 7, "algo": "dash", "n": 64}
+
+
+class TestRunWithRestart:
+    def _harness(self, ckpt_every=1):
+        """A tiny integer state machine with an in-memory 'checkpoint'."""
+        saved = {}
+        fired = []
+
+        def make_state():
+            return 0, 0
+
+        def restore():
+            if not saved:
+                return None
+            step = max(saved)
+            return saved[step], step
+
+        def step_fn(state, step):
+            return state + step
+
+        def on_step(state, step):
+            fired.append(step)
+            if (step + 1) % ckpt_every == 0:
+                saved[step + 1] = state
+
+        return saved, fired, make_state, restore, step_fn, on_step
+
+    def test_on_step_fires_at_most_once_per_index(self):
+        saved, fired, mk, rs, st, on = self._harness()
+        inj = FailureInjector(fail_at=(3,))
+
+        def step_fn(state, step):
+            inj.check(step)
+            return st(state, step)
+
+        out = run_with_restart(total_steps=6, make_state=mk, restore=rs,
+                               step_fn=step_fn, on_step=on)
+        assert out == sum(range(6))
+        assert fired == sorted(set(fired)) == list(range(6))
+
+    def test_replayed_steps_do_not_refire(self):
+        """Checkpoint every 3 steps, kill at step 5 → steps 3, 4 are
+        REPLAYED after the restore but their side effects must not
+        re-fire (at-most-once)."""
+        saved, fired, mk, rs, st, on = self._harness(ckpt_every=3)
+        inj = FailureInjector(fail_at=(5,))
+
+        def step_fn(state, step):
+            inj.check(step)
+            return st(state, step)
+
+        out = run_with_restart(total_steps=7, make_state=mk, restore=rs,
+                               step_fn=step_fn, on_step=on)
+        assert out == sum(range(7))
+        assert fired == list(range(7))        # each index exactly once
+
+    def test_cold_restart_path(self):
+        """Failure BEFORE the first checkpoint exists → restore() is
+        None → make_state() restarts from scratch."""
+        saved, fired, mk, rs, st, on = self._harness(ckpt_every=10)
+        inj = FailureInjector(fail_at=(2,))
+        makes = []
+
+        def make_state():
+            makes.append(1)
+            return 0, 0
+
+        def step_fn(state, step):
+            inj.check(step)
+            return st(state, step)
+
+        out = run_with_restart(total_steps=5, make_state=make_state,
+                               restore=rs, step_fn=step_fn, on_step=on)
+        assert out == sum(range(5))
+        assert len(makes) == 2                # entry + cold restart
+        assert fired == list(range(5))
+
+    def test_backoff_sequence(self):
+        sleeps = []
+        inj = FailureInjector(fail_at=(1, 2, 3))
+        run_with_restart(
+            total_steps=5,
+            make_state=lambda: (0, 0), restore=lambda: None,
+            step_fn=lambda s, i: (inj.check(i), s)[1],
+            backoff_s=0.5, sleep_fn=sleeps.append)
+        assert sleeps == [0.5, 1.0, 2.0]      # 0.5 · 2^(f−1)
+
+    def test_max_failures_exceeded_raises(self):
+        class AlwaysDies(Exception):
+            pass
+
+        def step_fn(state, step):
+            raise AlwaysDies()
+
+        with pytest.raises(AlwaysDies):
+            run_with_restart(
+                total_steps=3, make_state=lambda: (0, 0),
+                restore=lambda: None, step_fn=step_fn, max_failures=2)
+
+
+class TestStragglerSimulation:
+    def test_simulate_arrivals_deterministic(self):
+        a = simulate_arrivals(11, 4, 16, 0.5)
+        b = simulate_arrivals(11, 4, 16, 0.5)
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == bool and a.shape == (16,)
+        # distinct rounds draw distinct masks (overwhelmingly)
+        rounds = arrivals_for_rounds(11, 8, 16, 0.5)
+        assert rounds.shape == (8, 16)
+        assert len({tuple(r) for r in rounds}) > 1
+
+    def test_min_arrived_enforced(self):
+        a = simulate_arrivals(0, 0, 8, 1.0, min_arrived=2)
+        assert int(a.sum()) >= 2
+
+    def test_robust_estimate_ignores_non_responders(self):
+        """Whatever garbage a missing replica slot holds must not leak
+        into the estimate (this was the seed's NaN-median bug: one
+        missing replica poisoned the imputation with 0.0)."""
+        pol = StragglerPolicy(trim_frac=0.125)
+        vals = jnp.asarray([5.0, 5.0, 5.0, 5.0, 5.0, 5.0, 1e9, jnp.nan])
+        arrived = jnp.asarray([1, 1, 1, 1, 1, 1, 0, 0], bool)
+        est = float(robust_estimate(vals, arrived, pol))
+        assert est == pytest.approx(5.0)
+
+
+class TestSingleDeviceKillAndResume:
+    def _problem(self):
+        rng = np.random.default_rng(0)
+        d, n, k = 64, 48, 6
+        X0 = rng.normal(size=(d, n)) + 0.3 * rng.normal(size=(d, 1))
+        X = normalize_columns(jnp.asarray(X0, jnp.float32))
+        w = np.zeros(n)
+        w[:k] = rng.uniform(-2, 2, k)
+        y = jnp.asarray(X0 @ w + 0.1 * rng.normal(size=d), jnp.float32)
+        obj = RegressionObjective(X, y, kmax=k)
+        cfg = DashConfig(k=k, eps=0.25, alpha=0.6, n_samples=4)
+        opt = float(greedy(obj, k).value) * 1.05
+        return obj, cfg, opt
+
+    def test_stepped_matches_fused_and_survives_kill(self, tmp_path):
+        obj, cfg, opt = self._problem()
+        key = jax.random.PRNGKey(0)
+        fused = dash(obj, cfg, key, opt)
+        res = ResilienceConfig(ckpt_dir=str(tmp_path), every=1,
+                               async_save=False)
+        stepped = dash_checkpointed(obj, cfg, key, opt,
+                                    resilience=ResilienceConfig())
+        # same selected SET bitwise; the final f(S) evaluation sits in a
+        # different jit context than the fused fori-loop's, so allow the
+        # one-ulp summation-order wiggle on the scalar
+        np.testing.assert_array_equal(np.asarray(fused.sel_mask),
+                                      np.asarray(stepped.sel_mask))
+        assert float(stepped.value) == pytest.approx(float(fused.value),
+                                                     rel=1e-6)
+
+        with pytest.raises(RuntimeError, match="injected"):
+            dash_checkpointed(obj, cfg, key, opt, resilience=res,
+                              failure_injector=FailureInjector(fail_at=(2,)))
+        assert latest_complete_step(str(tmp_path)) == 2
+        resumed = dash_checkpointed(obj, cfg, key, opt, resilience=res,
+                                    resume=True)
+        # resumed vs uninterrupted STEPPED run: bitwise, value included
+        np.testing.assert_array_equal(np.asarray(stepped.sel_mask),
+                                      np.asarray(resumed.sel_mask))
+        assert float(stepped.value) == float(resumed.value)
+
+    def test_keep_last_retention(self, tmp_path):
+        obj, cfg, opt = self._problem()
+        res = ResilienceConfig(ckpt_dir=str(tmp_path), every=1, keep_last=2,
+                               async_save=False)
+        dash_checkpointed(obj, cfg, jax.random.PRNGKey(1), opt,
+                          resilience=res)
+        steps = checkpoint_steps(str(tmp_path))
+        assert len(steps) == 2
+        assert steps[-1] == cfg.resolve(obj.n).r
+
+
+@NEEDS_8
+class TestDistributedResilience:
+    """Acceptance criterion: kill-and-resume parity on the 8-device CI
+    mesh, same-mesh and elastic (8-snapshot → 4-device restore)."""
+
+    @pytest.fixture(scope="class")
+    def mesh(self):
+        from repro.launch.mesh import make_mesh
+        return make_mesh((2, 4), ("data", "model"))
+
+    @pytest.fixture(scope="class")
+    def half_mesh(self):
+        from repro.launch.mesh import make_mesh
+        return make_mesh((2, 2), ("data", "model"),
+                         devices=jax.devices()[:4])
+
+    def _objective(self, family):
+        if family == "regression":
+            rng = np.random.default_rng(0)
+            d, n, k = 96, 64, 8
+            X0 = rng.normal(size=(d, n)) + 0.4 * rng.normal(size=(d, 1))
+            X = normalize_columns(jnp.asarray(X0, jnp.float32))
+            w = np.zeros(n)
+            w[:k] = rng.uniform(-2, 2, k)
+            y = jnp.asarray(X0 @ w + 0.1 * rng.normal(size=d), jnp.float32)
+            return RegressionObjective(X, y, kmax=k), k
+        if family == "aopt":
+            rng = np.random.default_rng(2)
+            d, n, k = 24, 48, 8
+            X = rng.normal(size=(d, n))
+            X = jnp.asarray(X / np.linalg.norm(X, axis=0, keepdims=True),
+                            jnp.float32)
+            return AOptimalityObjective(X, kmax=k, beta2=1.0, sigma2=1.0), k
+        if family == "logistic":
+            rng = np.random.default_rng(7)
+            d, n, k = 120, 32, 6
+            X0 = rng.normal(size=(d, n))
+            X = normalize_columns(jnp.asarray(X0, jnp.float32)) * np.sqrt(d)
+            w = np.zeros(n)
+            w[:k] = rng.uniform(-2, 2, k)
+            y = jnp.asarray(
+                (1 / (1 + np.exp(-X0 @ w)) > 0.5).astype(np.float32))
+            return ClassificationObjective(X, y, kmax=k, newton_steps=4,
+                                           newton_gain_steps=2), k
+        if family == "coreset":
+            from repro.core import CoresetObjective
+            rng = np.random.default_rng(4)
+            feats = rng.normal(size=(60, 48)).astype(np.float32)
+            k = 8
+            return CoresetObjective.from_features(
+                feats, kmax=k, dim_cap=24, key=jax.random.PRNGKey(0),
+                pad_multiple=8), k
+        raise AssertionError(family)
+
+    def _cfg_opt(self, obj, k):
+        cfg = DashConfig(k=k, eps=0.25, alpha=0.5, n_samples=4)
+        opt = float(greedy(obj, k).value) * 1.05
+        return cfg, opt
+
+    @pytest.mark.parametrize(
+        "family", ["regression", "aopt", "logistic", "coreset"])
+    def test_kill_and_resume_bitwise(self, family, mesh, tmp_path):
+        from repro.core.distributed import dash_distributed
+
+        obj, k = self._objective(family)
+        cfg, opt = self._cfg_opt(obj, k)
+        key = jax.random.PRNGKey(0)
+        ref = dash_distributed(obj, cfg, key, opt, mesh,
+                               resilience=ResilienceConfig())
+        res = ResilienceConfig(ckpt_dir=str(tmp_path), every=1,
+                               async_save=False)
+        with pytest.raises(RuntimeError, match="injected"):
+            dash_distributed(obj, cfg, key, opt, mesh, resilience=res,
+                             failure_injector=FailureInjector(fail_at=(2,)))
+        resumed = dash_distributed(obj, cfg, key, opt, mesh, resilience=res,
+                                   resume=True)
+        np.testing.assert_array_equal(np.asarray(ref.sel_mask),
+                                      np.asarray(resumed.sel_mask))
+        assert float(ref.value) == float(resumed.value)
+
+    def test_stepped_matches_fused(self, mesh):
+        from repro.core.distributed import dash_distributed
+
+        obj, k = self._objective("regression")
+        cfg, opt = self._cfg_opt(obj, k)
+        key = jax.random.PRNGKey(0)
+        fused = dash_distributed(obj, cfg, key, opt, mesh)
+        stepped = dash_distributed(obj, cfg, key, opt, mesh,
+                                   resilience=ResilienceConfig())
+        np.testing.assert_array_equal(np.asarray(fused.sel_mask),
+                                      np.asarray(stepped.sel_mask))
+        assert float(fused.value) == float(stepped.value)
+
+    def test_elastic_8_to_4_bitwise(self, mesh, half_mesh, tmp_path):
+        """THE elastic acceptance case: snapshot on (2,4), kill, restore
+        onto (2,2) over half the devices → bitwise-identical selection."""
+        from repro.core.distributed import dash_distributed
+
+        obj, k = self._objective("regression")
+        cfg, opt = self._cfg_opt(obj, k)
+        key = jax.random.PRNGKey(0)
+        ref = dash_distributed(obj, cfg, key, opt, mesh,
+                               resilience=ResilienceConfig())
+        res = ResilienceConfig(ckpt_dir=str(tmp_path), every=1,
+                               async_save=False)
+        with pytest.raises(RuntimeError, match="injected"):
+            dash_distributed(obj, cfg, key, opt, mesh, resilience=res,
+                             failure_injector=FailureInjector(fail_at=(2,)))
+        resumed = dash_distributed(obj, cfg, key, opt, half_mesh,
+                                   resilience=res, resume=True)
+        np.testing.assert_array_equal(np.asarray(ref.sel_mask),
+                                      np.asarray(resumed.sel_mask))
+        assert float(ref.value) == float(resumed.value)
+
+    def test_data_axis_shrink_rejected(self, mesh, tmp_path):
+        """The data axis is folded into the sample keys — restoring onto
+        a different data-axis size must fail loudly, not diverge."""
+        from repro.core.distributed import dash_distributed
+        from repro.launch.mesh import make_mesh
+
+        obj, k = self._objective("regression")
+        cfg, opt = self._cfg_opt(obj, k)
+        key = jax.random.PRNGKey(0)
+        res = ResilienceConfig(ckpt_dir=str(tmp_path), every=1,
+                               async_save=False)
+        with pytest.raises(RuntimeError, match="injected"):
+            dash_distributed(obj, cfg, key, opt, mesh, resilience=res,
+                             failure_injector=FailureInjector(fail_at=(2,)))
+        mesh41 = make_mesh((4, 2), ("data", "model"))
+        with pytest.raises(ValueError, match="data_axis_size"):
+            dash_distributed(obj, cfg, key, opt, mesh41, resilience=res,
+                             resume=True)
+
+    def test_lattice_kill_and_resume(self, tmp_path):
+        from repro.core.distributed import dash_auto_distributed
+        from repro.launch.mesh import make_lattice_mesh
+
+        obj, k = self._objective("regression")
+        pod_mesh = make_lattice_mesh(2)
+        key = jax.random.PRNGKey(5)
+        kw = dict(n_guesses=4, n_samples=4)
+        ref = dash_auto_distributed(obj, k, key, pod_mesh,
+                                    resilience=ResilienceConfig(), **kw)
+        res = ResilienceConfig(ckpt_dir=str(tmp_path), every=1,
+                               async_save=False)
+        with pytest.raises(RuntimeError, match="injected"):
+            dash_auto_distributed(
+                obj, k, key, pod_mesh, resilience=res,
+                failure_injector=FailureInjector(fail_at=(2,)), **kw)
+        resumed = dash_auto_distributed(obj, k, key, pod_mesh,
+                                        resilience=res, resume=True, **kw)
+        np.testing.assert_array_equal(np.asarray(ref.sel_mask),
+                                      np.asarray(resumed.sel_mask))
+        assert float(ref.value) == float(resumed.value)
+        assert int(ref.best_guess) == int(resumed.best_guess)
+        np.testing.assert_array_equal(np.asarray(ref.lattice_values),
+                                      np.asarray(resumed.lattice_values))
+
+    def test_straggler_mode_deterministic_and_resumable(self, mesh,
+                                                        tmp_path):
+        from repro.core.distributed import dash_distributed
+
+        obj, k = self._objective("regression")
+        cfg, opt = self._cfg_opt(obj, k)
+        key = jax.random.PRNGKey(0)
+        mk = lambda **kw: ResilienceConfig(drop_rate=0.5, straggler_seed=11,
+                                           **kw)
+        r1 = dash_distributed(obj, cfg, key, opt, mesh, resilience=mk())
+        r2 = dash_distributed(obj, cfg, key, opt, mesh, resilience=mk())
+        np.testing.assert_array_equal(np.asarray(r1.sel_mask),
+                                      np.asarray(r2.sel_mask))
+        assert float(r1.value) == float(r2.value)
+        # full responder set → bitwise the plain deterministic path
+        r0 = dash_distributed(obj, cfg, key, opt, mesh,
+                              resilience=ResilienceConfig(drop_rate=0.0))
+        plain = dash_distributed(obj, cfg, key, opt, mesh,
+                                 resilience=ResilienceConfig())
+        np.testing.assert_array_equal(np.asarray(r0.sel_mask),
+                                      np.asarray(plain.sel_mask))
+        assert float(r0.value) == float(plain.value)
+        # kill-and-resume replays the same arrival masks (pure function
+        # of (seed, round)) → bitwise parity holds in straggler mode too
+        res = mk(ckpt_dir=str(tmp_path), every=1, async_save=False)
+        with pytest.raises(RuntimeError, match="injected"):
+            dash_distributed(obj, cfg, key, opt, mesh, resilience=res,
+                             failure_injector=FailureInjector(fail_at=(2,)))
+        resumed = dash_distributed(obj, cfg, key, opt, mesh, resilience=res,
+                                   resume=True)
+        np.testing.assert_array_equal(np.asarray(r1.sel_mask),
+                                      np.asarray(resumed.sel_mask))
+        assert float(r1.value) == float(resumed.value)
+
+    def test_restartable_driver_with_mesh_shrink(self, mesh, half_mesh,
+                                                 tmp_path):
+        """run_with_restart composition: the injected failure triggers a
+        restore via mesh_provider(), which hands back the SHRUNKEN mesh
+        — restore → reshard → continue, one call."""
+        from repro.core.distributed import (
+            dash_distributed,
+            dash_distributed_restartable,
+        )
+
+        obj, k = self._objective("regression")
+        cfg, opt = self._cfg_opt(obj, k)
+        key = jax.random.PRNGKey(0)
+        ref = dash_distributed(obj, cfg, key, opt, mesh,
+                               resilience=ResilienceConfig())
+        res = ResilienceConfig(ckpt_dir=str(tmp_path), every=1,
+                               async_save=False)
+        calls = []
+
+        def provider():
+            calls.append(1)
+            return mesh if len(calls) == 1 else half_mesh
+
+        out = dash_distributed_restartable(
+            obj, cfg, key, opt, resilience=res, mesh_provider=provider,
+            failure_injector=FailureInjector(fail_at=(3,)))
+        assert len(calls) == 2                # initial start + restart
+        np.testing.assert_array_equal(np.asarray(ref.sel_mask),
+                                      np.asarray(out.sel_mask))
+        assert float(ref.value) == float(out.value)
+
+    def test_async_snapshots_match_blocking(self, mesh, tmp_path):
+        from repro.core.distributed import dash_distributed
+
+        obj, k = self._objective("regression")
+        cfg, opt = self._cfg_opt(obj, k)
+        key = jax.random.PRNGKey(0)
+        d_async = str(tmp_path / "a")
+        d_block = str(tmp_path / "b")
+        dash_distributed(obj, cfg, key, opt, mesh,
+                         resilience=ResilienceConfig(
+                             ckpt_dir=d_async, every=1, async_save=True))
+        dash_distributed(obj, cfg, key, opt, mesh,
+                         resilience=ResilienceConfig(
+                             ckpt_dir=d_block, every=1, async_save=False))
+        steps = checkpoint_steps(d_async)
+        assert steps == checkpoint_steps(d_block) and steps
+        for s in steps:
+            a = np.load(os.path.join(d_async, f"step_{s:08d}",
+                                     "arrays.npz"))
+            b = np.load(os.path.join(d_block, f"step_{s:08d}",
+                                     "arrays.npz"))
+            assert set(a.files) == set(b.files)
+            for f in a.files:
+                np.testing.assert_array_equal(a[f], b[f])
