@@ -187,7 +187,127 @@ def bench_guess_axis_engine(G: int = 8, m: int = 8, d: int = 512,
          f"folded_over_per_guess={t_p / t_f:.2f}x")
 
 
-def run():
+def bench_kernel_precisions(autotune: bool = False):
+    """The ``kernels/*`` precision lane: every ops wrapper timed at f32
+    and bf16 streaming, annotated against the roofline models.
+
+    Three rows per kernel: ``kernels/<name>/f32`` and ``/bf16`` carry
+    the measured µs plus the model-derived GB/s, arithmetic intensity
+    and roofline fraction (``bench_roofline.kernel_model``);
+    ``/bf16_over_f32`` carries the speedup ratio and the bf16-vs-f32
+    max relative output error.  ``autotune=True`` first drives the
+    persistent block autotuner (``repro.kernels.tuning``) through the
+    same wrappers, so the timed rows run at the measured-winner block;
+    otherwise the wrappers' cached-or-heuristic choice is timed as-is.
+    On CPU the wrappers route to the jnp reference (quantized
+    identically), so the rows track the precision policy's numerics;
+    the bandwidth columns are meaningful on TPU runs (the artifact
+    records the backend).
+    """
+    from benchmarks import bench_roofline as roofline
+    from repro.kernels import tuning
+    from repro.kernels.aopt_gains.ops import aopt_gains
+    from repro.kernels.filter_gains.ops import (
+        aopt_filter_gains,
+        filter_gains,
+        logistic_filter_gains,
+    )
+    from repro.kernels.logistic_gains.ops import logistic_gains
+    from repro.kernels.marginal_gains.ops import regression_gains
+
+    d, n = 512, 4096
+    k, b, m, g, steps = 64, 8, 8, 1, 3
+    # Structurally valid operands (orthonormal bases, a genuine shared
+    # solve): the epilogues divide by residual norms, so random garbage
+    # would make the bf16-vs-f32 error column track conditioning noise
+    # instead of the precision policy.
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    csq = jnp.sum(X * X, axis=0)
+    Q, _ = jnp.linalg.qr(jnp.asarray(RNG.normal(size=(d, k)), jnp.float32))
+    resid = jnp.asarray(RNG.normal(size=(d,)), jnp.float32)
+    resid = resid - Q @ (Q.T @ resid)
+    y = jnp.asarray((RNG.uniform(size=d) > 0.5).astype(np.float32))
+    eta = jnp.zeros((d,), jnp.float32)
+    D0 = jnp.asarray(RNG.normal(size=(m, d, b)), jnp.float32)
+    D0 = D0 - Q @ jnp.einsum("dk,mdb->mkb", Q, D0)     # ⊥ shared basis
+    D = jnp.linalg.qr(D0)[0]
+    R = jnp.asarray(RNG.normal(size=(m, d)), jnp.float32)
+    R = R - (R @ Q) @ Q.T
+    sel = RNG.choice(n, size=32, replace=False)
+    Xn = np.asarray(X)
+    M = np.eye(d) + Xn[:, sel] @ Xn[:, sel].T          # A-opt information
+    W = jnp.asarray(np.linalg.solve(M, Xn), jnp.float32)
+    Es = []
+    for i in range(m):                                 # genuine Woodbury
+        C = Xn[:, RNG.choice(n, size=b, replace=False)]
+        P = np.linalg.solve(M, C)
+        Lk = np.linalg.cholesky(np.eye(b) + C.T @ P)
+        Es.append(np.linalg.solve(Lk, P.T).T)          # E = P L⁻ᵀ
+    E = jnp.asarray(np.stack(Es), jnp.float32)
+    F = jnp.einsum("mdb,mdc->mbc", E, E)
+    etas = jnp.asarray(RNG.normal(size=(m, d)) * 0.4, jnp.float32)
+
+    # Operands ride as jit ARGUMENTS: closing over them would let XLA
+    # constant-fold the whole kernel at compile time and the timed call
+    # would fetch a precomputed constant.
+    groups = [
+        ("regression_gains", {"d": d, "k": k, "n": n}, (X, Q, resid, csq),
+         lambda p, bn: jax.jit(lambda *a: regression_gains(
+             *a, precision=p, block_n=bn))),
+        ("aopt_gains", {"d": d, "n": n}, (X, W),
+         lambda p, bn: jax.jit(lambda *a: aopt_gains(
+             *a, 1.0, precision=p, block_n=bn))),
+        ("logistic_gains", {"d": d, "n": n, "steps": steps}, (X, y, eta),
+         lambda p, bn: jax.jit(lambda *a: logistic_gains(
+             *a, steps=steps, precision=p, block_n=bn))),
+        ("filter_gains", {"d": d, "k": k, "b": b, "m": m, "g": g, "n": n},
+         (X, Q, D, R, csq),
+         lambda p, bn: jax.jit(lambda *a: filter_gains(
+             *a, precision=p, block_n=bn))),
+        ("aopt_filter_gains", {"d": d, "b": b, "m": m, "g": g, "n": n},
+         (X, W, E, F),
+         lambda p, bn: jax.jit(lambda *a: aopt_filter_gains(
+             *a, 1.0, precision=p, block_n=bn))),
+        ("logistic_filter_gains",
+         {"d": d, "m": m, "g": g, "n": n, "steps": steps}, (X, y, etas),
+         lambda p, bn: jax.jit(lambda *a: logistic_filter_gains(
+             *a, steps=steps, precision=p, block_n=bn))),
+    ]
+
+    for name, dims, arrs, make in groups:
+        timed = {}
+        for prec in ("f32", "bf16"):
+            model = roofline.kernel_model(name, dims, prec)
+            if autotune:
+                bn = tuning.autotune(
+                    name, prec, model["tuning_dims"],
+                    lambda cand: make(prec, cand)(*arrs), model["vmem"],
+                )
+            else:
+                bn = tuning.tuned_block_n(
+                    name, prec, model["tuning_dims"], model["vmem"],
+                )
+            f = make(prec, bn)
+            t, out = wall_time(lambda: jax.block_until_ready(f(*arrs)))
+            model = roofline.kernel_model(name, dims, prec, block_n=bn)
+            pt = roofline.roofline_point(model["flops"], model["bytes"], t)
+            dim_str = ";".join(f"{kk}={vv}" for kk, vv in dims.items())
+            emit(
+                f"kernels/{name}/{prec}", t * 1e6,
+                f"{dim_str};block={bn};ai={pt['ai']:.2f};"
+                f"gbps={pt['gbps']:.2f};tflops={pt['tflops']:.4f};"
+                f"roofline_frac={pt['roofline_frac']:.4f}",
+            )
+            timed[prec] = (t, out)
+        t32, o32 = timed["f32"]
+        t16, o16 = timed["bf16"]
+        err = float(jnp.max(jnp.abs(o16 - o32))
+                    / jnp.maximum(jnp.max(jnp.abs(o32)), 1e-12))
+        emit(f"kernels/{name}/bf16_over_f32", 0.0,
+             f"ratio={t32 / t16:.2f}x;max_rel_err={err:.2e}")
+
+
+def run(autotune: bool = False):
     # marginal gains — the DASH per-round oracle
     d, n, k = 512, 2048, 64
     X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
@@ -222,6 +342,9 @@ def run():
     # folded guess axis — the whole (OPT, α) lattice in one launch
     bench_guess_axis_engine()
 
+    # mixed-precision lane: f32 vs bf16 streaming against the roofline
+    bench_kernel_precisions(autotune=autotune)
+
     # flash attention
     b, s, h, hkv, dh = 1, 1024, 8, 2, 64
     q = jnp.asarray(RNG.normal(size=(b, s, h, dh)), jnp.bfloat16)
@@ -247,8 +370,14 @@ def main() -> None:
         help="also write the emitted rows as a JSON trajectory artifact "
              "(default path: BENCH_kernels.json)",
     )
+    ap.add_argument(
+        "--autotune", action="store_true",
+        help="measure block-size candidates through the wrappers and "
+             "persist the winners (repro.kernels.tuning cache) before "
+             "timing the kernels/* rows",
+    )
     args = ap.parse_args()
-    run()
+    run(autotune=args.autotune)
     if args.json:
         payload = {"suite": "bench_kernels",
                    "backend": jax.default_backend(), "rows": rows()}

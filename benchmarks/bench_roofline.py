@@ -1,174 +1,311 @@
-"""Roofline table from the dry-run artifacts (deliverable g).
+"""Roofline models + table for the selection kernels.
 
-Reads results/dryrun.json (written by ``python -m repro.launch.dryrun``)
-and derives, per (arch × shape × mesh):
+Two halves:
 
-    compute    = flops / PEAK_FLOPS
-    memory     = bytes / HBM_BW            (two estimators, see below)
-    collective = coll_bytes / ICI_BW       (ring-adjusted all-reduce)
+* **Models** — per-kernel analytic FLOP and HBM-traffic counts for one
+  launch of each ``repro.kernels`` ops wrapper
+  (:func:`kernel_model`), mirroring the streaming structure of the
+  Pallas grids: X streams once per launch (the sample axis is
+  grid-minor, so the X block stays resident across every sample that
+  reuses it), per-guess operands re-stream once per (block, guess),
+  per-sample operands once per (block, sample), and the f32 epilogue
+  outputs are written once.  ``bench_kernels`` imports these to
+  annotate every ``kernels/*`` row with arithmetic intensity, achieved
+  GB/s and the fraction of the roofline-attainable FLOP rate.
+* **CLI** — reads a ``BENCH_kernels.json`` artifact (or the rows
+  already emitted in-process when driven from ``benchmarks.run``),
+  renders the roofline table and writes ``results/roofline.json``.
 
-plus MODEL_FLOPS (6·N·D for train; 2·N_active per token for decode) and
-the useful-compute ratio MODEL_FLOPS / (chips·HLO_FLOPs).
-
-Memory estimators (utils/hlo.py): ``bytes`` counts every top-level HLO
-op's operands+outputs (CPU-fusion-pessimistic upper bound); ``dot_bytes``
-counts GEMM traffic only (TPU-fused floor).  The table reports the
-geometric mean of the two as the headline memory term and both extremes.
+Conventions: FLOPs use LOGICAL dims (useful work — padding lanes are
+not credited); bytes use PADDED dims (padding is streamed whether
+useful or not), with the streamed operands at the precision policy's
+itemsize (4 B f32 / 2 B bf16) and everything else f32.  The ``vmem``
+callables mirror the ops wrappers' budget formulas so callers
+(``bench_kernels --autotune``) can reproduce the wrapper's exact block
+choice; the authoritative copies live in the wrappers and
+``tuning.tuned_block_n`` re-validates every cached entry against those
+at lookup, so drift here can skew a table row but never a launch.
 """
 
 from __future__ import annotations
 
 import json
-import math
 import os
 
-from benchmarks.common import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
-from repro.configs.registry import get_config, get_shape
+import jax.numpy as jnp
 
-RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
-                       "dryrun.json")
+from benchmarks.common import HBM_BW, PEAK_FLOPS_BF16
+from repro.kernels.common import (
+    LANE,
+    pick_block_n,
+    resolve_precision,
+    round_up,
+    stream_dtype,
+    sublane_for,
+)
+from repro.kernels.tuning import bucket_n
 
-
-def _param_count(cfg):
-    """Total and active parameter counts (matmul params)."""
-    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.padded_vocab
-    a = cfg.attn
-    attn = d * (a.n_heads + 2 * a.n_kv_heads) * a.head_dim \
-        + a.n_heads * a.head_dim * d
-    total = v * d * (1 if cfg.tie_embeddings else 2)
-    active = total
-    per_layer_dense = 0.0
-    counts = {"attn": 0.0, "mlp": 0.0, "moe_active": 0.0, "moe_total": 0.0,
-              "rnn": 0.0}
-    for kind in cfg.block_pattern:
-        reps = L / cfg.pattern_period
-        if kind in ("attn", "local_attn"):
-            counts["attn"] += attn * reps
-            if cfg.moe:
-                e = cfg.moe.n_experts
-                nmat = 3 if cfg.moe.gated else 2
-                counts["moe_total"] += reps * e * nmat * d * f
-                counts["moe_active"] += reps * cfg.moe.top_k * nmat * d * f
-            elif f:
-                counts["mlp"] += reps * (3 if cfg.gated_mlp else 2) * d * f
-        elif kind == "rglru":
-            w = cfg.recurrent.width
-            counts["rnn"] += reps * (2 * d * w + 2 * w * w + w * d)
-            if f:
-                counts["mlp"] += reps * (3 if cfg.gated_mlp else 2) * d * f
-        elif kind in ("mlstm", "slstm"):
-            x = cfg.xlstm
-            inner = x.n_heads * x.head_dim
-            counts["rnn"] += reps * (d * (d + inner) + inner * d
-                                     + (3 * d * inner if kind == "mlstm"
-                                        else 4 * d * inner))
-    if cfg.encoder:
-        counts["attn"] += cfg.encoder.n_layers * attn
-        counts["mlp"] += cfg.encoder.n_layers * 2 * d * cfg.encoder.d_ff
-    dense_side = counts["attn"] + counts["mlp"] + counts["rnn"]
-    total += dense_side + counts["moe_total"]
-    active += dense_side + counts["moe_active"]
-    return total, active
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
-def model_flops(cfg, shape):
-    """6·N_active·D for train; 2·N_active per generated token for decode;
-    2·N_active·D for prefill."""
-    total, active = _param_count(cfg)
-    tokens = shape.global_batch * shape.seq_len
-    if shape.kind == "train":
-        return 6.0 * active * tokens
-    if shape.kind == "prefill":
-        return 2.0 * active * tokens
-    # decode: one token per sequence
-    return 2.0 * active * shape.global_batch
+def _pad(dims, prec):
+    """(itemsize, sublane, padder) for the streamed dtype of ``prec``."""
+    sdt = stream_dtype(prec)
+    sb = jnp.dtype(sdt).itemsize
+    sl = sublane_for(sdt)
+    return sb, sl, lambda v: round_up(max(int(v), 1), sl)
 
 
-def coll_bytes(rec):
-    total = 0.0
-    for kind, v in rec.get("collectives", {}).items():
-        b = v["bytes"]
-        if kind == "all-reduce":
-            b *= 2.0          # ring transfer ≈ 2× tensor bytes
-        total += b
-    return total
+def _regression_gains(dims, prec, bn):
+    d, k, n = dims["d"], dims["k"], dims["n"]
+    sb, _, pad = _pad(dims, prec)
+    dp, kp = pad(d), pad(k)
+    vmem = lambda x: sb * dp * x + 4 * (dp * (kp + 1) + 2 * x)
+    bn = bn or pick_block_n(vmem)
+    np_ = round_up(n, bn)
+    return {
+        "flops": 2.0 * d * n * (k + 1) + 5.0 * n,
+        "bytes": sb * dp * np_ + 4.0 * (dp * kp + dp + 2 * np_),
+        "vmem": vmem, "block_n": bn,
+        "tuning_dims": {"dp": dp, "kp": kp, "nb": bucket_n(n)},
+    }
 
 
-def analyze(records):
-    rows = []
-    for rec in records:
-        if "skipped" in rec or "error" in rec:
+def _aopt_gains(dims, prec, bn):
+    d, n = dims["d"], dims["n"]
+    sb, _, pad = _pad(dims, prec)
+    dp = pad(d)
+    vmem = lambda x: 2 * sb * dp * x + 4 * x
+    bn = bn or pick_block_n(vmem)
+    np_ = round_up(n, bn)
+    return {
+        "flops": 4.0 * d * n,
+        "bytes": 2 * sb * dp * np_ + 4.0 * np_,
+        "vmem": vmem, "block_n": bn,
+        "tuning_dims": {"dp": dp, "nb": bucket_n(n)},
+    }
+
+
+def _logistic_gains(dims, prec, bn):
+    d, n, steps = dims["d"], dims["n"], dims["steps"]
+    sb, _, pad = _pad(dims, prec)
+    dp = pad(d)
+    vmem = lambda x: sb * dp * x + 4 * (2 * dp + 4 * x)
+    bn = bn or pick_block_n(vmem)
+    np_ = round_up(n, bn)
+    return {
+        # per Newton step per candidate row: logits, sigmoid, weighted
+        # gradient and curvature reductions ≈ 8 flops/element
+        "flops": 8.0 * d * n * steps,
+        "bytes": sb * dp * np_ + 4.0 * (2 * dp + 2 * np_),
+        "vmem": vmem, "block_n": bn,
+        "tuning_dims": {"dp": dp, "steps": steps, "nb": bucket_n(n)},
+    }
+
+
+def _filter_gains(dims, prec, bn):
+    d, k, b = dims["d"], dims["k"], dims["b"]
+    m, g, n = dims["m"], dims["g"], dims["n"]
+    sb, _, pad = _pad(dims, prec)
+    dp, kp, bp = pad(d), pad(k), pad(b)
+    vmem = lambda x: sb * dp * x + 4 * (dp * (kp + bp + 1) + 3 * x)
+    bn = bn or pick_block_n(vmem)
+    np_ = round_up(n, bn)
+    blocks = np_ // bn
+    return {
+        "flops": 2.0 * d * n * g * m * (k + b + 1),
+        "bytes": (sb * dp * np_                       # X streams once
+                  + 4.0 * blocks * g * dp * kp        # shared basis / guess
+                  + 4.0 * blocks * g * m * (dp * bp + dp)  # deltas + resid
+                  + 4.0 * np_                         # col_sq
+                  + 4.0 * g * m * np_),               # gains out
+        "vmem": vmem, "block_n": bn,
+        "tuning_dims": {"dp": dp, "kp": kp, "bp": bp, "m": m, "g": g,
+                        "nb": bucket_n(n)},
+    }
+
+
+def _aopt_filter_gains(dims, prec, bn):
+    d, b, m, g, n = dims["d"], dims["b"], dims["m"], dims["g"], dims["n"]
+    sb, _, pad = _pad(dims, prec)
+    dp, bp = pad(d), pad(b)
+    vmem = lambda x: 2 * sb * dp * x + 4 * (dp * bp + bp * bp + 3 * x
+                                            + 3 * bp * x)
+    bn = bn or pick_block_n(vmem)
+    np_ = round_up(n, bn)
+    blocks = np_ // bn
+    return {
+        "flops": 2.0 * d * n * g * m * (2 * b + 2),
+        "bytes": (sb * dp * np_                       # X streams once
+                  + g * sb * dp * np_                 # shared solve / guess
+                  + 4.0 * blocks * g * m * (dp * bp + bp * bp)  # E, F
+                  + 4.0 * g * m * np_),               # gains out
+        "vmem": vmem, "block_n": bn,
+        "tuning_dims": {"dp": dp, "bp": bp, "m": m, "g": g,
+                        "nb": bucket_n(n)},
+    }
+
+
+def _logistic_filter_gains(dims, prec, bn):
+    d, m, g, n = dims["d"], dims["m"], dims["g"], dims["n"]
+    steps = dims["steps"]
+    mt = g * m                                        # folded sample axis
+    sb, _, pad = _pad(dims, prec)
+    dp = pad(d)
+    vmem = lambda x: sb * dp * x + 4 * (dp * x + 2 * dp + 4 * x)
+    bn = bn or pick_block_n(vmem)
+    np_ = round_up(n, bn)
+    blocks = np_ // bn
+    return {
+        "flops": 8.0 * d * n * mt * steps,
+        "bytes": (sb * dp * np_                       # X streams once
+                  + 4.0 * blocks * mt * dp            # per-sample η
+                  + 4.0 * 2 * dp                      # y, base logits
+                  + 4.0 * mt * np_),                  # gains out
+        "vmem": vmem, "block_n": bn,
+        "tuning_dims": {"dp": dp, "m": mt, "steps": steps,
+                        "nb": bucket_n(n)},
+    }
+
+
+_MODELS = {
+    "regression_gains": _regression_gains,
+    "aopt_gains": _aopt_gains,
+    "logistic_gains": _logistic_gains,
+    "filter_gains": _filter_gains,
+    "aopt_filter_gains": _aopt_filter_gains,
+    "logistic_filter_gains": _logistic_filter_gains,
+}
+
+KERNELS = tuple(_MODELS)
+
+
+def kernel_model(kernel: str, dims: dict, precision: str | None = "f32",
+                 block_n: int | None = None) -> dict:
+    """Analytic cost of one wrapper launch.
+
+    Returns ``{"flops", "bytes", "vmem", "block_n", "tuning_dims"}``:
+    FLOP count, modeled HBM bytes, the wrapper's VMEM-budget formula,
+    the block size the model assumed (``block_n`` or the formula's
+    ``pick_block_n`` choice — pass ``tuning.tuned_block_n``'s answer to
+    match a tuned launch exactly) and the dims dict keyed exactly like
+    the wrapper's tuning-cache entry.
+    """
+    prec = resolve_precision(precision)
+    return _MODELS[kernel](dict(dims), prec, block_n)
+
+
+def roofline_point(flops: float, bytes_: float, seconds: float) -> dict:
+    """Where one measurement sits against the memory/compute roofline.
+
+    ``attainable`` caps the FLOP rate at ``min(peak, AI · HBM_BW)`` —
+    the classic roofline — and ``roofline_frac`` is achieved/attainable,
+    i.e. the honest "how much of what the hardware offered did we take"
+    number (1.0 = on the roof; > 1 means the traffic model undercounts).
+    """
+    seconds = max(seconds, 1e-12)
+    ai = flops / max(bytes_, 1.0)
+    attainable = min(PEAK_FLOPS_BF16, ai * HBM_BW)
+    achieved = flops / seconds
+    return {
+        "ai": ai,
+        "gbps": bytes_ / seconds / 1e9,
+        "tflops": achieved / 1e12,
+        "attainable_tflops": attainable / 1e12,
+        "roofline_frac": achieved / attainable,
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI: render the table from a BENCH_kernels.json artifact
+# ---------------------------------------------------------------------------
+
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            key, val = part.split("=", 1)
+            out[key] = val
+    return out
+
+
+def analyze(rows: list[dict]) -> list[dict]:
+    """``kernels/<name>/<prec>`` rows → roofline table records."""
+    out = []
+    for row in rows:
+        parts = row["name"].split("/")
+        if len(parts) != 3 or parts[0] != "kernels":
             continue
-        cfg = get_config(rec["arch"])
-        shape = get_shape(rec["shape"])
-        chips = rec["n_chips"]
-        flops = rec["cost"]["flops"]
-        b_hi = rec["cost"]["bytes_accessed"]
-        b_lo = max(rec["cost"].get("dot_bytes", 0.0),
-                   rec["memory"]["argument_bytes"])
-        b_mid = math.sqrt(max(b_hi, 1.0) * max(b_lo, 1.0))
-        cb = coll_bytes(rec)
-
-        t_compute = flops / PEAK_FLOPS_BF16
-        t_memory = b_mid / HBM_BW
-        t_coll = cb / ICI_BW
-        terms = {"compute": t_compute, "memory": t_memory,
-                 "collective": t_coll}
-        dominant = max(terms, key=terms.get)
-        mf = model_flops(cfg, shape)
-        useful = mf / max(flops * chips, 1.0)
-        bound = max(terms.values())
-        # roofline fraction: useful model flops over what the dominant
-        # term's wall time could have computed at peak
-        roofline_frac = (mf / chips) / max(bound * PEAK_FLOPS_BF16, 1e-9)
-        rows.append({
-            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
-            "tags": rec.get("tags", ""),
-            "chips": chips,
-            "compute_s": t_compute, "memory_s": t_memory,
-            "memory_s_hi": b_hi / HBM_BW, "memory_s_lo": b_lo / HBM_BW,
-            "collective_s": t_coll,
-            "dominant": dominant,
-            "model_flops": mf, "hlo_flops_chip": flops,
-            "useful_ratio": useful,
-            "roofline_frac": roofline_frac,
-            "hbm_gib": rec["memory"]["peak_est_bytes"] / 2 ** 30,
+        if parts[2] not in ("f32", "bf16"):
+            continue
+        d = _parse_derived(row.get("derived", ""))
+        if "ai" not in d:
+            continue
+        out.append({
+            "kernel": parts[1], "precision": parts[2],
+            "us_per_call": row["us_per_call"],
+            "ai": float(d["ai"]), "gbps": float(d["gbps"]),
+            "tflops": float(d.get("tflops", 0.0)),
+            "roofline_frac": float(d["roofline_frac"]),
         })
-    return rows
+    return out
 
 
-def render(rows, *, mesh="16x16", tags=""):
-    hdr = (f"{'arch':<26} {'shape':<12} {'comp(s)':>9} {'mem(s)':>9} "
-           f"{'coll(s)':>9} {'dom':>10} {'useful':>7} {'roofl%':>7} "
-           f"{'HBM GiB':>8}")
+def render(records: list[dict]) -> str:
+    hdr = (f"{'kernel':<24} {'prec':<5} {'us/call':>10} {'GB/s':>8} "
+           f"{'AI':>7} {'TFLOP/s':>8} {'roofl%':>7}")
     out = [hdr, "-" * len(hdr)]
-    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
-        if r["mesh"] != mesh or r.get("tags", "") != tags:
-            continue
+    for r in sorted(records, key=lambda r: (r["kernel"], r["precision"])):
         out.append(
-            f"{r['arch']:<26} {r['shape']:<12} {r['compute_s']:>9.3f} "
-            f"{r['memory_s']:>9.3f} {r['collective_s']:>9.3f} "
-            f"{r['dominant']:>10} {r['useful_ratio']:>7.2f} "
-            f"{100 * r['roofline_frac']:>6.1f}% {r['hbm_gib']:>8.2f}")
+            f"{r['kernel']:<24} {r['precision']:<5} "
+            f"{r['us_per_call']:>10.1f} {r['gbps']:>8.2f} {r['ai']:>7.2f} "
+            f"{r['tflops']:>8.3f} {100 * r['roofline_frac']:>6.1f}%")
     return "\n".join(out)
 
 
-def run():
-    if not os.path.exists(RESULTS):
-        print("roofline: results/dryrun.json missing — run "
-              "`python -m repro.launch.dryrun --all` first")
+def run(rows: list[dict] | None = None) -> list[dict]:
+    """Render + persist the roofline table.
+
+    ``rows=None`` uses the rows already emitted in this process (the
+    ``benchmarks.run`` composition, where ``bench_kernels.run()`` has
+    just populated them).
+    """
+    if rows is None:
+        from benchmarks.common import rows as emitted_rows
+
+        rows = emitted_rows()
+    records = analyze(rows)
+    if not records:
+        print("roofline: no kernels/* rows — run bench_kernels first "
+              "(or pass its BENCH_kernels.json via --json)")
         return []
-    with open(RESULTS) as f:
-        records = json.load(f)
-    rows = analyze(records)
-    print(render(rows, mesh="16x16"))
-    print()
-    print(render(rows, mesh="2x16x16"))
-    with open(os.path.join(os.path.dirname(RESULTS), "roofline.json"),
-              "w") as f:
-        json.dump(rows, f, indent=1)
-    return rows
+    print(render(records))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(RESULTS_DIR, "roofline.json")
+    with open(out_path, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {out_path}")
+    return records
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--json", default="BENCH_kernels.json", metavar="PATH",
+        help="bench_kernels --json artifact to read (default: "
+             "BENCH_kernels.json)",
+    )
+    args = ap.parse_args()
+    if not os.path.exists(args.json):
+        print(f"roofline: {args.json} missing — run "
+              "`python -m benchmarks.bench_kernels --json` first")
+        return
+    with open(args.json) as f:
+        payload = json.load(f)
+    run(payload["rows"])
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -68,13 +68,19 @@ def markdown_table(cur: dict[str, dict], base: dict[str, dict],
         brow = base.get(name)
         d = parse_derived(row.get("derived", ""))
         bd = parse_derived(brow.get("derived", "")) if brow else {}
-        if "value" in d:
-            try:
-                v = float(d["value"])
-                bv = float(bd["value"]) if "value" in bd else None
-                val = f"{v:.4f}{_fmt_delta(v, bv, pct=False)}"
-            except ValueError:
-                val = d["value"]
+        # Headline metric: objective value for the selection tables,
+        # speedup ratio / roofline fraction for the kernels/ lane.
+        for key in ("value", "ratio", "roofline_frac"):
+            if key in d:
+                label = "" if key == "value" else f"{key}="
+                try:
+                    v = float(d[key].rstrip("x"))
+                    bv = (float(bd[key].rstrip("x"))
+                          if key in bd else None)
+                    val = f"{label}{v:.4f}{_fmt_delta(v, bv, pct=False)}"
+                except ValueError:
+                    val = d[key]
+                break
         else:
             val = row.get("derived", "")
         us = float(row.get("us_per_call", 0.0))

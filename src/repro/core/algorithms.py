@@ -144,8 +144,19 @@ def select(algo: str, obj, k: int, key=None, mesh=None, **opts) -> SelectionResu
     ``**opts`` pass through to the implementation (e.g. ``subsample=``
     for stochastic greedy, ``n_guesses=``/``opt=`` for dash,
     ``model_axis=`` for any distributed twin).
+
+    ``precision="bf16"`` opts the run into bf16 streaming of the
+    HBM-bound kernel operands (f32 accumulation) by swapping ``obj`` for
+    its :func:`~repro.core.objectives.base.with_precision` view before
+    dispatch — it applies uniformly to every registered algorithm on
+    both runtimes.
     """
     spec = get_algorithm(algo)
+    precision = opts.pop("precision", None)
+    if precision is not None:
+        from repro.core.objectives.base import with_precision
+
+        obj = with_precision(obj, precision)
     if spec.needs_key and key is None:
         key = jax.random.PRNGKey(0)
     if mesh is None:

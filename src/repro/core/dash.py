@@ -53,6 +53,7 @@ from repro.core.estimators import (
     sample_set_from_mask,
     trimmed_mean,
 )
+from repro.core.objectives.base import with_precision
 from repro.core.selection_loop import (  # noqa: F401  (re-exported API)
     DashConfig,
     DashTrace,
@@ -147,12 +148,17 @@ def _single_device_hooks(obj, cfg: DashConfig) -> SelectionHooks:
 
 
 def dash(obj, cfg: DashConfig, key, opt: float | jnp.ndarray,
-         alpha: jnp.ndarray | None = None) -> DashResult:
+         alpha: jnp.ndarray | None = None, *,
+         precision: str | None = None) -> DashResult:
     """Run DASH for a single (OPT, α) guess.  jit/vmap-compatible.
 
     ``alpha`` optionally overrides ``cfg.alpha`` with a traced value so
     the (OPT, α) lattice can vmap over both guess axes at once.
+    ``precision`` optionally overrides the objective's streamed-operand
+    kernel policy for this run (see ``objectives.base.with_precision``).
     """
+    if precision is not None:
+        obj = with_precision(obj, precision)
     cfg = cfg.resolve(obj.n)
     hooks = _single_device_hooks(obj, cfg)
     state, alive, count, key, trace = run_selection_rounds(
@@ -183,6 +189,7 @@ def dash_checkpointed(
     obj, cfg: DashConfig, key, opt: float | jnp.ndarray,
     *, resilience: ResilienceConfig, alpha: jnp.ndarray | None = None,
     resume: bool = False, failure_injector=None,
+    precision: str | None = None,
 ) -> DashResult:
     """Single-device DASH stepped round-by-round from the host, with the
     :class:`SelectionCarry` snapshotted at every round boundary.
@@ -196,6 +203,8 @@ def dash_checkpointed(
     Straggler simulation (``resilience.drop_rate``) only affects the
     distributed runtime; here the responder mask is ignored.
     """
+    if precision is not None:
+        obj = with_precision(obj, precision)
     cfg = cfg.resolve(obj.n)
     step = _checkpointed_step_runner(obj, cfg)
     alpha_v = jnp.asarray(cfg.alpha if alpha is None else alpha, jnp.float32)
@@ -317,6 +326,7 @@ def dash_auto(
     alphas=None,
     guess_mode: str = "batched",
     return_lattice: bool = False,
+    precision: str | None = None,
 ):
     """DASH with the (OPT, α) guess lattice; returns the best solution.
 
@@ -340,6 +350,10 @@ def dash_auto(
     """
     if guess_mode not in ("batched", "vmap", "loop"):
         raise ValueError(f"unknown guess_mode: {guess_mode!r}")
+    if precision is not None:
+        # Applied before the lattice runner so the compiled runner is
+        # cached on (and keyed by) the precision view.
+        obj = with_precision(obj, precision)
     cfg = DashConfig(k=k, r=r, eps=eps, alpha=alpha, n_samples=n_samples,
                      trim_frac=trim_frac)
     guesses = opt_guess_lattice(obj, eps, n_guesses, k)

@@ -76,6 +76,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.estimators import gumbel_noise
+from repro.core.objectives.base import with_precision
 from repro.core.selection_loop import (
     DashConfig,
     DashTrace,
@@ -394,6 +395,7 @@ def dash_distributed(
     obj, cfg: DashConfig, key, opt, mesh,
     *, model_axis: str = "model", data_axis: str | None = "data",
     use_filter_engine: bool | None = None,
+    precision: str | None = None,
     resilience: ResilienceConfig | None = None,
     resume: str | bool | None = None,
     failure_injector=None,
@@ -426,7 +428,12 @@ def dash_distributed(
 
     This runs ONE (OPT, α) guess; :func:`dash_auto_distributed` sweeps
     the whole guess lattice over the ``pod`` mesh axis in one launch.
+
+    ``precision="bf16"`` streams the per-shard kernel operands in bf16
+    with f32 accumulation (see ``objectives.base.with_precision``).
     """
+    if precision is not None:
+        obj = with_precision(obj, precision)
     X = obj.X
     d, n = X.shape
     cfg = cfg.resolve(n)
@@ -644,7 +651,8 @@ def dash_distributed_restartable(
     obj, cfg: DashConfig, key, opt,
     *, resilience: ResilienceConfig, mesh_provider,
     model_axis: str = "model", data_axis: str | None = "data",
-    use_filter_engine: bool | None = None, failure_injector=None,
+    use_filter_engine: bool | None = None, precision: str | None = None,
+    failure_injector=None,
     max_failures: int = 3, backoff_s: float = 0.0, sleep_fn=None,
 ) -> DistDashResult:
     """The full resilience composition: ``run_with_restart`` driving
@@ -666,6 +674,8 @@ def dash_distributed_restartable(
     if not resilience.ckpt_dir:
         raise ValueError(
             "dash_distributed_restartable needs resilience.ckpt_dir")
+    if precision is not None:
+        obj = with_precision(obj, precision)
     d, n = obj.X.shape
     cfg = cfg.resolve(n)
     engine = _resolve_engine_flag(obj, use_filter_engine)
@@ -954,6 +964,7 @@ def dash_auto_distributed(
     n_samples: int = 8, n_guesses: int = 8, trim_frac: float = 0.0,
     alphas=None, pod_axis: str = "pod", model_axis: str = "model",
     data_axis: str | None = "data", use_filter_engine: bool | None = None,
+    precision: str | None = None,
     resilience: ResilienceConfig | None = None,
     resume: str | bool | None = None, failure_injector=None,
 ) -> LatticeDistResult:
@@ -986,6 +997,8 @@ def dash_auto_distributed(
     """
     from repro.core.dash import lattice_grid, opt_guess_lattice
 
+    if precision is not None:
+        obj = with_precision(obj, precision)
     X = obj.X
     d, n = X.shape
     cfg = DashConfig(k=k, r=r, eps=eps, alpha=alpha, n_samples=n_samples,

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.objectives.base import gather_columns
+from repro.kernels.common import quantize, resolve_precision
 
 
 class AOptState(NamedTuple):
@@ -63,6 +64,7 @@ class AOptimalityObjective:
         sigma2: float = 1.0,
         use_kernel: bool = False,
         use_filter_engine: bool = True,
+        precision: str | None = None,
     ):
         self.X = jnp.asarray(X, jnp.float32)
         self.d, self.n = self.X.shape
@@ -73,6 +75,9 @@ class AOptimalityObjective:
         # Sample-batched filter engine for DASH's Ê_R[f_{S∪R}(a)] estimate
         # (repro.kernels.filter_gains); False forces the per-sample path.
         self.use_filter_engine = bool(use_filter_engine)
+        # Streamed-operand policy for every kernel dispatch ("f32"/"bf16"
+        # — see SupportsFilterEngine); the ref branches quantize to match.
+        self.precision = resolve_precision(precision)
         self.tr_prior = self.d / self.beta2  # Tr(Λ⁻¹)
 
     def _chol(self, M):
@@ -109,10 +114,11 @@ class AOptimalityObjective:
         if self.use_kernel:
             from repro.kernels.aopt_gains.ops import aopt_gains
 
-            return aopt_gains(Xs, Ws, self.isig2)
+            return aopt_gains(Xs, Ws, self.isig2, precision=self.precision)
         from repro.kernels.aopt_gains.ref import aopt_gains_ref
 
-        return aopt_gains_ref(Xs, Ws, self.isig2)
+        return aopt_gains_ref(quantize(Xs, self.precision),
+                              quantize(Ws, self.precision), self.isig2)
 
     def gains(self, state: AOptState):
         # state.W is the cached shared solve M⁻¹X
@@ -205,11 +211,14 @@ class AOptimalityObjective:
         if self.use_kernel:
             from repro.kernels.filter_gains.ops import aopt_filter_gains
 
-            g = aopt_filter_gains(self.X, W, E, F, self.isig2)
+            g = aopt_filter_gains(self.X, W, E, F, self.isig2,
+                                  precision=self.precision)
         else:
             from repro.kernels.filter_gains.ref import aopt_filter_gains_ref
 
-            g = aopt_filter_gains_ref(self.X, W, E, F, self.isig2)
+            g = aopt_filter_gains_ref(quantize(self.X, self.precision),
+                                      quantize(W, self.precision), E, F,
+                                      self.isig2)
         sel = jax.vmap(
             lambda i, v: state.sel_mask.at[i].set(state.sel_mask[i] | v)
         )(idx, mask)
@@ -243,7 +252,8 @@ class AOptimalityObjective:
         # on TPU and the jnp reference elsewhere.
         from repro.kernels.aopt_gains.ops import aopt_gains
 
-        return aopt_gains(X_local, ds.W, self.isig2)
+        return aopt_gains(X_local, ds.W, self.isig2,
+                          precision=self.precision)
 
     def dist_set_gain(self, ds: AOptDistState, C, mask):
         return self._set_gain_cols(ds.L, C, mask)
@@ -262,7 +272,8 @@ class AOptimalityObjective:
         )(Cs)
         from repro.kernels.filter_gains.ops import aopt_filter_gains
 
-        return aopt_filter_gains(X_local, ds.W, E, F, self.isig2)
+        return aopt_filter_gains(X_local, ds.W, E, F, self.isig2,
+                                 precision=self.precision)
 
     # -- exact reference (tests) ------------------------------------------
     def brute_value(self, sel_idx):

@@ -118,9 +118,19 @@ class SupportsFilterEngine(Objective, Protocol):
     ``RegressionObjective``, ``AOptimalityObjective`` and
     ``ClassificationObjective`` all implement this; the shared kernels
     live in ``repro.kernels.filter_gains``.
+
+    ``precision`` is the streamed-operand policy ("f32"/"bf16",
+    ``repro.kernels.common.PRECISIONS``) the objective passes to every
+    kernel dispatch — bf16 streams the big HBM-bound operands in half
+    precision with f32 accumulation, and the jnp reference branches
+    quantize identically so both routes compute the same function.
+    Callers opt in per run via :func:`with_precision` (which ``select()``
+    and the ``dash*`` entry points apply from their ``precision=``
+    argument) rather than mutating the objective.
     """
 
     use_filter_engine: bool
+    precision: str
 
     def filter_gains_batch(self, state, idx, mask) -> Array:
         """(n_samples, n) gains w.r.t. S ∪ R_i for each sampled R_i —
@@ -170,6 +180,35 @@ class DistributedObjective(Objective, Protocol):
         """(n_samples, n_local) gains w.r.t. S ∪ R_i for this shard —
         the filter-engine sweep, one fused launch for all samples.
         ``Cs``/``masks`` stack ``n_samples`` gathered sets."""
+
+
+def with_precision(obj, precision: str | None):
+    """A view of ``obj`` running its kernels at ``precision``.
+
+    Returns ``obj`` itself when the policy already matches (so f32 — the
+    default everywhere — costs nothing); otherwise a memoized shallow
+    copy with ``precision`` overridden.  The copy drops the two
+    per-object caches a view must NOT share with its parent:
+    ``_precision_views`` (a view holds no views) and the
+    ``cached_runner`` store (``_selection_runner_cache``), whose compiled
+    runners closed over the parent's precision.  Memoizing the view on
+    the parent keeps its identity stable across calls, so the view's OWN
+    runner cache stays warm run to run.
+    """
+    from repro.kernels.common import resolve_precision
+
+    p = resolve_precision(precision)
+    if getattr(obj, "precision", "f32") == p:
+        return obj
+    views = obj.__dict__.setdefault("_precision_views", {})
+    if p not in views:
+        view = object.__new__(type(obj))
+        view.__dict__.update(obj.__dict__)
+        view.__dict__.pop("_precision_views", None)
+        view.__dict__.pop("_selection_runner_cache", None)
+        view.precision = p
+        views[p] = view
+    return views[p]
 
 
 def normalize_columns(X: Array, eps: float = 1e-12) -> Array:

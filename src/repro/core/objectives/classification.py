@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.objectives.base import gather_columns, write_accepted_column
+from repro.kernels.common import quantize, resolve_precision
 
 
 def _sigmoid(z):
@@ -82,6 +83,7 @@ class ClassificationObjective:
         gain_eps: float = 1e-9,
         use_kernel: bool = False,
         use_filter_engine: bool = True,
+        precision: str | None = None,
     ):
         self.X = jnp.asarray(X, jnp.float32)
         self.y = jnp.asarray(y, jnp.float32)
@@ -97,6 +99,10 @@ class ClassificationObjective:
         # Sample-batched filter engine for DASH's Ê_R[f_{S∪R}(a)] estimate
         # (repro.kernels.filter_gains); False forces the per-sample path.
         self.use_filter_engine = bool(use_filter_engine)
+        # Streamed-operand policy for the newton1d kernel dispatches
+        # ("f32"/"bf16" — see SupportsFilterEngine); the quadratic gain
+        # mode is not kernel-backed and always runs f32.
+        self.precision = resolve_precision(precision)
         self.ll0 = _loglik(jnp.zeros((self.d,)), self.y)
 
     def init(self) -> ClassificationState:
@@ -132,10 +138,11 @@ class ClassificationObjective:
             from repro.kernels.logistic_gains.ops import logistic_gains
 
             return logistic_gains(Xs, self.y, eta,
-                                  steps=self.newton_gain_steps)
+                                  steps=self.newton_gain_steps,
+                                  precision=self.precision)
         from repro.kernels.logistic_gains.ref import logistic_gains_ref
 
-        return logistic_gains_ref(Xs, self.y, eta,
+        return logistic_gains_ref(quantize(Xs, self.precision), self.y, eta,
                                   steps=self.newton_gain_steps)
 
     def gains(self, state: ClassificationState):
@@ -265,7 +272,8 @@ class ClassificationObjective:
             from repro.kernels.filter_gains.ops import logistic_filter_gains
 
             g = logistic_filter_gains(
-                self.X, self.y, etas, steps=self.newton_gain_steps
+                self.X, self.y, etas, steps=self.newton_gain_steps,
+                precision=self.precision,
             )
         else:
             from repro.kernels.filter_gains.ref import (
@@ -273,7 +281,8 @@ class ClassificationObjective:
             )
 
             g = logistic_filter_gains_ref(
-                self.X, self.y, etas, steps=self.newton_gain_steps
+                quantize(self.X, self.precision), self.y, etas,
+                steps=self.newton_gain_steps,
             )
         sel = jax.vmap(
             lambda i, v: state.sel_mask.at[i].set(state.sel_mask[i] | v)
@@ -300,7 +309,8 @@ class ClassificationObjective:
         from repro.kernels.logistic_gains.ops import logistic_gains
 
         return logistic_gains(X_local, self.y, ds.eta,
-                              steps=self.newton_gain_steps)
+                              steps=self.newton_gain_steps,
+                              precision=self.precision)
 
     def dist_set_gain(self, ds: ClassificationDistState, C, mask):
         m = C.shape[1]
@@ -357,7 +367,8 @@ class ClassificationObjective:
         from repro.kernels.filter_gains.ops import logistic_filter_gains
 
         return logistic_filter_gains(X_local, self.y, etas,
-                                     steps=self.newton_gain_steps)
+                                     steps=self.newton_gain_steps,
+                                     precision=self.precision)
 
     # -- exact reference (tests) ------------------------------------------
     def brute_value(self, sel_idx, steps: int = 60):

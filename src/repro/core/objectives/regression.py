@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.objectives.base import gather_columns, write_accepted_column
+from repro.kernels.common import quantize, resolve_precision
 
 
 class RegressionState(NamedTuple):
@@ -144,6 +145,7 @@ class RegressionObjective:
         jitter: float = 1e-8,
         use_kernel: bool = False,
         use_filter_engine: bool = True,
+        precision: str | None = None,
     ):
         self.X = jnp.asarray(X, jnp.float32)
         self.y = jnp.asarray(y, jnp.float32)
@@ -155,6 +157,9 @@ class RegressionObjective:
         # Sample-batched filter engine for DASH's Ê_R[f_{S∪R}(a)] estimate
         # (repro.kernels.filter_gains); False forces the per-sample path.
         self.use_filter_engine = bool(use_filter_engine)
+        # Streamed-operand policy for every kernel dispatch ("f32"/"bf16"
+        # — see SupportsFilterEngine); the ref branches quantize to match.
+        self.precision = resolve_precision(precision)
         self.ysq = jnp.maximum(jnp.sum(self.y * self.y), 1e-12)
         self.col_sq = jnp.sum(self.X * self.X, axis=0)  # (n,)
 
@@ -179,11 +184,13 @@ class RegressionObjective:
         if self.use_kernel:
             from repro.kernels.marginal_gains.ops import regression_gains
 
-            g = regression_gains(Xs, state.Q, state.resid, cs)
+            g = regression_gains(Xs, state.Q, state.resid, cs,
+                                 precision=self.precision)
         else:
             from repro.kernels.marginal_gains.ref import regression_gains_ref
 
-            g = regression_gains_ref(Xs, state.Q, state.resid, cs)
+            g = regression_gains_ref(quantize(Xs, self.precision), state.Q,
+                                     state.resid, cs)
         return g / self.ysq
 
     def gains(self, state: RegressionState):
@@ -255,11 +262,13 @@ class RegressionObjective:
         if self.use_kernel:
             from repro.kernels.filter_gains.ops import filter_gains
 
-            g = filter_gains(self.X, state.Q, D, R, self.col_sq)
+            g = filter_gains(self.X, state.Q, D, R, self.col_sq,
+                             precision=self.precision)
         else:
             from repro.kernels.filter_gains.ref import filter_gains_ref
 
-            g = filter_gains_ref(self.X, state.Q, D, R, self.col_sq)
+            g = filter_gains_ref(quantize(self.X, self.precision), state.Q,
+                                 D, R, self.col_sq)
         g = g / self.ysq
         sel = jax.vmap(
             lambda i, v: state.sel_mask.at[i].set(state.sel_mask[i] | v)
@@ -283,7 +292,8 @@ class RegressionObjective:
         # to compiled Pallas on TPU and the jnp reference elsewhere.
         from repro.kernels.marginal_gains.ops import regression_gains
 
-        return regression_gains(X_local, ds.Q, ds.resid, ds.col_sq) / self.ysq
+        return regression_gains(X_local, ds.Q, ds.resid, ds.col_sq,
+                                precision=self.precision) / self.ysq
 
     def dist_set_gain(self, ds: RegressionDistState, C, mask):
         Ct = C - ds.Q @ (ds.Q.T @ C)
@@ -315,7 +325,8 @@ class RegressionObjective:
         )(Cs)
         from repro.kernels.filter_gains.ops import filter_gains
 
-        return filter_gains(X_local, ds.Q, D, R, ds.col_sq) / self.ysq
+        return filter_gains(X_local, ds.Q, D, R, ds.col_sq,
+                            precision=self.precision) / self.ysq
 
     # -- exact reference (tests) ------------------------------------------
     def brute_value(self, sel_idx) -> jnp.ndarray:

@@ -22,8 +22,9 @@ from jax.experimental import pallas as pl
 
 
 def _aopt_kernel(x_ref, w_ref, o_ref, *, isig2: float):
-    x = x_ref[...]                      # (d, bn)
-    w = w_ref[...]                      # (d, bn)
+    # Streamed X/W may arrive in bf16 storage; reductions run in f32.
+    x = x_ref[...].astype(jnp.float32)  # (d, bn)
+    w = w_ref[...].astype(jnp.float32)  # (d, bn)
     num = isig2 * jnp.sum(w * w, axis=0, keepdims=True)      # (1, bn)
     den = 1.0 + isig2 * jnp.sum(x * w, axis=0, keepdims=True)
     o_ref[...] = num / jnp.maximum(den, 1e-30)

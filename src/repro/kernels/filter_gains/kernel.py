@@ -49,7 +49,8 @@ from repro.kernels.filter_gains.ref import SPAN_TOL
 def _regression_epilogue(x_ref, q_ref, d_ref, r_ref, csq_ref, o_ref,
                          base_ref, *, n_samples: int, span_tol: float):
     s = pl.program_id(1)
-    x = x_ref[...]                          # (d, bn)
+    # Streamed X may arrive in bf16 storage; all epilogue math is f32.
+    x = x_ref[...].astype(jnp.float32)      # (d, bn)
 
     # Shared-base projection: once per (candidate block, guess) — at the
     # guess's sample 0 — then reused from scratch while the same X block

@@ -45,8 +45,9 @@ from repro.kernels.filter_gains.core import Operand, launch_filter_engine
 
 def _aopt_epilogue(x_ref, w_ref, e_ref, f_ref, wsq_ref, xw_ref, o_ref,
                    *, isig2: float):
-    x = x_ref[...]                          # (d, bn)
-    w = w_ref[0]                            # (d, bn) — this guess's W slab
+    # Streamed X/W may arrive in bf16 storage; all epilogue math is f32.
+    x = x_ref[...].astype(jnp.float32)      # (d, bn)
+    w = w_ref[0].astype(jnp.float32)        # (d, bn) — this guess's W slab
     e = e_ref[0]                            # (d, b)
     t = jax.lax.dot_general(                # E_giᵀ X — (b, bn)
         e, x, (((0,), (0,)), ((), ())),

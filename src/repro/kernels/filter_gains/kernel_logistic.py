@@ -32,6 +32,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.filter_gains.core import Operand, launch_filter_engine
 from repro.kernels.logistic_gains.kernel import newton_gain_sweep
@@ -40,9 +41,11 @@ from repro.kernels.logistic_gains.kernel import newton_gain_sweep
 def _logistic_epilogue(x_ref, y_ref, eta_ref, o_ref, *, steps: int,
                        eps: float):
     # eta_ref[0]: this sample's (d, 1) logits; the sweep itself is the
-    # single-state marginal-gain kernel's.
+    # single-state marginal-gain kernel's.  Streamed X may arrive in
+    # bf16 storage; the Newton recurrence runs in f32.
     o_ref[...] = newton_gain_sweep(
-        x_ref[...], y_ref[...], eta_ref[0], steps=steps, eps=eps
+        x_ref[...].astype(jnp.float32), y_ref[...], eta_ref[0],
+        steps=steps, eps=eps,
     )
 
 

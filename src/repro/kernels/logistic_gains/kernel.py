@@ -45,8 +45,10 @@ def newton_gain_sweep(x, y, eta, *, steps: int, eps: float):
 
 
 def _logistic_kernel(x_ref, y_ref, eta_ref, o_ref, *, steps: int, eps: float):
+    # Streamed X may arrive in bf16 storage; the recurrence runs in f32.
     o_ref[...] = newton_gain_sweep(
-        x_ref[...], y_ref[...], eta_ref[...], steps=steps, eps=eps
+        x_ref[...].astype(jnp.float32), y_ref[...], eta_ref[...],
+        steps=steps, eps=eps,
     )
 
 

@@ -35,7 +35,8 @@ SPAN_TOL = 1e-6
 
 
 def _gains_kernel(x_ref, q_ref, r_ref, csq_ref, o_ref, *, span_tol: float):
-    x = x_ref[...]                      # (d, bn)
+    # Streamed X may arrive in bf16 storage; all epilogue math is f32.
+    x = x_ref[...].astype(jnp.float32)  # (d, bn)
     q = q_ref[...]                      # (d, k)
     r = r_ref[...]                      # (d, 1)
     csq = csq_ref[...]                  # (1, bn)

@@ -413,6 +413,33 @@ class TestDistributedBaselines:
         np.testing.assert_array_equal(np.asarray(via_select.sel_mask),
                                       np.asarray(direct.sel_mask))
 
+    def test_select_bf16_end_to_end_sharded(self, reg_setup, mesh):
+        """``select(..., precision="bf16")`` threads the precision view
+        through the sharded runtime: it matches the explicit
+        ``dash_distributed(..., precision="bf16")`` call bitwise, leaves
+        the parent objective on f32, and its selection value tracks the
+        f32 run within the documented bf16 stream-parity budget."""
+        from repro.kernels.common import STREAM_PARITY_TOL
+
+        obj, cfg, g = reg_setup
+        key = jax.random.PRNGKey(0)
+        r32 = select("dash", obj, cfg.k, key=key, mesh=mesh,
+                     opt=g * 1.05, eps=cfg.eps, alpha=cfg.alpha,
+                     n_samples=cfg.n_samples)
+        r16 = select("dash", obj, cfg.k, key=key, mesh=mesh,
+                     precision="bf16", opt=g * 1.05, eps=cfg.eps,
+                     alpha=cfg.alpha, n_samples=cfg.n_samples)
+        direct = dash_distributed(obj, cfg, key, g * 1.05, mesh,
+                                  precision="bf16")
+        assert obj.precision == "f32"            # view, not mutation
+        assert float(r16.value) == float(direct.value)
+        np.testing.assert_array_equal(np.asarray(r16.sel_mask),
+                                      np.asarray(direct.sel_mask))
+        assert int(r16.sel_count) <= cfg.k
+        tol = STREAM_PARITY_TOL["bf16"]["vs_f32"]
+        v32, v16 = float(r32.value), float(r16.value)
+        assert abs(v16 - v32) <= tol * max(abs(v32), 1e-12)
+
 
 def test_capacity_edge_fills_to_k_and_stops(reg_setup, mesh):
     """opt = 0 ⇒ thresholds are 0 ⇒ no filtering: every round commits a

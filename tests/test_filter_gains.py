@@ -475,3 +475,143 @@ def test_dash_end_to_end_cls_engine():
     res = dash_auto(obj, obj.kmax, jax.random.PRNGKey(0), eps=0.3,
                     alpha=0.4, n_samples=4, n_guesses=4)
     assert float(res.value) >= 0.4 * float(g.value)
+
+
+# ---------------------------------------------------------------------------
+# mixed precision: bf16 streaming with f32 accumulation, per epilogue
+# ---------------------------------------------------------------------------
+
+from repro.kernels.common import PRECISIONS, STREAM_PARITY_TOL, quantize  # noqa: E402
+
+
+def _reg_operands(d=100, n=300, k=7, b=4, m=5):
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    Q, D = _shared_and_deltas(d, k, m, b)
+    R = jnp.asarray(RNG.normal(size=(m, d)), jnp.float32)
+    return X, Q, D, R, jnp.sum(X * X, axis=0)
+
+
+def _aopt_operands(d=100, n=300, b=4, m=5):
+    # Genuine Woodbury operands (W = M⁻¹X, E = P L⁻ᵀ): random W/E push
+    # the epilogue's rational terms into magnitudes where the vs-f32
+    # comparison measures conditioning, not bf16 quantization.
+    Xn = RNG.normal(size=(d, n)).astype(np.float32)
+    Xn = Xn / np.linalg.norm(Xn, axis=0, keepdims=True)
+    sel = RNG.choice(n, size=16, replace=False)
+    M = np.eye(d, dtype=np.float32) + Xn[:, sel] @ Xn[:, sel].T
+    W = np.linalg.solve(M, Xn)
+    Es = []
+    for _ in range(m):
+        C = Xn[:, RNG.choice(n, size=b, replace=False)]
+        P = np.linalg.solve(M, C)
+        Lk = np.linalg.cholesky(np.eye(b) + C.T @ P)
+        Es.append(np.linalg.solve(Lk, P.T).T)
+    E = jnp.asarray(np.stack(Es), jnp.float32)
+    F = jnp.einsum("mdb,mdc->mbc", E, E)
+    return jnp.asarray(Xn), jnp.asarray(W), E, F
+
+
+def _logistic_operands(d=100, n=300, m=5):
+    # Column-normalized like the classification oracle streams it — raw
+    # gaussian columns push the Newton log-likelihoods into magnitudes
+    # where the vs-f32 budget is about conditioning, not quantization.
+    X = jnp.asarray(RNG.normal(size=(d, n)), jnp.float32)
+    X = X / jnp.linalg.norm(X, axis=0, keepdims=True)
+    y = jnp.asarray((RNG.uniform(size=d) > 0.5), jnp.float32)
+    etas = jnp.asarray(RNG.normal(size=(m, d)) * 0.4, jnp.float32)
+    return X, y, etas
+
+
+def _rel_err(a, b):
+    return float(jnp.max(jnp.abs(a - b))
+                 / jnp.maximum(jnp.max(jnp.abs(b)), 1e-12))
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_filter_gains_precision_kernel_matches_ref(prec):
+    """Interpret-mode kernel == jnp ref at each precision policy: the
+    ref quantizes the streamed operand exactly like the kernel's bf16
+    storage + f32 upcast, so both compute the SAME function."""
+    X, Q, D, R, csq = _reg_operands()
+    got = filter_gains(X, Q, D, R, csq, interpret=True, precision=prec)
+    want = filter_gains_ref(quantize(X, prec), Q, D, R, csq)
+    tol = STREAM_PARITY_TOL[prec]["kernel_vs_ref"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_aopt_filter_precision_kernel_matches_ref(prec):
+    X, W, E, F = _aopt_operands()
+    got = aopt_filter_gains(X, W, E, F, 0.7, interpret=True, precision=prec)
+    want = aopt_filter_gains_ref(quantize(X, prec), quantize(W, prec),
+                                 E, F, 0.7)
+    tol = STREAM_PARITY_TOL[prec]["kernel_vs_ref"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_logistic_filter_precision_kernel_matches_ref(prec):
+    X, y, etas = _logistic_operands()
+    got = logistic_filter_gains(X, y, etas, steps=3, interpret=True,
+                                precision=prec)
+    want = logistic_filter_gains_ref(quantize(X, prec), y, etas, steps=3)
+    tol = STREAM_PARITY_TOL[prec]["kernel_vs_ref"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_filter_precision_vs_f32_bounded(prec):
+    """The precision policy's deviation from the f32 truth stays inside
+    the documented per-dtype budget (docs/kernels.md), for all three
+    epilogues, on BOTH routes (interpret kernel and jnp ref).  f32's
+    budget is 0.0 — the policy must be the identity there."""
+    tol = STREAM_PARITY_TOL[prec]["vs_f32"]
+    X, Q, D, R, csq = _reg_operands()
+    Xa, W, E, F = _aopt_operands()
+    Xl, y, etas = _logistic_operands()
+    pairs = [
+        (filter_gains(X, Q, D, R, csq, interpret=True, precision=prec),
+         filter_gains(X, Q, D, R, csq, interpret=True, precision="f32")),
+        (filter_gains_ref(quantize(X, prec), Q, D, R, csq),
+         filter_gains_ref(X, Q, D, R, csq)),
+        (aopt_filter_gains(Xa, W, E, F, 0.7, interpret=True,
+                           precision=prec),
+         aopt_filter_gains(Xa, W, E, F, 0.7, interpret=True,
+                           precision="f32")),
+        (aopt_filter_gains_ref(quantize(Xa, prec), quantize(W, prec),
+                               E, F, 0.7),
+         aopt_filter_gains_ref(Xa, W, E, F, 0.7)),
+        (logistic_filter_gains(Xl, y, etas, steps=3, interpret=True,
+                               precision=prec),
+         logistic_filter_gains(Xl, y, etas, steps=3, interpret=True,
+                               precision="f32")),
+        (logistic_filter_gains_ref(quantize(Xl, prec), y, etas, steps=3),
+         logistic_filter_gains_ref(Xl, y, etas, steps=3)),
+    ]
+    for got, want in pairs:
+        assert _rel_err(got, want) <= tol
+
+
+def test_objective_precision_views_route_bf16():
+    """with_precision views flip every oracle to the bf16 policy without
+    mutating the parent, and the views' gains differ from f32 by at most
+    the documented budget."""
+    from repro.core.objectives.base import with_precision
+
+    tol = STREAM_PARITY_TOL["bf16"]["vs_f32"]
+    obj = _problem(use_filter_engine=True)
+    view = with_precision(obj, "bf16")
+    assert obj.precision == "f32" and view.precision == "bf16"
+    assert with_precision(obj, "bf16") is view          # memoized
+    assert with_precision(view, "bf16") is view         # idempotent
+    st = obj.init()
+    g32, g16 = obj.gains(st), view.gains(st)
+    assert 0.0 < _rel_err(g16, g32) <= tol
+    idx = jnp.asarray(RNG.integers(0, obj.n, size=(3, 4)), jnp.int32)
+    mask = jnp.ones((3, 4), bool)
+    f32b = obj.filter_gains_batch(st, idx, mask)
+    f16b = view.filter_gains_batch(st, idx, mask)
+    assert 0.0 < _rel_err(f16b, f32b) <= tol
