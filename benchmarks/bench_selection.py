@@ -491,6 +491,67 @@ def run_resilience(full: bool = False):
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+def run_serve(full: bool = False):
+    """Selection-service behavior under offered load (docs/serving.md).
+
+    Three offered-load levels against one tenant dataset — under the
+    bucket size, saturating the admission queues, and past the global
+    pending cap — each measured with chaos off and on (a per-launch
+    injected failure at round 1, exercising the hedged-resume path).
+
+    Rows (prefix ``serve/``): ``us_per_call`` is the whole drain's wall
+    time; the derived field carries the latency/goodput envelope the
+    compare-vs-main summary watches — ``p50``/``p99`` reply latency,
+    ``goodput`` (OK replies per second), and the explicit-shedding
+    counters (every offered request gets a terminal reply; under
+    overload the surplus shows up in ``rejected``, never in latency).
+    """
+    from repro.runtime.fault_tolerance import FailureInjector
+    from repro.runtime.hedging import HedgePolicy
+    from repro.serve import AdmissionPolicy, SelectionServer, SelectRequest
+
+    scale = 2 if full else 1
+    rng = np.random.default_rng(0)
+    d, n, k = 96 * scale, 64 * scale, 8
+    X0 = rng.normal(size=(d, n)) + 0.4 * rng.normal(size=(d, 1))
+    X = normalize_columns(jnp.asarray(X0, jnp.float32))
+    w = np.zeros(n)
+    w[:k] = rng.uniform(-2, 2, k)
+    y = jnp.asarray(X0 @ w + 0.1 * rng.normal(size=d), jnp.float32)
+
+    admission = AdmissionPolicy(max_batch=4, max_queue=8, max_pending=16)
+    loads = (2, 8, 24)          # under-bucket / saturating / shedding
+    for chaos_on in (False, True):
+        srv = SelectionServer(
+            admission=admission,
+            chaos=FailureInjector(fail_at=(1,)) if chaos_on else None,
+            hedge=HedgePolicy(max_attempts=3, backoff_s=0.0,
+                              sleep_fn=lambda s: None))
+        srv.register("bench", "regression", X, y, kmax=k)
+        for w in (1, 2, 4):    # pre-compile every padded lane shape
+            srv.serve([SelectRequest("bench", k, 0) for _ in range(w)])
+        for load in loads:
+            before = dict(srv.stats)
+            t0 = time.perf_counter()
+            replies = srv.serve(
+                [SelectRequest("bench", k, s) for s in range(load)])
+            wall = time.perf_counter() - t0
+            lats = sorted(r.latency_s for r in replies if r.ok)
+            n_ok = len(lats)
+            n_rej = sum(r.status == "rejected" for r in replies)
+            p50 = lats[n_ok // 2] if lats else float("nan")
+            p99 = lats[min(int(0.99 * n_ok), n_ok - 1)] if lats \
+                else float("nan")
+            retries = srv.stats["hedge_retries"] - before["hedge_retries"]
+            assert n_ok + n_rej + sum(
+                r.status == "failed" for r in replies) == load
+            emit(f"serve/load={load}/chaos={'on' if chaos_on else 'off'}",
+                 wall * 1e6,
+                 f"p50={p50 * 1e3:.1f}ms;p99={p99 * 1e3:.1f}ms;"
+                 f"goodput={n_ok / max(wall, 1e-9):.1f}rps;"
+                 f"ok={n_ok};rejected={n_rej};hedge_retries={retries}")
+
+
 def _baseline_datasets(scale: int):
     """The three paper objectives at baseline-suite sizes, as
     ``(name, make_obj(X) factory, X, k_grid, select-opts)`` tuples —
@@ -788,7 +849,7 @@ def main() -> None:
     ap.add_argument(
         "--suite", default="all",
         help="comma-separated subset of {paper, distributed, lattice, "
-             "baselines, train, resilience} or 'all'.  'paper' = Fig 2/3/4 "
+             "baselines, train, resilience, serve} or 'all'.  'paper' = Fig 2/3/4 "
              "analogues; 'distributed' = dash_distributed vs dash for "
              "all three objectives; 'lattice' = loop vs batched vs "
              "pod-sharded (OPT, α) guess lattice; 'baselines' = the "
@@ -797,14 +858,16 @@ def main() -> None:
              "for coreset selection-in-the-loop, dash vs stochastic "
              "greedy vs random vs no selection (the distributed CI job "
              "greedy vs random vs no selection; 'resilience' = round-"
-             "snapshot overhead + kill/restore/replay costs (the "
+             "snapshot overhead + kill/restore/replay costs; 'serve' = "
+             "selection-service p50/p99 latency + goodput at three "
+             "offered-load levels, chaos off and on (the "
              "distributed CI job runs "
-             "'distributed,lattice,baselines,train,resilience' with 8 "
-             "forced host devices)",
+             "'distributed,lattice,baselines,train,resilience,serve' "
+             "with 8 forced host devices)",
     )
     args = ap.parse_args()
     known = {"paper", "distributed", "lattice", "baselines", "train",
-             "resilience"}
+             "resilience", "serve"}
     suites = (known if args.suite == "all"
               else {s.strip() for s in args.suite.split(",")})
     unknown = suites - known
@@ -822,6 +885,8 @@ def main() -> None:
         run_train(full=args.full)
     if "resilience" in suites:
         run_resilience(full=args.full)
+    if "serve" in suites:
+        run_serve(full=args.full)
     if args.json:
         payload = {"suite": f"bench_selection/{args.suite}",
                    "backend": jax.default_backend(),

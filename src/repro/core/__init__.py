@@ -29,7 +29,11 @@ from repro.core.dash import (
     dash_auto,
     dash_checkpointed,
 )
-from repro.core.selection_loop import ResilienceConfig
+from repro.core.selection_loop import (
+    Deadline,
+    ResilienceConfig,
+    SelectionDeadlineExceeded,
+)
 from repro.core.greedy import (
     greedy,
     greedy_parallel_cost,
@@ -48,6 +52,7 @@ from repro.core.algorithms import (
     get_algorithm,
     register,
     select,
+    select_batched,
 )
 from repro.core.lasso import fista, lasso_path_select
 from repro.core.adaptive_sequencing import adaptive_sequencing
@@ -69,7 +74,9 @@ __all__ = [
     "normalize_columns",
     "DashConfig",
     "DashResult",
+    "Deadline",
     "ResilienceConfig",
+    "SelectionDeadlineExceeded",
     "dash",
     "dash_auto",
     "dash_checkpointed",
@@ -89,6 +96,7 @@ __all__ = [
     "get_algorithm",
     "register",
     "select",
+    "select_batched",
     "fista",
     "lasso_path_select",
     "adaptive_sequencing",

@@ -130,6 +130,45 @@ def _normalize(raw) -> SelectionResult:
     )
 
 
+def _validate_k(k) -> int:
+    """k must be a positive integer — fail here with a clear message
+    instead of deep inside a jit trace (lax.top_k / fori_loop errors)."""
+    ki = int(k)
+    if ki <= 0:
+        raise ValueError(f"k must be a positive integer, got {k!r}")
+    return ki
+
+
+def _validate_mesh(obj, mesh, algo: str) -> None:
+    """Mesh dispatch preconditions, checked loudly before tracing.
+
+    A mismatched objective/mesh used to die deep inside ``shard_map``
+    with a shape error; the serving layer (and any caller) gets a clear
+    ``ValueError`` naming the fix instead.
+    """
+    if not hasattr(obj, "dist_init"):
+        raise ValueError(
+            f"objective {type(obj).__name__} does not implement the "
+            f"DistributedObjective contract (dist_init/...), so "
+            f"select({algo!r}, ..., mesh=...) cannot dispatch the "
+            f"distributed twin"
+        )
+    X = getattr(obj, "X", None)
+    try:
+        axes = dict(mesh.shape)
+    except (AttributeError, TypeError):
+        raise ValueError(
+            f"mesh must expose a named-axis .shape mapping, got "
+            f"{type(mesh).__name__}"
+        ) from None
+    model = int(axes.get("model", 1) or 1)
+    if X is not None and model > 1 and X.shape[1] % model:
+        raise ValueError(
+            f"ground set n={X.shape[1]} does not divide the mesh's "
+            f"model axis ({model}) — pad_ground_set the columns first"
+        )
+
+
 def select(algo: str, obj, k: int, key=None, mesh=None, **opts) -> SelectionResult:
     """Run any registered selection algorithm — THE entry point.
 
@@ -152,6 +191,7 @@ def select(algo: str, obj, k: int, key=None, mesh=None, **opts) -> SelectionResu
     both runtimes.
     """
     spec = get_algorithm(algo)
+    k = _validate_k(k)
     precision = opts.pop("precision", None)
     if precision is not None:
         from repro.core.objectives.base import with_precision
@@ -160,10 +200,11 @@ def select(algo: str, obj, k: int, key=None, mesh=None, **opts) -> SelectionResu
     if spec.needs_key and key is None:
         key = jax.random.PRNGKey(0)
     if mesh is None:
-        return _normalize(spec.single(obj, int(k), key, **opts))
+        return _normalize(spec.single(obj, k, key, **opts))
     if spec.distributed is None:
         raise ValueError(f"algorithm {algo!r} has no distributed twin")
-    return _normalize(spec.distributed(obj, int(k), key, mesh, **opts))
+    _validate_mesh(obj, mesh, algo)
+    return _normalize(spec.distributed(obj, k, key, mesh, **opts))
 
 
 # ---------------------------------------------------------------------------
@@ -285,3 +326,104 @@ def _dist():
     from repro.core import distributed
 
     return distributed
+
+
+# ---------------------------------------------------------------------------
+# request-batched dispatch — the serving substrate
+# ---------------------------------------------------------------------------
+
+_DASH_CFG_KEYS = ("r", "eps", "alpha", "n_samples", "trim_frac",
+                  "max_filter_iters")
+
+
+def select_batched(algo: str, obj, k: int, keys, *, opt=None, alpha=None,
+                   **opts) -> SelectionResult:
+    """Fold B independent ``(key[, opt, alpha])`` requests against ONE
+    objective into ONE compiled launch — the request-batched entry the
+    selection service (``repro.serve``) builds on.
+
+    The request axis is just another leading fold through the existing
+    machinery: randomized algorithms ``vmap`` their single-device
+    implementation over the keys (for dash, the filter-engine
+    ``custom_vmap`` rules collapse every request's Monte-Carlo sweep
+    into one fused kernel launch, exactly as the (OPT, α) guess lattice
+    does), and deterministic algorithms (greedy, topk) run once and
+    broadcast — their lanes are provably identical.  Returns a
+    :class:`SelectionResult` whose every field carries a leading
+    ``(B,)`` request axis.
+
+    ``opt``/``alpha`` apply to dash only: scalars broadcast, arrays are
+    per-request.  Batched dash requires an explicit ``opt`` (per-request
+    lattice sweeps belong to ``dash_auto``; a serving layer derives OPT
+    once per dataset — see ``repro.serve``).  ``lazy_greedy`` is
+    host-driven and cannot be request-batched.  Compiled runners are
+    cached per objective (``cached_runner``), keyed on
+    ``(algo, k, B, opts)`` — repeat traffic at a warm bucket shape adds
+    zero retraces.
+    """
+    from repro.core.selection_loop import cached_runner
+
+    spec = get_algorithm(algo)
+    k = _validate_k(k)
+    if algo == "lazy_greedy":
+        raise ValueError(
+            "lazy_greedy is host-driven (data-dependent re-check order) "
+            "and cannot be request-batched; use greedy or topk"
+        )
+    precision = opts.pop("precision", None)
+    if precision is not None:
+        from repro.core.objectives.base import with_precision
+
+        obj = with_precision(obj, precision)
+
+    keys = jnp.asarray(keys)
+    if keys.ndim == 1:
+        keys = keys[None]
+    B = keys.shape[0]
+
+    if not spec.needs_key:
+        opts_key = tuple(sorted(opts.items()))
+        runner = cached_runner(
+            obj, ("select_batched_det", algo, k, opts_key),
+            lambda: jax.jit(lambda: spec.single(obj, k, None, **opts)),
+        )
+        res = _normalize(runner())
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (B,) + jnp.shape(x)), res
+        )
+
+    if algo == "dash":
+        if opt is None:
+            raise ValueError(
+                "request-batched dash needs an explicit opt= guess "
+                "(scalar or (B,) per-request array) — derive one via a "
+                "topk probe or opt_guess_lattice"
+            )
+        from repro.core.dash import DashConfig, dash
+
+        cfg = DashConfig(k=k, **{kk: opts.pop(kk) for kk in _DASH_CFG_KEYS
+                                 if kk in opts})
+        if opts:
+            raise ValueError(f"unknown dash options: {sorted(opts)}")
+        opt = jnp.broadcast_to(
+            jnp.asarray(opt, jnp.float32).reshape(-1), (B,))
+        alpha = jnp.broadcast_to(
+            jnp.asarray(cfg.alpha if alpha is None else alpha,
+                        jnp.float32).reshape(-1), (B,))
+        runner = cached_runner(
+            obj, ("select_batched", "dash", k, B, cfg),
+            lambda: jax.jit(
+                jax.vmap(lambda kk, g, a: dash(obj, cfg, kk, g, a))),
+        )
+        return _normalize(runner(keys, opt, alpha))
+
+    opts_key = tuple(sorted(opts.items()))
+    # Normalize INSIDE the vmap so sel_count is per-request, not a sum
+    # over the whole batch of masks.
+    runner = cached_runner(
+        obj, ("select_batched", algo, k, B, opts_key),
+        lambda: jax.jit(
+            jax.vmap(lambda kk: _normalize(spec.single(obj, k, kk,
+                                                       **opts)))),
+    )
+    return runner(keys)

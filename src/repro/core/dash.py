@@ -188,7 +188,7 @@ def _checkpointed_step_runner(obj, cfg: DashConfig):
 def dash_checkpointed(
     obj, cfg: DashConfig, key, opt: float | jnp.ndarray,
     *, resilience: ResilienceConfig, alpha: jnp.ndarray | None = None,
-    resume: bool = False, failure_injector=None,
+    resume: bool = False, failure_injector=None, deadline=None,
     precision: str | None = None,
 ) -> DashResult:
     """Single-device DASH stepped round-by-round from the host, with the
@@ -228,7 +228,7 @@ def dash_checkpointed(
     carry = drive_checkpointed_rounds(
         lambda rho, c, arrived: step(rho, c, opt_v, alpha_v),
         carry, cfg, resilience=resilience, start_round=start_round,
-        failure_injector=failure_injector,
+        failure_injector=failure_injector, deadline=deadline,
         snapshot_extra={"algo": "dash", "n": int(obj.n)},
     )
     state, _, count, _, trace = carry

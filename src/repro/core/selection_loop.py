@@ -42,6 +42,7 @@ the straggler simulator's per-round responder masks
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple
 
@@ -173,6 +174,51 @@ class ResilienceConfig:
         from repro.runtime.straggler import StragglerPolicy
 
         return StragglerPolicy()
+
+
+class Deadline:
+    """A monotonic wall-clock budget for a host-stepped selection run.
+
+    ``clock`` is injectable (tests pass a counter) — the budget starts
+    when the instance is constructed.  Shared by
+    :func:`drive_checkpointed_rounds` and the selection server's drain
+    path, so 'how long may this keep running' is answered one way
+    everywhere.
+    """
+
+    def __init__(self, budget_s: float,
+                 clock: Callable[[], float] = time.monotonic):
+        self.budget_s = float(budget_s)
+        self.clock = clock
+        self.t0 = clock()
+
+    def elapsed(self) -> float:
+        return self.clock() - self.t0
+
+    def remaining(self) -> float:
+        return self.budget_s - self.elapsed()
+
+    def expired(self) -> bool:
+        return self.remaining() <= 0.0
+
+
+class SelectionDeadlineExceeded(RuntimeError):
+    """A host-stepped selection run ran out of deadline budget.
+
+    Carries how many rounds completed and (when the driver has one) the
+    partial :class:`SelectionCarry`, so a serving layer can degrade or
+    reject explicitly instead of hanging.  Retrying cannot help, so the
+    resilience wrappers treat it as fatal (``fatal=`` in
+    ``run_with_restart`` / ``run_resumable``).
+    """
+
+    def __init__(self, rounds_done: int, carry: Any = None):
+        super().__init__(
+            f"selection deadline expired after {int(rounds_done)} "
+            f"completed rounds"
+        )
+        self.rounds_done = int(rounds_done)
+        self.carry = carry
 
 
 class RoundCheckpointer:
@@ -384,6 +430,7 @@ def drive_checkpointed_rounds(
     start_round: int = 0,
     failure_injector=None,
     snapshot_extra: dict | None = None,
+    deadline: Deadline | None = None,
 ) -> SelectionCarry:
     """Host-driven round loop with snapshots — the resilient twin of
     :func:`run_selection_rounds`.
@@ -394,11 +441,17 @@ def drive_checkpointed_rounds(
     and why a snapshot taken on one mesh restores onto another.
     ``failure_injector.check(rho)`` runs before each round, so an
     injected kill loses at most the rounds since the last snapshot.
+    ``deadline`` bounds the host loop: an expired budget raises
+    :class:`SelectionDeadlineExceeded` (with the partial carry attached)
+    at the next round boundary instead of letting the run spin past its
+    budget — the serving layer's degradation/rejection hook.
     """
     ckpt = (RoundCheckpointer(resilience)
             if resilience is not None and resilience.ckpt_dir else None)
     try:
         for rho in range(start_round, cfg.r):
+            if deadline is not None and deadline.expired():
+                raise SelectionDeadlineExceeded(rho, carry)
             if failure_injector is not None:
                 failure_injector.check(rho)
             arrived = round_arrivals(resilience, cfg, rho)

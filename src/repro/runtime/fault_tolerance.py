@@ -18,6 +18,7 @@ that failed — fire normally once re-executed.)
 from __future__ import annotations
 
 import logging
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable
@@ -27,19 +28,39 @@ log = logging.getLogger(__name__)
 
 @dataclass
 class FailureInjector:
-    """Raise at configured steps (once each) to simulate node loss."""
+    """Raise at configured steps (once each) to simulate node loss.
+
+    One instance = ONE injection schedule: each step in ``fail_at``
+    fires exactly once across every ``check`` caller, which is the
+    right semantics for a single restartable loop (the retry must get
+    past the failure) but the WRONG one for concurrent requests — a
+    shared instance lets the first request consume a step's failure and
+    silently shields every other request's schedule.  Launch-scoped
+    users (the selection server's chaos mode) must take an independent
+    schedule per launch via :meth:`fork`.  ``check`` is serialized with
+    a lock so concurrent callers cannot double-fire a step.
+    """
 
     fail_at: tuple = ()
     _fired: set = field(default_factory=set)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def __post_init__(self):
         if isinstance(self.fail_at, int):
             self.fail_at = (self.fail_at,)
 
     def check(self, step: int):
-        if step in self.fail_at and step not in self._fired:
-            self._fired.add(step)
-            raise RuntimeError(f"injected failure at step {step}")
+        with self._lock:
+            if step in self.fail_at and step not in self._fired:
+                self._fired.add(step)
+                raise RuntimeError(f"injected failure at step {step}")
+
+    def fork(self) -> "FailureInjector":
+        """A fresh injector with the same ``fail_at`` schedule and its
+        own (empty) fired set — per-request/per-launch chaos schedules
+        must not share this instance's mutable step counter."""
+        return FailureInjector(fail_at=tuple(self.fail_at))
 
 
 def run_with_restart(
@@ -52,6 +73,7 @@ def run_with_restart(
     max_failures: int = 3,
     backoff_s: float = 0.0,
     sleep_fn: Callable[[float], None] = time.sleep,
+    fatal: tuple = (),
 ):
     """Generic restartable loop.  Returns the final state.
 
@@ -60,7 +82,10 @@ def run_with_restart(
     failure that precedes the first save.  ``backoff_s`` spaces restarts
     exponentially (``backoff_s · 2^(failures−1)`` before the n-th
     restart) so a crash-looping fleet doesn't hammer the restore path;
-    ``sleep_fn`` is injectable for tests.
+    ``sleep_fn`` is injectable for tests.  Exception types in ``fatal``
+    propagate immediately instead of burning restart attempts — the
+    serving layer uses this for deadline overruns, which a retry can
+    only make later.
     """
     failures = 0
     restored = restore()
@@ -76,6 +101,8 @@ def run_with_restart(
                 fired_through = step + 1
             step += 1
         except Exception as e:  # noqa: BLE001 — any step failure
+            if fatal and isinstance(e, tuple(fatal)):
+                raise
             failures += 1
             log.warning("step %d failed (%s); restart %d/%d",
                         step, e, failures, max_failures)

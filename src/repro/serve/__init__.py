@@ -1,0 +1,67 @@
+"""Selection-as-a-service: overload- and failure-hardened batched select().
+
+The serving layer around DASH's low-adaptivity selection: many tenants'
+``(objective, k, key, deadline)`` requests fold into single compiled
+launches (the request axis rides the same ``vmap`` fold as the (OPT, α)
+guess lattice), behind bounded admission queues with explicit load
+shedding, a deadline-driven degradation ladder, hedged resume-not-
+restart retries, and a fingerprint-keyed objective cache with warm
+updates.  See docs/serving.md.
+"""
+
+from repro.serve.admission import (
+    AdmissionController,
+    AdmissionPolicy,
+    bucket_key,
+    padded_batch,
+)
+from repro.serve.batcher import (
+    BatchOutput,
+    DashBucket,
+    build_dash_bucket,
+    build_opt_probe,
+    build_single_shot,
+)
+from repro.serve.cache import (
+    DatasetEntry,
+    ObjectiveCache,
+    chained_fingerprint,
+    fingerprint_arrays,
+    make_factory,
+)
+from repro.serve.degradation import DegradationLadder, LatencyModel, plan_tier
+from repro.serve.request import (
+    FAILED,
+    OK,
+    REJECTED,
+    SelectReply,
+    SelectRequest,
+)
+from repro.serve.server import SelectionServer, ServePolicy
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionPolicy",
+    "BatchOutput",
+    "DashBucket",
+    "DatasetEntry",
+    "DegradationLadder",
+    "FAILED",
+    "LatencyModel",
+    "OK",
+    "ObjectiveCache",
+    "REJECTED",
+    "SelectReply",
+    "SelectRequest",
+    "SelectionServer",
+    "ServePolicy",
+    "bucket_key",
+    "build_dash_bucket",
+    "build_opt_probe",
+    "build_single_shot",
+    "chained_fingerprint",
+    "fingerprint_arrays",
+    "make_factory",
+    "padded_batch",
+    "plan_tier",
+]

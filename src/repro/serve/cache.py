@@ -1,0 +1,178 @@
+"""Objective-state cache keyed on dataset fingerprint, with warm updates.
+
+Generalizes the library's per-objective ``cached_runner`` pattern to a
+multi-tenant server.  The key design point is STALE-CONSTANT SAFETY: a
+runner built as ``jit(lambda: f(obj))`` bakes ``obj.X`` into the
+executable as a compile-time constant, so mutating the dataset after a
+warm update would silently keep serving the old columns.  Every runner
+the serve layer compiles therefore takes the dataset arrays as jit
+ARGUMENTS and rebuilds the objective inside the trace via the entry's
+``factory`` (the objectives' constructors are jnp-pure, so this traces
+cleanly and costs one constructor's worth of flops per launch — noise
+next to the selection itself).
+
+Because jit keys executables on argument shapes/dtypes, a warm column
+update (:meth:`ObjectiveCache.update_columns` — same shapes, new
+values) re-keys the entry under a chained fingerprint but KEEPS its
+compiled runners: zero recompilation for drifting data.  Only the
+derived scalars (the OPT probe values) are invalidated.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def fingerprint_arrays(kind: str, arrays: dict) -> str:
+    """Content hash of a dataset: kind + per-array name/shape/dtype/bytes.
+    Two registrations of identical data share one cache entry (and its
+    compiled runners)."""
+    h = hashlib.sha256(kind.encode())
+    for name in sorted(arrays):
+        a = np.asarray(arrays[name])
+        h.update(name.encode())
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def chained_fingerprint(parent: str, idx, cols) -> str:
+    """Fingerprint after a warm update — hash of (parent, patch) rather
+    than the full arrays, so updates are O(patch) not O(dataset)."""
+    h = hashlib.sha256(parent.encode())
+    h.update(np.asarray(idx).tobytes())
+    h.update(np.asarray(cols).tobytes())
+    return h.hexdigest()[:16]
+
+
+def make_factory(kind: str, kmax: int, **kw) -> Callable[[dict], Any]:
+    """An arrays→objective constructor closure for a supported kind.
+
+    The returned factory is called INSIDE jit traces (see module
+    docstring), which the objectives' jnp-pure constructors support.
+    """
+    if kind == "regression":
+        from repro.core.objectives import RegressionObjective
+
+        return lambda a: RegressionObjective(a["X"], a["y"], kmax=kmax, **kw)
+    if kind == "aopt":
+        from repro.core.objectives import AOptimalityObjective
+
+        return lambda a: AOptimalityObjective(a["X"], kmax=kmax, **kw)
+    if kind == "classification":
+        from repro.core.objectives import ClassificationObjective
+
+        return lambda a: ClassificationObjective(a["X"], a["y"], kmax=kmax,
+                                                 **kw)
+    raise ValueError(
+        f"unknown objective kind {kind!r}; "
+        "supported: regression, aopt, classification"
+    )
+
+
+@dataclass
+class DatasetEntry:
+    """One registered dataset: arrays, factory, and the compiled-runner
+    store that survives warm updates."""
+
+    name: str
+    kind: str
+    fingerprint: str
+    arrays: dict
+    factory: Callable[[dict], Any]
+    kmax: int
+    runners: dict = field(default_factory=dict)
+    opt_probe: dict = field(default_factory=dict)   # k → probed OPT base
+    builds: int = 0     # runner builds — tests assert warm updates add 0
+
+    @property
+    def n(self) -> int:
+        return int(self.arrays["X"].shape[1])
+
+    def runner(self, key, build: Callable[[], Any]):
+        """Memoized compiled executor, keyed on launch shape/config —
+        the serve-layer sibling of ``core.selection_loop.cached_runner``
+        (keyed on the ENTRY, not the objective, because serve runners
+        rebuild the objective per launch from traced arrays)."""
+        if key not in self.runners:
+            self.runners[key] = build()
+            self.builds += 1
+        return self.runners[key]
+
+
+class ObjectiveCache:
+    """LRU of :class:`DatasetEntry` keyed on fingerprint, with name
+    aliases.  Capacity-bounded: evicting an entry drops its arrays AND
+    its compiled runners together (same lifetime argument as
+    ``cached_runner``)."""
+
+    def __init__(self, capacity: int = 8):
+        self.capacity = int(capacity)
+        self._entries: OrderedDict[str, DatasetEntry] = OrderedDict()
+        self._names: dict[str, str] = {}          # alias → fingerprint
+
+    def register(self, name: str, kind: str, arrays: dict, *,
+                 kmax: int, **obj_kw) -> str:
+        """Add (or re-reference) a dataset; returns its fingerprint."""
+        arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
+        fp = fingerprint_arrays(kind, arrays)
+        if fp in self._entries:
+            self._entries.move_to_end(fp)
+        else:
+            self._entries[fp] = DatasetEntry(
+                name=name, kind=kind, fingerprint=fp, arrays=arrays,
+                factory=make_factory(kind, kmax, **obj_kw), kmax=kmax,
+            )
+            while len(self._entries) > self.capacity:
+                old_fp, old = self._entries.popitem(last=False)
+                self._names = {n: f for n, f in self._names.items()
+                               if f != old_fp}
+        self._names[name] = fp
+        return fp
+
+    def get(self, name_or_fp: str) -> DatasetEntry:
+        fp = self._names.get(name_or_fp, name_or_fp)
+        try:
+            entry = self._entries[fp]
+        except KeyError:
+            raise ValueError(
+                f"unknown dataset {name_or_fp!r}; registered: "
+                f"{sorted(self._names)}"
+            ) from None
+        self._entries.move_to_end(fp)
+        return entry
+
+    def update_columns(self, name_or_fp: str, idx, cols) -> str:
+        """Rank-small warm update: overwrite columns ``idx`` of the
+        entry's X with ``cols`` and re-key under a chained fingerprint.
+        Compiled runners are KEPT (shapes unchanged ⇒ same executables);
+        derived OPT probes are invalidated (values changed)."""
+        entry = self.get(name_or_fp)
+        idx = jnp.asarray(idx, jnp.int32)
+        cols = jnp.asarray(cols, jnp.float32)
+        X = entry.arrays["X"]
+        if cols.shape != (X.shape[0], idx.shape[0]):
+            raise ValueError(
+                f"column patch shape {cols.shape} does not match "
+                f"(d={X.shape[0]}, |idx|={idx.shape[0]})"
+            )
+        new_fp = chained_fingerprint(entry.fingerprint, idx, cols)
+        entry.arrays = dict(entry.arrays, X=X.at[:, idx].set(cols))
+        entry.opt_probe.clear()
+        self._entries.pop(entry.fingerprint, None)
+        old_fp, entry.fingerprint = entry.fingerprint, new_fp
+        self._entries[new_fp] = entry
+        self._names = {n: (new_fp if f == old_fp else f)
+                       for n, f in self._names.items()}
+        return new_fp
+
+
+__all__ = ["ObjectiveCache", "DatasetEntry", "fingerprint_arrays",
+           "chained_fingerprint", "make_factory"]

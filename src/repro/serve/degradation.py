@@ -1,0 +1,99 @@
+"""Deadline-aware graceful degradation along a declared algorithm ladder.
+
+When a request's remaining deadline budget cannot fit the algorithm it
+asked for, the server downgrades it along ``dash`` →
+``stochastic_greedy`` → ``topk`` — trading approximation quality for
+latency in declared, observable steps — and labels the reply with the
+tier that actually served.  The floor tier always serves: a request
+with ANY budget left gets a (possibly heavily degraded) result rather
+than a timeout, and only a fully spent budget is rejected.
+
+Cost prediction starts from the registry's analytical adaptivity
+(``algorithm_cost`` — dash's O(log n) rounds vs greedy's k) scaled by a
+per-round wall-clock prior, then switches to an EWMA of observed launch
+latencies per tier — the prior only has to be right enough to order the
+tiers until real measurements arrive.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.algorithms import algorithm_cost
+
+
+@dataclass(frozen=True)
+class DegradationLadder:
+    """Ordered quality→speed tiers.  ``tiers[0]`` is the best quality;
+    ``tiers[-1]`` is the floor that must fit any non-zero budget."""
+
+    tiers: tuple = ("dash", "stochastic_greedy", "topk")
+
+    def downgrades(self, algo: str) -> tuple:
+        """The tiers that may serve a request for ``algo``: itself, then
+        everything below it on the ladder."""
+        if algo not in self.tiers:
+            raise ValueError(
+                f"algorithm {algo!r} is not on the serving ladder "
+                f"{self.tiers}"
+            )
+        return self.tiers[self.tiers.index(algo):]
+
+    @property
+    def floor(self) -> str:
+        return self.tiers[-1]
+
+
+class LatencyModel:
+    """Per-tier launch-latency estimate: analytical prior, EWMA posterior.
+
+    ``predict`` answers "can tier t fit in the remaining budget?" for
+    the degradation planner; ``observe`` folds each completed launch
+    back in.  Estimates are per TIER, not per batch shape — bucketed
+    shapes keep launches similar enough for an EWMA, and the planner
+    only needs ordering plus a rough magnitude.
+    """
+
+    def __init__(self, round_cost_prior_s: float = 0.02,
+                 decay: float = 0.3):
+        self.round_cost_prior_s = float(round_cost_prior_s)
+        self.decay = float(decay)
+        self._ewma: dict[str, float] = {}
+
+    def predict(self, tier: str, n: int, k: int) -> float:
+        if tier in self._ewma:
+            return self._ewma[tier]
+        rounds = max(1, int(algorithm_cost(tier, n, k)["adaptive_rounds"]))
+        return rounds * self.round_cost_prior_s
+
+    def observe(self, tier: str, seconds: float):
+        if seconds <= 0:
+            return
+        if tier not in self._ewma:
+            self._ewma[tier] = float(seconds)
+        else:
+            self._ewma[tier] = ((1 - self.decay) * self._ewma[tier]
+                                + self.decay * float(seconds))
+
+
+def plan_tier(ladder: DegradationLadder, model: LatencyModel,
+              requested: str, n: int, k: int,
+              remaining_s: float | None) -> tuple[str, bool]:
+    """Pick the serving tier for one request.
+
+    Returns ``(tier, degraded)``: the highest-quality tier whose
+    predicted latency fits ``remaining_s`` (``None`` = no deadline ⇒
+    the requested tier, undegraded).  The ladder floor is returned even
+    when nothing fits — serving SOMETHING cheap beats timing out; the
+    caller separately rejects requests whose budget is already zero.
+    """
+    options = ladder.downgrades(requested)
+    if remaining_s is None:
+        return options[0], False
+    for tier in options:
+        if model.predict(tier, n, k) <= remaining_s:
+            return tier, tier != requested
+    return options[-1], options[-1] != requested
+
+
+__all__ = ["DegradationLadder", "LatencyModel", "plan_tier"]

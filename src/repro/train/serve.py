@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -32,9 +34,20 @@ def sample_token(logits, key, *, temperature: float = 0.0, top_k: int = 0):
 
 
 def generate(model, params, batch, n_steps: int, key=None, *,
-             temperature: float = 0.0, top_k: int = 0):
-    """Host-side autoregressive generation (batched, greedy by default)."""
+             temperature: float = 0.0, top_k: int = 0,
+             deadline_s: float | None = None,
+             clock=time.monotonic):
+    """Host-side autoregressive generation (batched, greedy by default).
+
+    ``deadline_s`` bounds the host decode loop's wall clock: once the
+    budget is spent the loop stops after the current step and the result
+    carries fewer than ``n_steps`` columns rather than spinning
+    unbounded (first token always completes).  ``clock`` is injectable
+    for tests.  The selection server's drain path follows the same
+    pattern (``repro.serve``).
+    """
     key = key if key is not None else jax.random.PRNGKey(0)
+    t0 = clock()
     prefill = jax.jit(make_prefill(model))
     decode = jax.jit(make_decode_step(model))
     logits, cache = prefill(params, batch)
@@ -44,9 +57,11 @@ def generate(model, params, batch, n_steps: int, key=None, *,
     tok = sample_token(logits, key, temperature=temperature, top_k=top_k)
     out.append(tok)
     for i in range(n_steps - 1):
+        if deadline_s is not None and clock() - t0 >= deadline_s:
+            break
         key, sub = jax.random.split(key)
         logits, cache = decode(params, cache, tok[:, None],
                                pos0 + i)
         tok = sample_token(logits, sub, temperature=temperature, top_k=top_k)
         out.append(tok)
-    return jnp.stack(out, axis=1)   # (B, n_steps)
+    return jnp.stack(out, axis=1)   # (B, ≤ n_steps)

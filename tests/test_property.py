@@ -253,3 +253,85 @@ def test_simulate_arrivals_deterministic_and_floored(seed, n, drop):
     b = simulate_arrivals(seed, 3, n, drop, min_arrived=2)
     np.testing.assert_array_equal(a, b)
     assert int(a.sum()) >= 2
+
+
+# ---------------------------------------------------------------------------
+# serving-layer admission bucketing (repro.serve)
+# ---------------------------------------------------------------------------
+
+@given(b=st.integers(1, 4096), cap=st.sampled_from([1, 2, 4, 8, 16, 32]))
+@settings(**SETTINGS)
+def test_padded_batch_is_a_compiled_shape(b, cap):
+    """Every admitted batch pads to one of the service's declared shapes
+    {1, 2, 4, …, max_batch} — the compiled-shape universe is finite."""
+    from repro.serve import padded_batch
+
+    p = padded_batch(b, cap)
+    assert p in {2 ** i for i in range(cap.bit_length())}
+    assert p <= cap
+    assert p >= min(b, cap)             # no real request loses its lane
+
+
+@given(seed=st.integers(0, 100),
+       n_reqs=st.integers(1, 40),
+       max_queue=st.integers(1, 8),
+       max_pending=st.integers(1, 16))
+@settings(**SETTINGS)
+def test_admission_accounting_and_retry_hints(seed, n_reqs, max_queue,
+                                              max_pending):
+    """Admitted requests map to exactly one bucket each and drain
+    completely; every rejection carries a non-zero retry-after hint."""
+    from repro.serve import (AdmissionController, AdmissionPolicy,
+                             SelectRequest, bucket_key)
+
+    rng = np.random.default_rng(seed)
+    ac = AdmissionController(AdmissionPolicy(
+        max_batch=4, max_queue=max_queue, max_pending=max_pending))
+    admitted, rejected = [], []
+    for i in range(n_reqs):
+        req = SelectRequest(dataset=f"fp{rng.integers(2)}",
+                            k=int(rng.integers(1, 3)), key=i)
+        ok, retry = ac.try_admit(i, bucket_key(req))
+        if ok:
+            assert retry == 0.0
+            admitted.append((i, bucket_key(req)))
+        else:
+            assert retry > 0.0
+            rejected.append(i)
+    assert len(admitted) + len(rejected) == n_reqs
+    assert ac.pending() == len(admitted) <= max_pending
+
+    drained = {}
+    while (nb := ac.next_batch()) is not None:
+        key, batch = nb
+        assert 1 <= len(batch) <= 4
+        for item in batch:
+            assert item not in drained      # exactly one bucket each
+            drained[item] = key
+    assert ac.pending() == 0
+    for i, key in admitted:
+        assert drained[i] == key            # FIFO preserved bucket identity
+
+
+@given(seed=st.integers(0, 30), b=st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_padding_never_changes_selected_sets(seed, b):
+    """Pad lanes replicate lane 0 and are discarded: a batch of b
+    requests commits the same per-lane sets as the same requests served
+    with extra pad lanes appended (vmap lanes are independent)."""
+    from repro.serve import build_single_shot, padded_batch
+
+    rng = np.random.default_rng(seed)
+    arrays = {
+        "X": jnp.asarray(rng.normal(size=(16, 12)), jnp.float32),
+        "y": jnp.asarray(rng.normal(size=(16,)), jnp.float32),
+    }
+    factory = lambda a: RegressionObjective(a["X"], a["y"], kmax=4)  # noqa: E731
+    run = build_single_shot(factory, "stochastic_greedy", 3)
+    keys = jax.random.split(jax.random.PRNGKey(seed), b)
+    bare = run(arrays, keys)
+    B = padded_batch(b, 8)
+    padded_keys = jnp.concatenate([keys] + [keys[:1]] * (B - b))
+    padded = run(arrays, padded_keys)
+    np.testing.assert_array_equal(np.asarray(bare.sel_mask),
+                                  np.asarray(padded.sel_mask[:b]))

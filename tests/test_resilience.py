@@ -583,3 +583,154 @@ class TestDistributedResilience:
             assert set(a.files) == set(b.files)
             for f in a.files:
                 np.testing.assert_array_equal(a[f], b[f])
+
+
+class TestFailureInjectorSharing:
+    """Injection-schedule scoping for concurrent requests (the serving
+    layer's chaos mode).  One instance = one global schedule: sharing it
+    across launches lets the first consume a step's failure and shield
+    the rest — per-launch schedules must come from ``fork``."""
+
+    def test_shared_instance_fires_each_step_once_globally(self):
+        inj = FailureInjector(fail_at=(2,))
+        with pytest.raises(RuntimeError):
+            inj.check(2)
+        inj.check(2)              # consumed: second caller is shielded
+
+    def test_fork_gives_independent_schedules(self):
+        parent = FailureInjector(fail_at=(2,))
+        a, b = parent.fork(), parent.fork()
+        with pytest.raises(RuntimeError):
+            a.check(2)
+        with pytest.raises(RuntimeError):
+            b.check(2)            # NOT shielded by a's consumption
+        with pytest.raises(RuntimeError):
+            parent.check(2)       # parent schedule untouched by forks
+        a.check(2)                # each fork still fires only once
+        b.check(2)
+
+    def test_concurrent_checks_fire_exactly_once(self):
+        import threading
+
+        inj = FailureInjector(fail_at=(1,))
+        raised = []
+        barrier = threading.Barrier(8)
+
+        def worker():
+            barrier.wait()
+            try:
+                inj.check(1)
+            except RuntimeError:
+                raised.append(1)
+
+        threads = [threading.Thread(target=worker) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(raised) == 1   # the lock serializes the fired-set
+
+
+class TestHedgedResume:
+    """runtime/hedging.py — resume-not-restart retries for launches."""
+
+    def _policy(self, attempts=3):
+        from repro.runtime.hedging import HedgePolicy
+
+        return HedgePolicy(max_attempts=attempts, backoff_s=0.0,
+                           sleep_fn=lambda s: None)
+
+    def test_resumes_from_newest_boundary(self):
+        from repro.runtime.hedging import run_resumable
+
+        inj = FailureInjector(fail_at=(3,))
+        executed = []
+
+        def step(state, s):
+            inj.check(s)
+            executed.append(s)
+            return state + s
+
+        out, attempts = run_resumable(5, 0, step, policy=self._policy())
+        assert out == sum(range(5)) and attempts == 2
+        # Steps 0-2 ran once, snapshot at boundary 3 → only 3, 4 replay.
+        assert executed == [0, 1, 2, 3, 4]
+
+    def test_failure_before_first_boundary_cold_restarts(self):
+        from repro.runtime.hedging import run_resumable
+
+        inj = FailureInjector(fail_at=(0,))
+        executed = []
+
+        def step(state, s):
+            inj.check(s)
+            executed.append(s)
+            return state + s
+
+        out, attempts = run_resumable(3, 0, step, policy=self._policy())
+        assert out == sum(range(3)) and attempts == 2
+        assert executed == [0, 1, 2]
+
+    def test_exhaustion_raises_hedge_exhausted(self):
+        from repro.runtime.hedging import HedgeExhausted, run_resumable
+
+        def step(state, s):
+            raise RuntimeError("dead")
+
+        with pytest.raises(HedgeExhausted, match="2 attempts"):
+            run_resumable(3, 0, step, policy=self._policy(attempts=2))
+
+    def test_fatal_exceptions_propagate_unretried(self):
+        from repro.core.selection_loop import SelectionDeadlineExceeded
+        from repro.runtime.hedging import run_resumable
+
+        calls = []
+
+        def step(state, s):
+            calls.append(s)
+            raise SelectionDeadlineExceeded(s)
+
+        with pytest.raises(SelectionDeadlineExceeded):
+            run_resumable(3, 0, step, policy=self._policy(),
+                          fatal=(SelectionDeadlineExceeded,))
+        assert calls == [0]       # no retry burned on a hopeless failure
+
+    def test_run_with_restart_fatal_passthrough(self):
+        class Hopeless(Exception):
+            pass
+
+        def step(state, s):
+            raise Hopeless()
+
+        with pytest.raises(Hopeless):
+            run_with_restart(
+                total_steps=3, make_state=lambda: (0, 0),
+                restore=lambda: None, step_fn=step, max_failures=5,
+                fatal=(Hopeless,))
+
+
+class TestSelectionDeadline:
+    def test_drive_checkpointed_rounds_enforces_deadline(self, rng):
+        from repro.core.selection_loop import (
+            Deadline,
+            SelectionDeadlineExceeded,
+        )
+
+        X = normalize_columns(
+            jnp.asarray(rng.normal(size=(40, 24)), jnp.float32))
+        y = jnp.asarray(rng.normal(size=(40,)), jnp.float32)
+        obj = RegressionObjective(X, y, kmax=6)
+        cfg = DashConfig(k=6, r=4, n_samples=4)
+        t = [0.0]
+
+        def clock():
+            t[0] += 1.0
+            return t[0]
+
+        with pytest.raises(SelectionDeadlineExceeded) as ei:
+            dash_checkpointed(
+                obj, cfg, jax.random.PRNGKey(0), 0.8,
+                resilience=ResilienceConfig(),
+                deadline=Deadline(2.5, clock=clock))
+        assert ei.value.rounds_done >= 1
+        assert ei.value.carry is not None
