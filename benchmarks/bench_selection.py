@@ -591,11 +591,13 @@ def _baseline_datasets(scale: int):
 
 #: Baseline-suite roster: every registry algorithm with per-algorithm
 #: select() opts (dash runs a small guess lattice; lazy_greedy is the
-#: host-driven variant, single-device only by design).
+#: host-driven variant, single-device only by design; fast runs its
+#: in-graph binary search over the default guess lattice).
 _BASELINE_ALGOS = (
     ("dash", {"n_samples": 4, "n_guesses": 4}),
     ("greedy", {}),
     ("lazy_greedy", {}),
+    ("fast", {}),
     ("stochastic_greedy", {}),
     ("topk", {}),
     ("random", {}),
@@ -614,10 +616,19 @@ def run_baselines(full: bool = False):
                             host mesh, with a value-parity field (the
                             acceptance gate: sharded must agree with its
                             single-device twin),
-      * time-vs-n         — greedy vs stochastic-greedy vs topk
-                            wall-clock as the ground set grows, plus the
+      * time-vs-n         — greedy / stochastic-greedy / topk / fast
+                            wall-clock as the ground set grows (all
+                            jitted with data as arguments), plus the
+                            host-driven lazy_greedy reference and the
+                            fast-over-lazy speedup row with a
+                            slack-normalized value gate, plus the
                             derived adaptivity accounting from
                             ``algorithm_cost``.
+
+    Row schema: every row carries the cost-model round count
+    (``rounds=``) and, for algorithms whose result traces it (dash,
+    fast), the MEASURED adaptivity of that run (``rounds_measured=``)
+    next to the wall-clock value.
     """
     from repro.core import algorithm_cost, get_algorithm, select
     from repro.core.distributed import pad_ground_set
@@ -637,14 +648,16 @@ def run_baselines(full: bool = False):
                 use = dict(dash_opts, **aopts) if algo == "dash" else dict(aopts)
                 t, res = wall_time(
                     lambda a=algo, u=use: jax.block_until_ready(
-                        select(a, obj, k, key=key, **u).value),
+                        select(a, obj, k, key=key, **u)),
                     warmup=1, iters=1)
-                single_vals[algo] = float(res)
+                single_vals[algo] = float(res.value)
                 cost = algorithm_cost(algo, obj.n, k)
+                meas = (f";rounds_measured={int(res.raw.rounds)}"
+                        if hasattr(res.raw, "rounds") else "")
                 emit(f"baselines/{name}/k={k}/{algo}", t * 1e6,
-                     f"value={float(res):.4f};"
+                     f"value={float(res.value):.4f};"
                      f"rounds={cost['adaptive_rounds']};"
-                     f"queries={cost['oracle_calls']}")
+                     f"queries={cost['oracle_calls']}" + meas)
 
             # ---- single-vs-sharded: the distributed twins ------------
             if mesh is not None:
@@ -660,14 +673,17 @@ def run_baselines(full: bool = False):
                                    n_samples=4)
                     t, res = wall_time(
                         lambda a=algo, u=use: jax.block_until_ready(
-                            select(a, obj_p, k, key=key, mesh=mesh, **u).value),
+                            select(a, obj_p, k, key=key, mesh=mesh, **u)),
                         warmup=1, iters=1)
                     ref = single_vals[algo]
+                    meas = (f";rounds_measured={int(res.raw.rounds)}"
+                            if hasattr(res.raw, "rounds") else "")
                     emit(f"baselines/{name}/k={k}/{algo}_sharded", t * 1e6,
-                         f"value={float(res):.4f};"
+                         f"value={float(res.value):.4f};"
                          f"single_value={ref:.4f};"
-                         f"parity={float(res) / max(ref, 1e-9):.4f};"
-                         f"mesh={'x'.join(str(s) for s in mesh.devices.shape)}")
+                         f"parity={float(res.value) / max(ref, 1e-9):.4f};"
+                         f"mesh={'x'.join(str(s) for s in mesh.devices.shape)}"
+                         + meas)
 
     # ---- time-vs-n: wall-clock growth of the per-round sweeps --------
     # Jitted whole-selection runners (warmup excludes compile) on the
@@ -677,7 +693,9 @@ def run_baselines(full: bool = False):
     # per-round noise/top-k overhead outweighs the saved GEMM and exact
     # greedy wins — query counts are recorded either way, so the
     # artifact carries the honest crossover).
+    from repro.core import fast as fast_fn
     from repro.core import greedy as greedy_fn
+    from repro.core import lazy_greedy as lazy_fn
     from repro.core import stochastic_greedy as stochastic_fn
     from repro.core import top_k_select as topk_fn
 
@@ -698,28 +716,57 @@ def run_baselines(full: bool = False):
 
         runners = {
             "greedy": (
-                jax.jit(lambda Xa, ya: greedy_fn(make(Xa, ya), k).value),
+                jax.jit(lambda Xa, ya: greedy_fn(make(Xa, ya), k)),
                 (X, yb)),
             "stochastic_greedy": (
                 jax.jit(lambda Xa, ya, kk:
-                        stochastic_fn(make(Xa, ya), k, kk).value),
+                        stochastic_fn(make(Xa, ya), k, kk)),
                 (X, yb, key)),
             "topk": (
-                jax.jit(lambda Xa, ya: topk_fn(make(Xa, ya), k).value),
+                jax.jit(lambda Xa, ya: topk_fn(make(Xa, ya), k)),
                 (X, yb)),
+            "fast": (
+                jax.jit(lambda Xa, ya, kk: fast_fn(make(Xa, ya), k, kk)),
+                (X, yb, key)),
         }
-        times = {}
+        times, vals = {}, {}
         for algo, (fn, fargs) in runners.items():
             t, res = wall_time(
                 lambda f=fn, a=fargs: jax.block_until_ready(f(*a)),
                 warmup=1, iters=3)
             times[algo] = t
+            vals[algo] = float(res.value)
             cost = algorithm_cost(algo, n, k)
+            meas = (f";rounds_measured={int(res.rounds)}"
+                    if hasattr(res, "rounds") else "")
             emit(f"baselines/time_vs_n/n={n}/{algo}", t * 1e6,
-                 f"value={float(res):.4f};queries={cost['oracle_calls']}")
+                 f"value={vals[algo]:.4f};queries={cost['oracle_calls']}"
+                 + meas)
+        # lazy_greedy drives its priority queue from the host, so it is
+        # timed as-is (compile amortized by the warmup run) — it is the
+        # wall-clock reference FAST has to beat at equal value.
+        obj_t = make(X, yb)
+        t, res = wall_time(
+            lambda: jax.block_until_ready(lazy_fn(obj_t, k)),
+            warmup=1, iters=3)
+        times["lazy_greedy"] = t
+        vals["lazy_greedy"] = float(res.value)
+        cost = algorithm_cost("lazy_greedy", n, k)
+        emit(f"baselines/time_vs_n/n={n}/lazy_greedy", t * 1e6,
+             f"value={vals['lazy_greedy']:.4f};"
+             f"queries={cost['oracle_calls']}")
         emit(f"baselines/time_vs_n/n={n}/speedup", 0.0,
              f"greedy_over_stochastic="
              f"{times['greedy'] / max(times['stochastic_greedy'], 1e-12):.2f}x")
+        # The acceptance row: fast must beat lazy_greedy's wall-clock at
+        # equal slack-normalized value (value_ok = fast within 5% of the
+        # lazy-greedy objective or better).
+        emit(f"baselines/time_vs_n/n={n}/fast_over_lazy", 0.0,
+             f"speedup="
+             f"{times['lazy_greedy'] / max(times['fast'], 1e-12):.2f}x;"
+             f"value_fast={vals['fast']:.4f};"
+             f"value_lazy={vals['lazy_greedy']:.4f};"
+             f"value_ok={int(vals['fast'] >= 0.95 * vals['lazy_greedy'])}")
 
 
 #: --suite train roster: selection policies A/B'd at equal step count.

@@ -5,9 +5,9 @@ Public API:
                 AOptimalityObjective, CoresetObjective,
                 DiversityObjective, DiversifiedObjective
     algorithms: select (registry entry point), dash, dash_auto,
-                DashConfig, greedy, lazy_greedy, stochastic_greedy,
-                adaptive_sequencing, top_k_select, random_select,
-                lasso_path_select
+                DashConfig, fast, greedy, lazy_greedy,
+                stochastic_greedy, adaptive_sequencing, top_k_select,
+                random_select, lasso_path_select
     analysis:   gamma_regression, gamma_classification, gamma_aopt,
                 alpha_from_gamma
 """
@@ -56,6 +56,7 @@ from repro.core.algorithms import (
 )
 from repro.core.lasso import fista, lasso_path_select
 from repro.core.adaptive_sequencing import adaptive_sequencing
+from repro.core.fast import FastResult, fast, fast_cost
 from repro.core.spectral import (
     alpha_from_gamma,
     gamma_aopt,
@@ -97,6 +98,9 @@ __all__ = [
     "register",
     "select",
     "select_batched",
+    "FastResult",
+    "fast",
+    "fast_cost",
     "fista",
     "lasso_path_select",
     "adaptive_sequencing",

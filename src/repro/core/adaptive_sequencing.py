@@ -5,21 +5,32 @@ more recent parallel optimization techniques such as adaptive sequencing
 [4]" (Balkanski–Rubinstein–Singer, STOC 2019).  This module implements
 that beyond-paper variant: per adaptive round,
 
-  1. draw a uniformly random sequence (a_1, …, a_k) from the alive set,
+  1. draw a uniformly random sequence (a_1, …, a_L) from the alive set,
+     with L = min(k, n) — the sequence never outruns the ground set,
   2. evaluate the gain of every sequence element at its insertion prefix
-     (k incremental states — one scan, a single-element ``set_gain``
-     oracle call per step),
-  3. commit the elements that cleared the threshold α·t/k at their
-     insertion point,
-  4. filter the alive set by the gains at the committed state; when a
-     round commits nothing, geometrically decay the threshold and reset
-     the alive set instead (the BRS outer-loop ``t ← (1−ε)t`` step —
-     without it the scan stalls as soon as one random sequence misses
-     every above-threshold element).
+     — all L prefixes in ONE fused ``filter_gains_batch`` launch
+     (prefixes ride the engine's sample axis; see
+     ``core.fast.sequence_prefix_gains``),
+  3. commit the longest prefix whose *tail* clears the threshold α·t/k
+     (the BRS commit rule: every committed element cleared the bar at
+     its own insertion point),
+  4. filter the alive set by the gains at the committed state — row c of
+     the same fused sweep; when a round commits nothing, geometrically
+     decay the threshold and reset the alive set instead (the BRS
+     outer-loop ``t ← (1−ε)t`` step — without it the scan stalls as soon
+     as one random sequence misses every above-threshold element).
 
 Compared to DASH it trades the Monte-Carlo expectation estimates for a
 single sequence scan (lower variance, the same O(log n) round count under
-differential submodularity).
+differential submodularity).  ``core.fast`` builds the full FAST
+algorithm (binary-searched OPT ladder) on the same sequence-scan
+substrate; this entry point keeps the residual threshold
+``(1−ε)(OPT − f(S))/k`` of the original BRS presentation and is
+registered as ``"adaptive_sequencing"`` (single-runtime only) in
+``core.algorithms``.
+
+The whole body is traced (no host floats), so it jits, vmaps under
+``select_batched``, and runs with a ``with_precision`` view.
 """
 
 from __future__ import annotations
@@ -30,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.estimators import sample_set_from_mask
+from repro.core.fast import _resolve_engine, sequence_prefix_gains
 
 
 class AdSeqResult(NamedTuple):
@@ -42,41 +54,43 @@ class AdSeqResult(NamedTuple):
 
 def adaptive_sequencing(
     obj, k: int, key, *, eps: float = 0.2, alpha: float = 0.5,
-    rounds: int = 0, opt: float | None = None,
+    rounds: int = 0, opt=None, use_filter_engine: bool | None = None,
 ):
     n = obj.n
+    k = int(k)
+    # Clamp: the alive set can never hold more than n elements, and at
+    # the endgame holds fewer than k — a longer sequence is dead slots.
+    L = min(k, n)
     r = rounds or max(1, min(k, int(jnp.ceil(jnp.log2(max(n, 2))))))
+    engine = _resolve_engine(obj, use_filter_engine)
+    ar = jnp.arange(L)
 
     if opt is None:
-        opt = float(jnp.max(obj.gains(obj.init()))) * k  # modular upper bound
+        # Modular upper bound — traced, so the runner stays jittable.
+        opt = jnp.max(obj.gains(obj.init())) * k
+    opt = jnp.asarray(opt, jnp.float32)
 
     def round_body(carry):
         state, alive, key, count, scale, rho = carry
         key, k_seq = jax.random.split(key)
         t = jnp.maximum((1.0 - eps) * (opt - obj.value(state)), 0.0)
         thr = scale * alpha * t / k
-        seq_idx, seq_valid = sample_set_from_mask(k_seq, alive, k)
-        allowed = jnp.maximum(k - count, 0)
-        seq_valid = seq_valid & (jnp.arange(k) < allowed)
+        seq_idx, seq_valid = sample_set_from_mask(k_seq, alive, L)
+        allowed = jnp.clip(k - count, 0, L)
+        slot_ok = seq_valid & (ar < allowed)
 
-        # Scan the sequence: at each prefix record whether the inserted
-        # element cleared the threshold at insertion time.
-        def scan_body(st, j):
-            # single-element set_gain: O(d·k) vs the full (n,) gains sweep
-            g = obj.set_gain(st, seq_idx[j][None], jnp.ones((1,), bool))
-            ok = (g >= thr) & seq_valid[j]
-            st = obj.add_set(
-                st,
-                seq_idx[j][None],
-                ok[None],
-            )
-            return st, ok
-
-        state_new, ok_flags = jax.lax.scan(scan_body, state, jnp.arange(k))
-        added = jnp.sum(ok_flags.astype(jnp.int32))
-        # Filter the survivors by the committed state's gains; an empty
-        # round means the threshold outran the pool — decay it and reset.
-        g_new = obj.gains(state_new)
+        # All L insertion prefixes in one fused sweep; marg[j] is the
+        # gain of a_{j+1} at its insertion point.
+        G, marg = sequence_prefix_gains(obj, state, seq_idx, slot_ok,
+                                        engine=engine)
+        clear = slot_ok & (marg >= thr)
+        c_len = jnp.max(jnp.where(clear, ar + 1, 0)).astype(jnp.int32)
+        state_new = obj.add_set(state, seq_idx, ar < c_len)
+        added = c_len
+        # Filter the survivors by the committed state's gains (row c of
+        # the same launch); an empty round means the threshold outran
+        # the pool — decay it and reset.
+        g_new = jnp.take(G, c_len, axis=0)
         alive = jnp.where(added > 0,
                           alive & ~state_new.sel_mask & (g_new >= thr),
                           ~state_new.sel_mask)
@@ -84,8 +98,8 @@ def adaptive_sequencing(
         alive = jnp.where(jnp.sum(alive) > 0, alive, ~state_new.sel_mask)
         return state_new, alive, key, count + added, scale, rho + 1
 
-    # while (not fori): once count hits k, every remaining round's k-step
-    # scan would be a dead pass of sequential oracle calls.
+    # while (not fori): once count hits k, every remaining round's
+    # prefix sweep would be a dead pass of oracle calls.
     state0 = obj.init()
     state, _, key, count, _, rho = jax.lax.while_loop(
         lambda c: (c[5] < r) & (c[3] < k),

@@ -32,7 +32,9 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.adaptive_sequencing import adaptive_sequencing
 from repro.core.baselines import random_select, top_k_select
+from repro.core.fast import fast, fast_cost
 from repro.core.greedy import (
     greedy,
     greedy_parallel_cost,
@@ -306,6 +308,37 @@ register(AlgorithmSpec(
     cost=lambda n, k: {"oracle_calls": n, "adaptive_rounds": 1},
     summary="largest k singleton values in one sweep; γ²-approximation "
             "for feature selection (App. J)",
+))
+
+def _adseq_cost(n: int, k: int) -> dict:
+    # Same leading order as DASH: the BRS round cap is min(k, ⌈log₂ n⌉)
+    # and each round's fused prefix sweep touches ≤ n candidates.
+    import math
+
+    r = max(1, min(k, int(math.ceil(math.log2(max(n, 2))))))
+    return {"oracle_calls": n * r, "adaptive_rounds": r}
+
+
+register(AlgorithmSpec(
+    name="fast",
+    single=lambda obj, k, key, **o: fast(obj, k, key, **o),
+    distributed=lambda obj, k, key, mesh, **o: _dist().fast_distributed(
+        obj, k, key, mesh, **o),
+    needs_key=True,
+    cost=fast_cost,
+    summary="Breuer et al. FAST: adaptive sequencing + binary-search "
+            "threshold ladder, prefix sweeps fused through the filter "
+            "engine (prefixes ≈ samples)",
+))
+
+register(AlgorithmSpec(
+    name="adaptive_sequencing",
+    single=lambda obj, k, key, **o: adaptive_sequencing(obj, k, key, **o),
+    distributed=None,
+    needs_key=True,
+    cost=_adseq_cost,
+    summary="BRS adaptive sequencing with the residual (OPT − f(S)) "
+            "threshold — the single-runtime substrate fast builds on",
 ))
 
 register(AlgorithmSpec(

@@ -1298,6 +1298,197 @@ def random_distributed(obj, k: int, key, mesh, *,
     return DistSelectResult(sel, count, value, jnp.zeros((0,), jnp.float32))
 
 
+class FastDistResult(NamedTuple):
+    """Result of :func:`fast_distributed`.  ``values`` is the per-round
+    f(S) trace of the winning OPT probe (0-padded to the static round
+    cap); ``opt`` is the OPT guess the in-graph binary search settled
+    on."""
+    sel_mask: jnp.ndarray      # (n,) bool — global (gathered)
+    sel_count: jnp.ndarray     # () int32
+    value: jnp.ndarray         # () f32
+    rounds: jnp.ndarray        # () int32 — adaptive rounds consumed
+    values: jnp.ndarray        # (r_max,) per-round trace
+    opt: jnp.ndarray           # () f32 — binary-searched OPT guess
+
+
+def _fast_dist_runner(obj, k: int, mesh, n_local: int, n: int,
+                      model_axis: str, eps: float, r_max: int,
+                      n_guesses: int, engine: bool):
+    """Jitted sharded FAST executor (weak-cached per objective).
+
+    Mirrors ``core.fast._make_fast_core`` shard-by-shard: the sequence
+    draw is the global top-L of a REPLICATED Gumbel vector (the PR-5
+    noise layout), so for the same key the drawn sequence — and hence
+    the committed set — is bitwise the single-device one.  Collectives
+    per round: one all_gather (global sequence draw), one psum (column
+    fetch of the ≤ L sequence candidates), and one psum for the prefix
+    decision (each shard contributes the insertion-point gains of the
+    sequence elements it owns); the L + 1 prefix sweeps between them are
+    ONE shard-local fused ``dist_filter_gains_batch`` launch — prefixes
+    ride the engine's sample axis, exactly like the single runtime.
+    """
+    def build():
+        from repro.core.fast import (FastResult, binary_search_opt,
+                                     prefix_masks, q_cmp)
+
+        L = min(k, n)
+        ar = jnp.arange(L)
+
+        def run(X_local, key_rep, guesses_rep):
+            rank = jax.lax.axis_index(model_axis)
+
+            def run_core(kk, opt):
+                opt = jnp.asarray(opt, jnp.float32)
+                ds0 = obj.dist_init(X_local)
+                g0 = obj.dist_gains(ds0, X_local)
+                # Argmax seed — greedy's bitwise global-argmax commit
+                # (per-shard max → all_gather → replicated argmax, ties
+                # to the lowest shard = lowest global index), then the
+                # ladder opens one rung below the global top singleton
+                # gain; the guess only sets the ε·opt/k floor.  See
+                # _make_fast_core for why the seed + (1−ε)·max start
+                # (rather than a ladder opening AT the max) is what
+                # keeps parity off the tied-singleton knife-edge.
+                qg0 = q_cmp(g0)
+                allmax = jax.lax.all_gather(jnp.max(qg0), model_axis)
+                wshard = jnp.argmax(allmax)
+                win = rank == wshard
+                larg = jnp.argmax(qg0)
+                col = jnp.where(win, X_local[:, larg], 0.0)
+                C0 = jax.lax.psum(col, model_axis)[:, None]
+                ds0 = obj.dist_add_set(
+                    ds0, C0, jnp.ones((1,), bool), X_local)
+                sel0 = jnp.zeros((n_local,), bool).at[
+                    jnp.where(win, larg, n_local)
+                ].set(True, mode="drop")
+                t0 = (1.0 - eps) * jax.lax.pmax(jnp.max(g0), model_axis)
+                t_min = eps * opt / k
+                alive0 = (q_cmp(obj.dist_gains(ds0, X_local))
+                          >= q_cmp(t0)) & ~sel0
+
+                def cond(c):
+                    _, _, _, t, count, _, rho, _ = c
+                    return (rho < r_max) & (count < k) & (t >= t_min)
+
+                def body(c):
+                    ds, sel, alive, t, count, kk, rho, values = c
+                    kk, k_seq = jax.random.split(kk)
+                    # Replicated (n,) Gumbel draw, local slice, global
+                    # top-L: bitwise the single-device
+                    # ``sample_set_from_mask`` sequence.
+                    noise_l = _local_noise_slice(
+                        gumbel_noise(k_seq, n), rank, n_local)
+                    scores_l = jnp.where(alive, noise_l, -jnp.inf)
+                    idx_l, owned, validg = _global_topk_commit(
+                        scores_l, L, n_local, rank, model_axis)
+                    allowed = jnp.clip(k - count, 0, L)
+                    slot_ok = validg & (ar < allowed)
+                    C = _dist_gather_columns(
+                        X_local, idx_l, owned & slot_ok, model_axis)
+                    masks = prefix_masks(L) & slot_ok[None, :]
+                    if engine:
+                        Cs = jnp.broadcast_to(C, (L + 1,) + C.shape)
+                        G = obj.dist_filter_gains_batch(ds, Cs, masks,
+                                                        X_local)
+                    else:
+                        G = jax.vmap(
+                            lambda m: obj.dist_gains(
+                                obj.dist_add_set(ds, C, m, X_local),
+                                X_local)
+                        )(masks)
+                    G = jnp.where(sel[None, :], 0.0, G)
+                    # Prefix decision — ONE psum: each shard owns the
+                    # insertion-point gains of its sequence elements.
+                    marg = jax.lax.psum(
+                        jnp.where(owned, G[ar, idx_l], 0.0), model_axis)
+                    # Leading run of clears — every committed element
+                    # individually certified ≥ t at insertion.
+                    clear = slot_ok & (q_cmp(marg) >= q_cmp(t))
+                    c_len = jnp.sum(jnp.cumprod(
+                        clear.astype(jnp.int32))).astype(jnp.int32)
+                    commit = ar < c_len
+                    ds = obj.dist_add_set(ds, C, commit, X_local)
+                    sel = sel.at[
+                        jnp.where(owned & commit, idx_l, n_local)
+                    ].set(True, mode="drop")
+                    count = count + c_len
+                    t = jnp.where(c_len > 0, t, (1.0 - eps) * t)
+                    g_c = jnp.take(G, c_len, axis=0)
+                    alive = (q_cmp(g_c) >= q_cmp(t)) & ~sel
+                    values = values.at[rho].set(obj.dist_value(ds))
+                    return ds, sel, alive, t, count, kk, rho + 1, values
+
+                ds, sel, _, _, count, _, rho, values = jax.lax.while_loop(
+                    cond, body,
+                    (ds0, sel0, alive0, t0,
+                     jnp.ones((), jnp.int32), kk,
+                     jnp.zeros((), jnp.int32),
+                     jnp.zeros((r_max,), jnp.float32)),
+                )
+                return FastResult(
+                    sel_mask=sel, sel_count=count,
+                    value=obj.dist_value(ds), rounds=rho, values=values,
+                    opt=opt,
+                )
+
+            best = binary_search_opt(run_core, key_rep, guesses_rep, eps)
+            return (best.sel_mask, best.sel_count, best.value,
+                    best.rounds, best.values, best.opt)
+
+        in_specs = (P(None, model_axis), P(), P())
+        out_specs = (P(model_axis), P(), P(), P(), P(), P())
+        return jax.jit(_shard_mapped(run, mesh, in_specs, out_specs))
+
+    return cached_runner(
+        obj, ("fast_dist", k, mesh, n_local, model_axis, eps, r_max,
+              n_guesses, engine),
+        build,
+    )
+
+
+def fast_distributed(
+    obj, k: int, key, mesh, *, eps: float = 0.06, opt=None,
+    n_guesses: int = 8, max_rounds: int = 0,
+    model_axis: str = "model", use_filter_engine: bool | None = None,
+    precision: str | None = None,
+) -> FastDistResult:
+    """Breuer et al.'s FAST on a device mesh — the distributed twin of
+    ``core.fast.fast`` on the same ``DistributedObjective`` contract the
+    other baselines use (see docs/fast.md for the collectives table).
+
+    The replicated-Gumbel sequence draw makes the selection bitwise the
+    single-device one for the same ``key`` and a pinned ``opt=`` guess
+    (the parity lane's configuration); with ``opt=None`` the in-graph
+    binary search over the ``n_guesses``-point lattice runs identically
+    on both runtimes, replicated across shards.  ``precision="bf16"``
+    streams the shard-local kernel operands in bf16 with f32
+    accumulation, exactly like the single runtime.
+    """
+    if precision is not None:
+        obj = with_precision(obj, precision)
+    n, n_local = _check_sharding(obj, mesh, model_axis)
+    k = int(k)
+    if k <= 0:
+        raise ValueError(f"k must be a positive integer, got {k!r}")
+    eps = float(eps)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    engine = _resolve_engine_flag(obj, use_filter_engine)
+    from repro.core.fast import fast_round_cap
+
+    r_max = int(max_rounds) or fast_round_cap(k, eps)
+    if opt is not None:
+        guesses = jnp.asarray(opt, jnp.float32).reshape(1)
+    else:
+        from repro.core.dash import opt_guess_lattice
+
+        guesses = opt_guess_lattice(obj, eps, n_guesses, k)
+    run = _fast_dist_runner(obj, k, mesh, n_local, n, model_axis, eps,
+                            r_max, int(guesses.shape[0]), engine)
+    sel, count, value, rounds, values, opt_used = run(obj.X, key, guesses)
+    return FastDistResult(sel, count, value, rounds, values, opt_used)
+
+
 def pad_ground_set(X, multiple: int):
     """Pad candidate columns with zeros to a multiple (zero columns can
     never be selected: the runner starts them outside the alive set, so

@@ -53,13 +53,13 @@ class TestRegistry:
     def test_roster(self):
         algos = available_algorithms()
         for name in ("dash", "greedy", "lazy_greedy", "stochastic_greedy",
-                     "topk", "random"):
+                     "topk", "random", "fast", "adaptive_sequencing"):
             assert name in algos
-        # every §5 competitor except the host-driven lazy greedy has a
-        # distributed twin
+        # every §5 competitor except the host-driven lazy greedy (and
+        # the single-runtime BRS substrate) has a distributed twin
         dist = available_algorithms(distributed=True)
         assert set(dist) == {"dash", "greedy", "stochastic_greedy", "topk",
-                             "random"}
+                             "random", "fast"}
 
     def test_unknown_algorithm(self, reg):
         obj, k = reg
@@ -121,6 +121,14 @@ class TestRegistry:
         assert algorithm_cost("random", 100, 10)["oracle_calls"] == 1
         d = algorithm_cost("dash", 100, 10)
         assert d["adaptive_rounds"] <= 10
+        f = algorithm_cost("fast", 100, 10)
+        # n-independent round count (ladder depth × probes): far fewer
+        # than sequential greedy's n·k = 1000 oracle rounds, and a
+        # positive oracle count
+        assert 0 < f["adaptive_rounds"] < 10 * 100
+        assert f["oracle_calls"] > 0
+        a = algorithm_cost("adaptive_sequencing", 100, 10)
+        assert a["adaptive_rounds"] <= 10
 
     def test_registry_rejects_duplicates(self):
         from repro.core import AlgorithmSpec, register
@@ -276,6 +284,102 @@ class TestCapacityEdges:
         assert bool(res.sel_mask[int(jnp.argmax(g))])
 
 
+class TestFast:
+    """FAST (core/fast.py): registry dispatch, determinism, the
+    threshold machinery's capacity edges, and the clamped-sequence
+    endgame of the rehabilitated adaptive_sequencing substrate."""
+
+    def test_dispatch_matches_direct(self, reg):
+        from repro.core import fast
+
+        obj, k = reg
+        r = select("fast", obj, k, key=KEY)
+        d = fast(obj, k, KEY)
+        np.testing.assert_array_equal(np.asarray(r.sel_mask),
+                                      np.asarray(d.sel_mask))
+        assert float(r.value) == float(d.value)
+        assert int(r.raw.rounds) > 0
+
+    def test_deterministic_per_key(self, reg):
+        obj, k = reg
+        r1 = select("fast", obj, k, key=KEY)
+        r2 = select("fast", obj, k, key=KEY)
+        np.testing.assert_array_equal(np.asarray(r1.sel_mask),
+                                      np.asarray(r2.sel_mask))
+        assert float(r1.value) == float(r2.value)
+
+    def test_respects_cardinality(self, reg):
+        obj, k = reg
+        r = select("fast", obj, k, key=KEY)
+        assert int(r.sel_count) == int(jnp.sum(r.sel_mask)) <= k
+
+    def test_quality_near_lazy_greedy(self, reg):
+        """The binary-searched ladder must land in lazy greedy's
+        neighborhood (the @slow harness pins the seed-mean claim)."""
+        obj, k = reg
+        f = float(select("fast", obj, k, key=KEY).value)
+        l = float(lazy_greedy(obj, k).value)
+        assert f >= 0.8 * l, (f, l)
+
+    def test_opt_pinned_single_probe(self, reg):
+        """opt= pins one guess (no binary search) — the configuration
+        the distributed parity lane uses."""
+        obj, k = reg
+        g = float(greedy(obj, k).value)
+        r = select("fast", obj, k, key=KEY, opt=g * 1.05)
+        assert int(r.sel_count) <= k
+        assert float(r.raw.opt) == pytest.approx(g * 1.05, rel=1e-6)
+
+    def test_k_exceeds_n(self):
+        """k > n clamps the sequence length; the ladder bottoms out
+        without crashing and never over-commits."""
+        obj, _ = make_regression(seed=2, d=16, n=6, k=4)
+        res = select("fast", obj, obj.n + 5, key=KEY)
+        assert int(res.sel_count) == int(jnp.sum(res.sel_mask)) <= obj.n
+
+    def test_values_trace_monotone(self, reg):
+        """Per-round f(S) is non-decreasing over the consumed rounds."""
+        obj, k = reg
+        r = select("fast", obj, k, key=KEY)
+        v = np.asarray(r.values)[: int(r.raw.rounds)]
+        assert v.size > 0
+        assert np.all(np.diff(v) >= -1e-6), v
+
+    def test_rejects_bad_k(self, reg):
+        obj, _ = reg
+        with pytest.raises(ValueError, match="positive"):
+            select("fast", obj, 0, key=KEY)
+
+
+class TestAdaptiveSequencingEndgame:
+    """Regression tests for the small-alive-set endgame: the sequence
+    is clamped to min(k, n), so k > n (or a nearly-exhausted alive set)
+    no longer scans dead full-length sequences."""
+
+    def test_k_exceeds_n(self):
+        from repro.core import adaptive_sequencing
+
+        obj, _ = make_regression(seed=3, d=16, n=5, k=4)
+        res = adaptive_sequencing(obj, obj.n + 3, KEY)
+        assert int(res.sel_count) == int(jnp.sum(res.sel_mask)) <= obj.n
+
+    def test_small_alive_set_terminates(self):
+        """n = 2 ≪ k: both rounds' sequences are length-2; the scan must
+        terminate with at most n commits."""
+        from repro.core import adaptive_sequencing
+
+        obj, _ = make_regression(seed=4, d=12, n=2, k=2)
+        res = adaptive_sequencing(obj, 6, KEY)
+        assert int(res.sel_count) <= 2
+        assert int(res.rounds) >= 1
+
+    def test_registry_dispatch(self, reg):
+        obj, k = reg
+        r = select("adaptive_sequencing", obj, k, key=KEY)
+        assert int(r.sel_count) == int(jnp.sum(r.sel_mask)) <= k
+        assert np.isfinite(float(r.value))
+
+
 @pytest.mark.slow
 class TestQualityOrdering:
     """Seed-sweep harness enforcing the §5 qualitative ordering on
@@ -321,6 +425,11 @@ class TestQualityOrdering:
         assert m["greedy"] >= m["topk"] * (1 - slack), m
         # and the floor really is the floor
         assert m["greedy"] >= m["random"] * (1 - slack), m
+        # FAST must hold lazy greedy's value up to a spread-normalized
+        # slack — the low-adaptivity hybrid's quality claim (its speed
+        # claim lives in the time-vs-n bench rows).
+        assert m["fast"] >= m["lazy_greedy"] - self.MIN_SPREAD_FRAC * spread, m
+        assert m["fast"] >= m["random"] + self.MIN_SPREAD_FRAC * spread, m
 
     def test_regression_ordering(self):
         def make_obj(seed):
@@ -329,7 +438,8 @@ class TestQualityOrdering:
 
         self._assert_ordering(self._means(
             make_obj, 8,
-            ("dash", "greedy", "stochastic_greedy", "topk", "random")))
+            ("dash", "greedy", "lazy_greedy", "fast", "stochastic_greedy",
+             "topk", "random")))
 
     def test_aopt_ordering(self):
         def make_obj(seed):
@@ -341,4 +451,5 @@ class TestQualityOrdering:
 
         self._assert_ordering(self._means(
             make_obj, 8,
-            ("dash", "greedy", "stochastic_greedy", "topk", "random")))
+            ("dash", "greedy", "lazy_greedy", "fast", "stochastic_greedy",
+             "topk", "random")))

@@ -441,6 +441,87 @@ class TestDistributedBaselines:
         assert abs(v16 - v32) <= tol * max(abs(v32), 1e-12)
 
 
+class TestFastDistributed:
+    """FAST's distributed twin (``core.distributed.fast_distributed``)
+    vs the single-device ``core.fast.fast`` — the 8-forced-device
+    parity lane the acceptance criteria pin.
+
+    The twin draws its sequences from the same replicated Gumbel noise
+    and its per-candidate gain math is column-local, so for the same
+    key the committed set is BITWISE the single-device one — with a
+    pinned ``opt=`` (one ladder) and in auto mode (the in-graph binary
+    search runs identically on both runtimes)."""
+
+    def _parity(self, obj, k, mesh, **opts):
+        from repro.core.fast import fast
+
+        key = jax.random.PRNGKey(0)
+        s = fast(obj, k, key, **opts)
+        d = select("fast", obj, k, key=key, mesh=mesh, **opts)
+        np.testing.assert_array_equal(np.asarray(d.sel_mask),
+                                      np.asarray(s.sel_mask))
+        assert int(d.sel_count) == int(s.sel_count)
+        np.testing.assert_allclose(float(d.value), float(s.value),
+                                   rtol=1e-3, atol=1e-6)
+        assert int(d.raw.rounds) == int(s.rounds)
+        return s, d
+
+    def test_regression_parity_pinned_opt(self, reg_setup, mesh):
+        obj, cfg, g = reg_setup
+        self._parity(obj, cfg.k, mesh, opt=g * 1.05)
+
+    def test_regression_parity_auto(self, reg_setup, mesh):
+        """No opt= — the binary search itself must agree across
+        runtimes (replicated feasibility comparisons)."""
+        obj, cfg, _ = reg_setup
+        self._parity(obj, cfg.k, mesh)
+
+    def test_aopt_parity(self, aopt_obj, mesh):
+        self._parity(aopt_obj, 8, mesh)
+
+    def test_logistic_parity(self, logi_obj, mesh):
+        self._parity(logi_obj, 6, mesh)
+
+    def test_deterministic(self, reg_setup, mesh):
+        obj, cfg, _ = reg_setup
+        key = jax.random.PRNGKey(7)
+        r1 = select("fast", obj, cfg.k, key=key, mesh=mesh)
+        r2 = select("fast", obj, cfg.k, key=key, mesh=mesh)
+        assert float(r1.value) == float(r2.value)
+        assert bool(jnp.all(r1.sel_mask == r2.sel_mask))
+
+    def test_engine_matches_per_prefix_fallback(self, reg_setup, mesh):
+        """The fused prefix sweep and the per-prefix vmap path differ
+        only in f32 summation order."""
+        obj, cfg, g = reg_setup
+        key = jax.random.PRNGKey(0)
+        r_en = select("fast", obj, cfg.k, key=key, mesh=mesh,
+                      opt=g * 1.05)
+        r_ps = select("fast", obj, cfg.k, key=key, mesh=mesh,
+                      opt=g * 1.05, use_filter_engine=False)
+        np.testing.assert_allclose(float(r_en.value), float(r_ps.value),
+                                   rtol=1e-3, atol=1e-6)
+
+    def test_capacity_k_exceeds_n(self, aopt_obj, mesh):
+        """k > n clamps the sequence length; the ladder bottoms out
+        without crashing and the mask matches the count."""
+        n = aopt_obj.n
+        res = select("fast", aopt_obj, n + 16,
+                     key=jax.random.PRNGKey(0), mesh=mesh)
+        assert int(res.sel_count) == int(jnp.sum(res.sel_mask)) <= n
+
+    def test_padding_never_selected(self, reg_setup, mesh):
+        """Zero pad columns have zero gain — below every ladder rung —
+        so they are never alive, sampled, or committed."""
+        obj, cfg, _ = reg_setup
+        Xp, n_real = pad_ground_set(obj.X, 80)          # 64 → 80 columns
+        obj_p = RegressionObjective(Xp, obj.y, kmax=cfg.k)
+        res = select("fast", obj_p, cfg.k, key=jax.random.PRNGKey(0),
+                     mesh=mesh)
+        assert not bool(jnp.any(res.sel_mask[n_real:]))
+        assert int(res.sel_count) <= cfg.k
+
+
 def test_capacity_edge_fills_to_k_and_stops(reg_setup, mesh):
     """opt = 0 ⇒ thresholds are 0 ⇒ no filtering: every round commits a
     full block until capacity.  |S| must land exactly on k — the
